@@ -1,0 +1,48 @@
+"""Shared helpers for the benchmark harness."""
+
+from __future__ import annotations
+
+import csv
+import os
+import resource
+import sys
+import time
+
+
+def timeit(fn, *, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds over `repeats` calls."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def peak_rss_mb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+class Reporter:
+    """Collects rows and writes CSV to results/bench/<name>.csv + stdout."""
+
+    def __init__(self, name: str, header):
+        self.name = name
+        self.header = list(header)
+        self.rows = []
+
+    def row(self, *vals):
+        self.rows.append(list(vals))
+        print(f'[{self.name}] ' + ','.join(str(v) for v in vals), flush=True)
+
+    def save(self, out_dir: str = 'results/bench'):
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir, f'{self.name}.csv')
+        with open(path, 'w', newline='') as f:
+            w = csv.writer(f)
+            w.writerow(self.header)
+            w.writerows(self.rows)
+        return path

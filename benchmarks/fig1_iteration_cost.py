@@ -1,0 +1,68 @@
+"""Paper Figure 1: average per-iteration subgradient+loss cost vs m.
+
+TreeRSVM's oracle is O(ms + m log m); PairRSVM's is O(ms + m^2). The paper
+shows the curves separating by orders of magnitude past ~10^4 examples
+(their 512k Reuters point: 7 s vs 2760 s). We reproduce the shape on the
+same two dataset archetypes (dense cadata-like, sparse reuters-like).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import counts as C
+from repro.data import cadata_like, reuters_like
+
+from .common import Reporter, timeit
+
+
+def _oracle_seconds(X, y, method: str, block: int = 2048) -> float:
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=X.shape[1])
+    yj = jnp.asarray(y, jnp.float32)
+
+    def oracle():
+        p = X.matvec(w) if hasattr(X, 'matvec') else X @ w
+        pj = jnp.asarray(p, jnp.float32)
+        if method == 'tree':
+            c, d = C.counts(pj, yj)
+        else:
+            c, d = C.counts_blocked_host(pj, yj, block=block)
+        cd = np.asarray(c, np.float64) - np.asarray(d, np.float64)
+        if hasattr(X, 'rmatvec'):
+            return X.rmatvec(cd)
+        return X.T @ cd
+
+    return timeit(oracle, repeats=3, warmup=1)
+
+
+def main(full: bool = False):
+    rep = Reporter('fig1_iteration_cost',
+                   ['dataset', 'm', 'tree_s', 'pairs_s', 'speedup'])
+    sizes_cad = [1000, 2000, 4000, 8000, 16000]
+    sizes_reu = [1000, 4000, 16000] + ([65536, 262144] if full else [32768])
+
+    cad = cadata_like(m=max(sizes_cad), m_test=10)
+    for m in sizes_cad:
+        t = _oracle_seconds(cad.X[:m], cad.y[:m], 'tree')
+        p = _oracle_seconds(cad.X[:m], cad.y[:m], 'pairs')
+        rep.row('cadata', m, round(t, 4), round(p, 4), round(p / t, 1))
+
+    reu = reuters_like(m=max(sizes_reu), m_test=10, n=49152, nnz_per_row=50)
+    for m in sizes_reu:
+        Xm = reu.X.rows(m)
+        t = _oracle_seconds(Xm, reu.y[:m], 'tree')
+        # O(m^2) pass gets expensive: skip pairs beyond 64k unless --full
+        if m <= (262144 if full else 32768):
+            p = _oracle_seconds(Xm, reu.y[:m], 'pairs')
+        else:
+            p = float('nan')
+        rep.row('reuters', m, round(t, 4), round(p, 4),
+                round(p / t, 1) if np.isfinite(p) else '')
+    return rep
+
+
+if __name__ == '__main__':
+    import sys
+    main(full='--full' in sys.argv).save()

@@ -1,0 +1,45 @@
+"""Paper Figure 4: held-out pairwise ranking error vs m — the sanity check
+that TreeRSVM and PairRSVM reach the same solutions (identical curves) and
+that error decreases with training size."""
+
+from __future__ import annotations
+
+from repro.core import RankSVM
+from repro.data import cadata_like, reuters_like
+
+from .common import Reporter
+
+
+def main(full: bool = False):
+    rep = Reporter('fig4_test_error',
+                   ['dataset', 'm', 'tree_err', 'pairs_err', 'delta'])
+
+    sizes_cad = [1000, 2000, 4000, 8000] + ([16000] if full else [])
+    cad = cadata_like(m=max(sizes_cad), m_test=4000)
+    for m in sizes_cad:
+        errs = {}
+        for method in ('tree', 'pairs'):
+            svm = RankSVM(lam=1e-1, eps=1e-3, method=method, max_iter=500)
+            svm.fit(cad.X[:m], cad.y[:m])
+            errs[method] = svm.ranking_error(cad.X_test, cad.y_test)
+        rep.row('cadata', m, round(errs['tree'], 4), round(errs['pairs'], 4),
+                round(abs(errs['tree'] - errs['pairs']), 5))
+
+    sizes_reu = [1000, 4000] + ([16000] if full else [8000])
+    reu = reuters_like(m=max(sizes_reu), m_test=2000, n=49152,
+                       nnz_per_row=50)
+    for m in sizes_reu:
+        errs = {}
+        for method in ('tree', 'pairs'):
+            svm = RankSVM(lam=1e-5, eps=1e-3, method=method, max_iter=500)
+            svm.fit(reu.X.rows(m), reu.y[:m])
+            errs[method] = svm.ranking_error(reu.X_test, reu.y_test)
+        rep.row('reuters', m, round(errs['tree'], 4),
+                round(errs['pairs'], 4),
+                round(abs(errs['tree'] - errs['pairs']), 5))
+    return rep
+
+
+if __name__ == '__main__':
+    import sys
+    main(full='--full' in sys.argv).save()

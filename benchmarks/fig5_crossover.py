@@ -1,0 +1,46 @@
+"""Beyond-paper: dense-pairwise vs merge-tree crossover.
+
+The framework dispatches between the tiled O(m²) pairwise kernel (dense
+compare+reduce — MXU/VPU-friendly) and the O(m log² m) merge-sort tree
+(gather-bound) per ranking-group size (`kernels/pairwise_rank/ops.counts_auto`).
+
+On this CPU container we measure the same trade with the vectorized dense
+pairwise pass (`counts_blocked_host`, the algorithmic twin of the Pallas
+kernel) vs the tree path, and report the empirical crossover. On TPU the
+dense side's advantage extends further right (the VPU does 8×128 compares
+per cycle; the tree's gathers do not vectorize) — the shipped default
+KERNEL_MAX_M=4096 is the analytic estimate for v5e.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import counts as C
+
+from .common import Reporter, timeit
+
+
+def main(full: bool = False):
+    rep = Reporter('fig5_crossover', ['m', 'dense_s', 'tree_s', 'winner'])
+    sizes = [256, 512, 1024, 2048, 4096, 8192] + ([16384] if full else [])
+    rng = np.random.default_rng(0)
+    crossover = None
+    for m in sizes:
+        p = jnp.asarray(rng.normal(size=m).astype(np.float32))
+        y = jnp.asarray(rng.integers(0, 8, size=m).astype(np.float32))
+        dense = timeit(lambda: C.counts_blocked_host(
+            p, y, block=min(m, 2048))[0].block_until_ready())
+        tree = timeit(lambda: C.counts(p, y)[0].block_until_ready())
+        winner = 'dense' if dense < tree else 'tree'
+        if winner == 'tree' and crossover is None:
+            crossover = m
+        rep.row(m, round(dense, 5), round(tree, 5), winner)
+    rep.row('crossover', crossover or f'>{sizes[-1]}', '', '')
+    return rep
+
+
+if __name__ == '__main__':
+    import sys
+    main(full='--full' in sys.argv).save()

@@ -1,0 +1,41 @@
+"""Renders the EXPERIMENTS.md §Roofline table from the recorded dry-run
+sweep (results/dryrun/*.json). Not a timing benchmark — the dry-run IS the
+profile on this CPU-only container."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import Reporter
+
+
+def load_records(out_dir: str = 'results/dryrun'):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(out_dir, '*.json'))):
+        r = json.load(open(f))
+        if 'error' not in r:
+            recs.append(r)
+    return recs
+
+
+def main(full: bool = False):
+    rep = Reporter('roofline', [
+        'arch', 'shape', 'mesh', 'chips', 'compute_s', 'memory_s',
+        'collective_s', 'bottleneck', 'model_flops', 'useful_frac',
+        'state_gb_per_dev', 'temp_gb_per_dev'])
+    for r in load_records():
+        rl = r['roofline']
+        rep.row(r['arch'], r['shape'], r['mesh'], r['chips'],
+                f"{rl['compute_s']:.4f}", f"{rl['memory_s']:.4f}",
+                f"{rl['collective_s']:.4f}", rl['bottleneck'],
+                f"{r['model_flops']:.3e}",
+                f"{(r.get('useful_flops_frac') or 0):.3f}",
+                round(r['memory']['argument_bytes'] / 1e9, 3),
+                round((r['memory']['temp_bytes'] or 0) / 1e9, 1))
+    return rep
+
+
+if __name__ == '__main__':
+    main().save()

@@ -1,0 +1,52 @@
+"""Benchmark harness entry point: one module per paper figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only=fig1,...]
+
+Default sizes finish on a single CPU core in minutes; --full reproduces the
+paper-scale curves (hours). CSVs land in results/bench/.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from . import (fig1_iteration_cost, fig2_runtimes, fig3_memory,
+               fig4_test_error, fig5_crossover, fig6_rlevels,
+               roofline_table, scaling_loglog)
+
+ALL = {
+    'fig1': fig1_iteration_cost,
+    'fig2': fig2_runtimes,
+    'fig3': fig3_memory,
+    'fig4': fig4_test_error,
+    'fig5': fig5_crossover,
+    'fig6': fig6_rlevels,
+    'scaling': scaling_loglog,
+    'roofline': roofline_table,
+}
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    full = '--full' in argv
+    only = None
+    for a in argv:
+        if a.startswith('--only='):
+            only = a.split('=', 1)[1].split(',')
+    names = only or list(ALL)
+    t0 = time.time()
+    for name in names:
+        mod = ALL[name]
+        print(f'=== {name} ({mod.__name__}) ===', flush=True)
+        t = time.time()
+        rep = mod.main(full=full)
+        path = rep.save()
+        print(f'=== {name} done in {time.time()-t:.1f}s -> {path}',
+              flush=True)
+    print(f'all benchmarks done in {time.time()-t0:.1f}s')
+    return 0
+
+
+if __name__ == '__main__':
+    sys.exit(main())

@@ -1,0 +1,39 @@
+"""Query-grouped learning-to-rank (paper sec. 2, document-retrieval setting).
+
+    PYTHONPATH=src python examples/ltr_queries.py
+
+Preferences hold only within a query. The data has a large per-query bias
+(nuisance): the grouped loss ignores it; an ungrouped fit is poisoned by it.
+The grouped counts still run in ONE linearithmic pass (core.counts_grouped's
+key-offset trick) — complexity O(ms + m log(m)), paper sec. 4.3.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), '..', 'src'))
+
+from repro.core import RankSVM
+from repro.data import grouped_queries
+
+
+def main():
+    X, y, groups = grouped_queries(n_queries=150, per_query=40, seed=0)
+    print(f'{len(set(groups))} queries x {len(y)//len(set(groups))} '
+          f'docs = {len(y)} examples')
+
+    grouped = RankSVM(lam=1e-3, eps=1e-3).fit(X, y, groups=groups)
+    err_g = grouped.ranking_error(X, y, groups=groups)
+    print(f'grouped fit   : within-query ranking error {err_g:.4f} '
+          f'({grouped.report_.iterations} iters, '
+          f'{grouped.report_.seconds:.2f}s)')
+
+    ungrouped = RankSVM(lam=1e-3, eps=1e-3).fit(X, y)
+    err_u = ungrouped.ranking_error(X, y, groups=groups)
+    print(f'ungrouped fit : within-query ranking error {err_u:.4f} '
+          f'(query bias poisons the global objective)')
+    assert err_g < err_u
+
+
+if __name__ == '__main__':
+    main()

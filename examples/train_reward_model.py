@@ -1,0 +1,111 @@
+"""End-to-end driver: train a ~100M-param reward model with the paper's
+linearithmic pairwise hinge as the training objective.
+
+    PYTHONPATH=src python examples/train_reward_model.py \
+        [--preset rm100m|tiny] [--steps N] [--batch B] [--seq S]
+
+This is the framework integration of the paper: a decoder LM backbone ends
+in a scalar score head; the loss is the exact RankSVM pairwise hinge over
+the whole global batch, evaluated and differentiated in O(B log B) through
+core.rank_loss's custom VJP (vs O(B^2) for explicit pairs). Training runs
+through the fault-tolerant runtime loop (checkpoint/restart, JSONL metrics),
+so a preempted run resumes bit-identically:
+
+    ... --steps 300           # kill it anywhere, then re-run: it resumes
+
+The synthetic reward is a fixed random projection of the token histogram —
+learnable, so held-out ranking error drops toward 0 as training proceeds.
+"""
+
+import argparse
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), '..', 'src'))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.rank_loss import ranking_error
+from repro.data import RewardPipeline
+from repro.distributed.sharding import NoSharding
+from repro.models import lm as LM
+from repro.models.params import count_params
+from repro.runtime import LoopConfig, run
+from repro.train.trainer import init_state, make_train_step
+
+PRESETS = {
+    # ~100M params: the assignment's end-to-end training scale.
+    'rm100m': ModelConfig(
+        name='rm100m', family='dense', n_layers=12, d_model=768, n_heads=12,
+        n_kv_heads=4, head_dim=64, d_ff=2048, vocab=8192),
+    # CPU-friendly smoke preset.
+    'tiny': ModelConfig(
+        name='tiny', family='dense', n_layers=4, d_model=256, n_heads=4,
+        n_kv_heads=2, head_dim=64, d_ff=688, vocab=512),
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--preset', default='rm100m', choices=sorted(PRESETS))
+    ap.add_argument('--steps', type=int, default=300)
+    ap.add_argument('--batch', type=int, default=32)
+    ap.add_argument('--seq', type=int, default=128)
+    ap.add_argument('--lr', type=float, default=3e-4)
+    ap.add_argument('--ckpt-dir', default=None)
+    ap.add_argument('--eval-every', type=int, default=25)
+    args = ap.parse_args(argv)
+
+    cfg = PRESETS[args.preset]
+    tcfg = TrainConfig(objective='rank_hinge', learning_rate=args.lr,
+                       warmup_steps=min(50, args.steps // 4),
+                       decay_steps=args.steps, remat='none')
+    nparams = count_params(LM.model_defs(cfg))
+    print(f'model: {cfg.name}  {nparams/1e6:.1f}M params '
+          f'| objective: pairwise rank hinge over batch={args.batch} '
+          f'(N={args.batch*(args.batch-1)//2} pairs/step worst case)')
+
+    shd = NoSharding()
+    step_fn = jax.jit(make_train_step(cfg, tcfg, shd))
+    pipe = RewardPipeline(cfg.vocab, args.seq, args.batch, seed=0)
+    eval_batch = pipe.batch(10 ** 6)          # held-out step index
+
+    def batch_fn(step):
+        b = pipe.batch(step)
+        return {'tokens': b['tokens'], 'utilities': b['utilities']}
+
+    def score(params, tokens):
+        hid = LM.forward_train(params, cfg, {'tokens': jnp.asarray(tokens)},
+                               shd, remat='none')
+        return jnp.einsum('bd,d->b', hid[:, -1, :].astype(jnp.float32),
+                          params['score_head'].astype(jnp.float32))
+
+    score_j = jax.jit(score)
+
+    def on_step(step, state, metrics):
+        if step % args.eval_every == 0 or step == args.steps:
+            s = score_j(state['params'], eval_batch['tokens'])
+            err = float(ranking_error(
+                s, jnp.asarray(eval_batch['utilities'])))
+            print(f'step {step:4d}  loss {float(metrics["loss"]):.4f}  '
+                  f'held-out ranking error {err:.4f}', flush=True)
+
+    ckpt_dir = args.ckpt_dir or f'/tmp/repro_rm_{args.preset}'
+    lc = LoopConfig(total_steps=args.steps, ckpt_dir=ckpt_dir,
+                    ckpt_every=max(args.steps // 6, 10), async_ckpt=True,
+                    log_path=os.path.join(ckpt_dir, 'metrics.jsonl'))
+    os.makedirs(ckpt_dir, exist_ok=True)
+    init_fn = lambda: init_state(cfg, jax.random.PRNGKey(0))
+    state, rep = run(step_fn, init_fn, batch_fn, lc, on_step=on_step)
+    if rep.resumed_from is not None:
+        print(f'(resumed from checkpointed step {rep.resumed_from})')
+    print(f'done: {rep.final_step} steps in {rep.seconds:.1f}s; '
+          f'first loss {rep.losses[0]:.4f} -> last {rep.losses[-1]:.4f}')
+
+
+if __name__ == '__main__':
+    main()

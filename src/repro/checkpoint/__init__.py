@@ -1,0 +1,3 @@
+from . import store  # noqa: F401
+from .async_ckpt import AsyncCheckpointer  # noqa: F401
+from .store import commit, gc, latest_step, restore, save  # noqa: F401

@@ -1,0 +1,15 @@
+"""jamba-1.5-large-398b [hybrid] — Mamba:attn 1:7 interleave, MoE 16e top-2
+on every other layer. [arXiv:2403.19887; hf]"""
+from .base import ModelConfig, MoEConfig
+
+
+def config() -> ModelConfig:
+    # 72 layers: attention at l % 8 == 3 (9 attn layers); MoE on odd layers.
+    return ModelConfig(
+        name='jamba-1.5-large-398b', family='hybrid',
+        n_layers=72, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+        d_ff=24576, vocab=65536, act='swiglu',
+        hybrid_period=8, hybrid_attn_at=3,
+        moe=MoEConfig(num_experts=16, top_k=2, shared_experts=0, every=2,
+                      moe_d_ff=24576),
+        mamba_d_state=16, mamba_conv=4, mamba_expand=2)

@@ -1,0 +1,17 @@
+"""The paper's own workload as an 11th 'architecture': a linear RankSVM over
+a large sharded feature matrix, trained with BMRM + linearithmic counts.
+Shapes follow the paper's Reuters experiment, scaled to pod size."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class RankSVMConfig:
+    name: str = 'ranksvm-linear'
+    family: str = 'ranksvm'
+    n_examples: int = 1 << 20     # m = 1,048,576 (2x the paper's largest run)
+    n_features: int = 49152       # Reuters-like tf-idf width, 128-aligned
+    lam: float = 1e-5
+
+
+def config() -> RankSVMConfig:
+    return RankSVMConfig()

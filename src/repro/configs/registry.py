@@ -1,0 +1,56 @@
+"""Architecture registry: `--arch <id>` resolution + per-arch shape cells."""
+
+from __future__ import annotations
+
+from . import (command_r_plus_104b, deepseek_v2_lite_16b, internvl2_26b,
+               jamba_1_5_large_398b, minicpm_2b, moonshot_v1_16b_a3b,
+               musicgen_medium, nemotron_4_340b, qwen2_5_3b, ranksvm_paper,
+               rwkv6_3b)
+from .base import LM_SHAPES, ModelConfig, ShapeConfig, shapes_for  # noqa: F401
+
+ARCHS = {
+    'command-r-plus-104b': command_r_plus_104b.config,
+    'minicpm-2b': minicpm_2b.config,
+    'qwen2.5-3b': qwen2_5_3b.config,
+    'nemotron-4-340b': nemotron_4_340b.config,
+    'rwkv6-3b': rwkv6_3b.config,
+    'internvl2-26b': internvl2_26b.config,
+    'jamba-1.5-large-398b': jamba_1_5_large_398b.config,
+    'deepseek-v2-lite-16b': deepseek_v2_lite_16b.config,
+    'moonshot-v1-16b-a3b': moonshot_v1_16b_a3b.config,
+    'musicgen-medium': musicgen_medium.config,
+}
+
+# The paper's own workload, dry-run alongside the LM archs.
+EXTRA_ARCHS = {
+    'ranksvm-linear': ranksvm_paper.config,
+}
+
+
+def get(arch: str):
+    if arch in ARCHS:
+        return ARCHS[arch]()
+    if arch in EXTRA_ARCHS:
+        return EXTRA_ARCHS[arch]()
+    raise KeyError(f'unknown arch {arch!r}; known: '
+                   f'{sorted(ARCHS) + sorted(EXTRA_ARCHS)}')
+
+
+def all_cells():
+    """Every (arch, shape) dry-run cell, skips already applied."""
+    cells = []
+    for a in ARCHS:
+        cfg = ARCHS[a]()
+        for s in shapes_for(cfg):
+            cells.append((a, s.name))
+    return cells
+
+
+def skipped_cells():
+    """(arch, shape) cells skipped per the long_500k sub-quadratic rule."""
+    out = []
+    for a in ARCHS:
+        cfg = ARCHS[a]()
+        if not cfg.sub_quadratic:
+            out.append((a, 'long_500k'))
+    return out

@@ -1,0 +1,9 @@
+# The paper's primary contribution: linearithmic RankSVM training.
+#  - counts:    sort-based order-statistics counts (TPU-native red-black tree)
+#  - ref:       O(m^2) oracles
+#  - rank_loss: differentiable pairwise hinge with Lemma-2 custom VJP
+#  - qp/bmrm:   bundle-method optimizer (Algorithm 1)
+#  - ranksvm:   TreeRSVM / PairRSVM estimators
+from . import counts, joachims, ref, rank_loss, qp, bmrm, ranksvm  # noqa: F401
+from .rank_loss import pairwise_hinge_loss, ranking_error  # noqa: F401
+from .ranksvm import RankSVM  # noqa: F401

@@ -1,0 +1,136 @@
+"""Bundle Method for Regularized Risk Minimization — Algorithm 1 of the paper.
+
+Loss-agnostic cutting-plane optimizer for  J(w) = R_emp(w) + lam * ||w||^2.
+Follows Teo et al. (2010) with the Franc & Sonnenburg (2009) best-iterate rule
+the paper adopts: w_b tracks the best J seen; the gap eps_t = J(w_b) - J_t(w_t)
+is the termination statistic (it upper-bounds J(w_b) - J(w*)).
+
+One oracle call per iteration: the caller's `loss_and_subgrad(w)` returns
+(R_emp(w), a) with a a subgradient — for RankSVM that is core.rank_loss /
+core.counts, i.e. the paper's O(ms + m log m) Algorithm 3.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .qp import solve_bundle_dual
+
+
+@dataclasses.dataclass
+class BMRMStats:
+    iterations: int
+    converged: bool
+    obj_best: float
+    gap: float
+    loss_history: list
+    gap_history: list
+    oracle_seconds: list  # per-iteration loss+subgradient wall time
+    qp_seconds: list
+
+
+@dataclasses.dataclass
+class BMRMResult:
+    w: np.ndarray
+    stats: BMRMStats
+
+
+def bmrm(loss_and_subgrad: Callable[[np.ndarray], tuple],
+         dim: int,
+         lam: float,
+         eps: float = 1e-3,
+         max_iter: int = 1000,
+         w0: np.ndarray | None = None,
+         max_planes: int | None = None,
+         callback: Callable | None = None) -> BMRMResult:
+    """Minimize R_emp(w) + lam ||w||^2 by cutting planes.
+
+    Args:
+      loss_and_subgrad: w -> (R_emp(w), subgradient of R_emp at w).
+      dim: dimensionality of w.
+      lam: regularization constant (the paper's lambda).
+      eps: termination gap (paper uses 1e-3, SVM^rank's default).
+      max_iter: iteration cap.
+      w0: optional warm start.
+      max_planes: optional cap on retained planes (oldest-inactive dropped) —
+        keeps the master QP bounded for very long runs (Teo et al. sec. 5).
+    """
+    w_prev = np.zeros(dim) if w0 is None else np.asarray(w0, np.float64)
+
+    A = np.zeros((0, dim))        # cutting-plane gradients a_i (rows)
+    bvec = np.zeros((0,))         # offsets b_i
+    G = np.zeros((0, 0))          # Gram matrix A A'
+    alpha = None
+
+    # J at the starting point (evaluated inside the first loop turn).
+    w_best = w_prev.copy()
+    j_best = np.inf
+    stats = BMRMStats(0, False, np.inf, np.inf, [], [], [], [])
+
+    for t in range(1, max_iter + 1):
+        t0 = time.perf_counter()
+        r_emp, a_t = loss_and_subgrad(w_prev)
+        stats.oracle_seconds.append(time.perf_counter() - t0)
+        r_emp = float(r_emp)
+        a_t = np.asarray(a_t, np.float64)
+
+        j_prev = r_emp + lam * float(w_prev @ w_prev)
+        if j_prev < j_best:
+            j_best, w_best = j_prev, w_prev.copy()
+
+        b_t = r_emp - float(w_prev @ a_t)
+
+        # Incremental Gram update.
+        cross = A @ a_t if len(A) else np.zeros((0,))
+        A = np.vstack([A, a_t[None, :]])
+        bvec = np.append(bvec, b_t)
+        Gn = np.empty((len(A), len(A)))
+        Gn[:-1, :-1] = G
+        Gn[-1, :-1] = cross
+        Gn[:-1, -1] = cross
+        Gn[-1, -1] = float(a_t @ a_t)
+        G = Gn
+
+        if max_planes is not None and len(A) > max_planes:
+            # Drop the plane with the smallest dual weight (least active).
+            drop = int(np.argmin(alpha)) if alpha is not None else 0
+            keep = np.ones(len(A), bool)
+            keep[drop] = False
+            A, bvec, G = A[keep], bvec[keep], G[np.ix_(keep, keep)]
+            if alpha is not None:
+                alpha = alpha[keep]
+                s = alpha.sum()
+                alpha = alpha / s if s > 0 else None
+
+        t1 = time.perf_counter()
+        warm = None
+        if alpha is not None and len(alpha) == len(A) - 1:
+            warm = np.append(alpha * (1.0 - 1e-3), 1e-3)
+        alpha, dual_val = solve_bundle_dual(G, bvec, lam, alpha0=warm)
+        stats.qp_seconds.append(time.perf_counter() - t1)
+
+        w_t = -(A.T @ alpha) / (2.0 * lam)
+        # J_t(w_t) = max_i (a_i . w_t + b_i) + lam ||w_t||^2, all via G.
+        aw = -(G @ alpha) / (2.0 * lam)
+        jt = float(np.max(aw + bvec) + lam * (w_t @ w_t))
+
+        gap = j_best - jt
+        stats.loss_history.append(r_emp)
+        stats.gap_history.append(gap)
+        stats.iterations = t
+        if callback is not None:
+            callback(t, w_t, j_best, gap)
+
+        if gap < eps:
+            stats.converged = True
+            w_prev = w_t
+            break
+        w_prev = w_t
+
+    stats.obj_best = float(j_best)
+    stats.gap = float(stats.gap_history[-1]) if stats.gap_history else np.inf
+    return BMRMResult(w=w_best, stats=stats)

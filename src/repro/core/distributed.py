@@ -1,0 +1,124 @@
+"""Pod-scale distributed RankSVM: the paper's Algorithm 3 on a TPU mesh.
+
+Decomposition (DESIGN.md §5): for the BMRM oracle at scale the heavy objects
+are the data matrix X (m x n, hundreds of GB) and its two matvecs; the score
+vectors p, y are tiny (4 MB at m = 1M). So:
+
+  * X is 2-D sharded: rows over 'data' (and 'pod'), columns over 'model'.
+  * p = X w needs a partial-sum all-reduce over 'model' (w is
+    column-sharded), leaving p row-sharded — O(m/devices) per device.
+  * the counts c, d: p and y are all-gathered (4 MB — cheap) and the
+    merge-sort-tree queries run with QUERIES sharded over the mesh: each
+    device answers m/devices rank queries against the replicated tree
+    levels. Work per device: O((m/devs) log^2 m) — the paper's linearithmic
+    bound, parallelized.
+  * the subgradient a = X^T (c - d)/N contracts over row-sharded m ->
+    reduce-scatter/all-reduce over 'data', leaving a column-sharded like w.
+
+One oracle call therefore costs O(ms/devs) flops + two small collectives +
+one O(m) gather — the TPU-native replacement for the paper's single-machine
+red-black tree sweep.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from . import counts as _counts
+
+f32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class RankSVMShapeConfig:
+    name: str
+    m: int                      # training examples (rows)
+    n: int                      # features (columns)
+    kind: str = 'oracle'
+
+
+def input_specs(mcfg, shape: RankSVMShapeConfig):
+    """ShapeDtypeStruct stand-ins for one BMRM oracle evaluation."""
+    return {
+        'X': jax.ShapeDtypeStruct((shape.m, shape.n), jnp.bfloat16),
+        'y': jax.ShapeDtypeStruct((shape.m,), f32),
+        'w': jax.ShapeDtypeStruct((shape.n,), f32),
+        'n_pairs': jax.ShapeDtypeStruct((), f32),
+    }
+
+
+def arg_shardings(mesh):
+    rows = tuple(a for a in ('pod', 'data') if a in mesh.axis_names)
+    return {
+        'X': NamedSharding(mesh, P(rows, 'model')),
+        'y': NamedSharding(mesh, P(rows)),
+        'w': NamedSharding(mesh, P('model')),
+        'n_pairs': NamedSharding(mesh, P()),
+    }
+
+
+def out_shardings(mesh):
+    return (NamedSharding(mesh, P()),            # loss
+            NamedSharding(mesh, P('model')))     # subgradient (like w)
+
+
+def make_oracle_step(mesh, variant: str = 'base'):
+    """Sharded (loss, subgradient) evaluation — the paper's Algorithm 3.
+
+    variant='base': the paper-faithful port — matvecs sharded, the counts
+    computation left to the partitioner (it replicates the query work on
+    every device; see EXPERIMENTS.md §Perf cell C baseline).
+    variant='opt' : beyond-paper — every query-indexed array inside the
+    merge-sort-tree is sharding-constrained over the mesh rows, so each
+    device answers m/devices rank queries against the replicated (4 MB)
+    tree levels. Identical outputs; O(devices) less query work per device.
+    """
+    rows = tuple(a for a in ('pod', 'data') if a in mesh.axis_names)
+    ndev = 1
+    for a in mesh.axis_names:
+        ndev *= mesh.shape[a]
+    cns = None
+    if variant == 'opt':
+        def cns(x):
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(*((rows,) + (None,) * (x.ndim - 1)))))
+
+    def oracle(X, y, w, n_pairs):
+        # p = X w : contraction over the column-sharded n axis -> all-reduce
+        # over 'model'; result stays row-sharded.
+        p = jnp.einsum('mn,n->m', X, w.astype(jnp.bfloat16),
+                       preferred_element_type=f32)
+        p = jax.lax.with_sharding_constraint(p, NamedSharding(mesh, P(rows)))
+
+        # counts: gather the tiny score vectors, shard the queries.
+        p_rep = jax.lax.with_sharding_constraint(
+            p, NamedSharding(mesh, P()))
+        y_rep = jax.lax.with_sharding_constraint(
+            y, NamedSharding(mesh, P()))
+        if cns is None:
+            c, d = _counts.counts(p_rep, y_rep)
+        else:
+            c = _counts._half_counts(p_rep, y_rep, constrain=cns)
+            d = _counts._half_counts(-p_rep, -y_rep, constrain=cns)
+        cd = (c - d).astype(f32)
+        cd = jax.lax.with_sharding_constraint(
+            cd, NamedSharding(mesh, P(rows)))
+
+        loss = jnp.sum(cd * p_rep + c.astype(f32)) / n_pairs
+        # a = X^T cd / N : contraction over row-sharded m -> collective over
+        # 'data'/'pod'; result column-sharded like w.
+        a = jnp.einsum('mn,m->n', X, (cd / n_pairs).astype(jnp.bfloat16),
+                       preferred_element_type=f32)
+        a = jax.lax.with_sharding_constraint(
+            a, NamedSharding(mesh, P('model')))
+        return loss, a
+
+    return oracle
+
+
+# Dry-run shape: 2x the paper's largest Reuters run, Reuters-like width.
+REUTERS_1M = RankSVMShapeConfig('reuters_1m', m=1 << 20, n=49152)

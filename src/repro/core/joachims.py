@@ -1,0 +1,80 @@
+"""Joachims (2006) O(ms + m log m + rm) counts — the paper's main baseline.
+
+SVM^rank's subgradient algorithm assumes r discrete utility levels: after
+sorting examples by predicted score p, it makes one pass PER LEVEL with two
+running counters. Cost O(rm) on top of the sort — excellent for bipartite /
+few-level ordinal data, degenerating to O(m²) when r ≈ m (the regime the
+paper's tree method fixes).
+
+We implement it vectorized over levels (the r passes become one
+(r, m)-shaped cumulative-sum computation — levels × sweep positions), which
+keeps the O(rm) work/memory visible while staying jit-able:
+
+  after sorting by p:   c_i = #{j : y_j > y_i  and  p_j < p_i + 1}
+                            = sum_{levels v > y_i}  #{j <= frontier_i : y_j = v}
+
+  where frontier_i = searchsorted(p_sorted, p_i + 1, 'left') is the paper's
+  margin frontier. Per-level prefix counts are cumsums of one-hot level
+  indicators — exactly Joachims' per-level counters.
+
+Used as the r-level baseline in benchmarks/fig6_rlevels.py: flat in r for
+the tree method, linear in r here, crossing at r ≈ log m.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=('r',))
+def counts_rlevel(p: jnp.ndarray, y_idx: jnp.ndarray, r: int):
+    """(c, d) for r-level utilities. y_idx: int level index in [0, r).
+
+    O(rm) work and O(rm) intermediate memory — Joachims' algorithm
+    vectorized; exact for any tie pattern (same strict semantics as the
+    paper's eqs. 5-6).
+    """
+    m = p.shape[0]
+    order = jnp.argsort(p)
+    ps = jnp.take(p, order)
+    ys = jnp.take(y_idx, order)
+
+    onehot = jax.nn.one_hot(ys, r, dtype=jnp.int32)          # (m, r)
+    prefix = jnp.cumsum(onehot, axis=0)                      # (m, r)
+
+    # c: frontier of strictly-smaller-than p_i + 1
+    fc = jnp.searchsorted(ps, ps + jnp.asarray(1.0, ps.dtype),
+                          side='left').astype(jnp.int32)
+    # levels strictly greater than ys[i]
+    lvl_gt = jnp.triu(jnp.ones((r, r), jnp.int32), 1)        # (r, r)
+    pref_at_fc = jnp.take(jnp.vstack([jnp.zeros((1, r), jnp.int32),
+                                      prefix]), fc, axis=0)  # (m, r)
+    c_sorted = jnp.einsum('mr,sr->ms', pref_at_fc,
+                          lvl_gt)[jnp.arange(m), ys]
+
+    # d: suffix of strictly-greater-than p_i - 1, levels strictly smaller
+    fd = jnp.searchsorted(ps, ps - jnp.asarray(1.0, ps.dtype),
+                          side='right').astype(jnp.int32)
+    total = prefix[-1]                                       # (r,)
+    pref_at_fd = jnp.take(jnp.vstack([jnp.zeros((1, r), jnp.int32),
+                                      prefix]), fd, axis=0)
+    suffix = total[None, :] - pref_at_fd                     # (m, r)
+    lvl_lt = jnp.tril(jnp.ones((r, r), jnp.int32), -1)
+    d_sorted = jnp.einsum('mr,sr->ms', suffix,
+                          lvl_lt)[jnp.arange(m), ys]
+
+    c = jnp.zeros((m,), jnp.int32).at[order].set(c_sorted)
+    d = jnp.zeros((m,), jnp.int32).at[order].set(d_sorted)
+    return c, d
+
+
+def levels_of(y) -> tuple:
+    """Map real-valued y to (level_idx, r) — what SVM^rank requires up
+    front (and what the paper's method makes unnecessary)."""
+    y = np.asarray(y)
+    uniq, idx = np.unique(y, return_inverse=True)
+    return idx.astype(np.int32), int(len(uniq))

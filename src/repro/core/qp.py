@@ -1,0 +1,73 @@
+"""Simplex-constrained dual QP solver for the BMRM master problem.
+
+At BMRM iteration t the master problem (eq. 3) is
+
+    w_t = argmin_w  max_i (<w, a_i> + b_i) + lam * ||w||^2 .
+
+Its dual (Teo et al., 2010, sec. 3) over the t cutting planes is
+
+    max_{alpha in simplex}  D(alpha) = -(1/(4 lam)) alpha' G alpha + b' alpha,
+    with  G = A A',  w = -A' alpha / (2 lam).
+
+The paper solves this with CVXOPT; this container is offline so we ship our
+own solver: accelerated projected gradient (FISTA) with an exact O(t log t)
+Euclidean projection onto the simplex (Duchi et al., 2008). t stays tiny
+(tens..hundreds of planes), so this is exact-to-tolerance and costs microseconds.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def project_simplex(v: np.ndarray) -> np.ndarray:
+    """Euclidean projection of v onto {x >= 0, sum x = 1} (Duchi et al. 2008)."""
+    u = np.sort(v)[::-1]
+    css = np.cumsum(u) - 1.0
+    rho_idx = np.nonzero(u * np.arange(1, len(v) + 1) > css)[0]
+    rho = rho_idx[-1]
+    theta = css[rho] / (rho + 1.0)
+    return np.maximum(v - theta, 0.0)
+
+
+def solve_bundle_dual(G: np.ndarray, b: np.ndarray, lam: float,
+                      alpha0: np.ndarray | None = None,
+                      tol: float = 1e-10, max_iter: int = 5000):
+    """Maximize D(alpha) over the simplex; returns (alpha, dual_value).
+
+    f(alpha) = (1/(4 lam)) a'Ga - b'a  is minimized with FISTA; the Lipschitz
+    constant of grad f is lmax(G)/(2 lam), computed exactly (G is tiny).
+    """
+    t = G.shape[0]
+    if t == 1:
+        return np.ones(1), float(-G[0, 0] / (4.0 * lam) + b[0])
+    alpha = (np.ones(t) / t if alpha0 is None
+             else project_simplex(np.asarray(alpha0, np.float64)))
+    evs = np.linalg.eigvalsh(G)
+    L = max(float(evs[-1]) / (2.0 * lam), 1e-12)
+
+    def grad(a):
+        return (G @ a) / (2.0 * lam) - b
+
+    def fval(a):
+        return float(a @ G @ a / (4.0 * lam) - b @ a)
+
+    z = alpha.copy()
+    tk = 1.0
+    f_best = fval(alpha)
+    a_best = alpha.copy()
+    stall = 0
+    for it in range(max_iter):
+        alpha_new = project_simplex(z - grad(z) / L)
+        tk_new = 0.5 * (1.0 + np.sqrt(1.0 + 4.0 * tk * tk))
+        z = alpha_new + ((tk - 1.0) / tk_new) * (alpha_new - alpha)
+        alpha, tk = alpha_new, tk_new
+        if it % 10 == 9:  # FISTA is non-monotone: track the best iterate.
+            f_cur = fval(alpha)
+            if f_cur < f_best - tol * max(1.0, abs(f_best)):
+                f_best, a_best, stall = f_cur, alpha.copy(), 0
+            else:
+                stall += 1
+                if stall >= 5:
+                    break
+    return a_best, -f_best

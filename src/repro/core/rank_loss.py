@@ -1,0 +1,128 @@
+"""Differentiable pairwise hinge (RankSVM) loss at linearithmic cost.
+
+`pairwise_hinge_loss(scores, utilities)` evaluates eq. (4) of the paper via
+Lemma 1 and exposes Lemma 2's subgradient through a `jax.custom_vjp`:
+
+    forward :  O(m log^2 m)   loss = (1/N) sum_i ((c_i - d_i) p_i + c_i)
+    backward:  d loss / d p_i = (c_i - d_i) / N          (a valid subgradient)
+
+This is the paper's O(m^2) -> O(m log m) trick made *differentiable*, so any
+neural scorer (reward model, reranker head) can be trained end-to-end against
+the exact RankSVM objective over the whole global batch. The pairwise hinge is
+piecewise linear in p; on the (measure-zero) non-smooth set the returned vector
+is still a valid subgradient, which is exactly what subgradient-based
+optimizers (SGD/Adam/BMRM) require.
+
+The `group_ids` argument restricts pairs to a single ranking group (e.g. one
+query / one prompt) while keeping a single dense linearithmic pass — see
+core.counts.counts_grouped.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import counts as _counts
+
+
+def _loss_from_counts(p, c, d, n):
+    cf = c.astype(jnp.float32)
+    df = d.astype(jnp.float32)
+    pf = p.astype(jnp.float32)
+    return jnp.sum((cf - df) * pf + cf) / n
+
+
+def _forward(scores, utilities, group_ids):
+    p = scores.astype(jnp.float32)
+    if group_ids is None:
+        c, d = _counts.counts(p, utilities)
+        n = jnp.maximum(_counts.num_pairs(utilities), 1.0)
+    else:
+        c, d = _counts.counts_grouped(p, utilities, group_ids)
+        n = jnp.maximum(_counts.num_pairs_grouped(utilities, group_ids), 1.0)
+    return _loss_from_counts(p, c, d, n), (c, d, n)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _rank_hinge(scores, utilities, group_ids, use_groups: bool):
+    loss, _ = _forward(scores, utilities, group_ids if use_groups else None)
+    return loss
+
+
+def _rank_hinge_fwd(scores, utilities, group_ids, use_groups: bool):
+    loss, (c, d, n) = _forward(scores, utilities,
+                               group_ids if use_groups else None)
+    sub = (c.astype(scores.dtype) - d.astype(scores.dtype)) / n.astype(
+        scores.dtype)
+    return loss, sub
+
+
+def _rank_hinge_bwd(use_groups: bool, sub, g):
+    # Lemma 2: subgradient wrt the scores; utilities / group ids get zeros.
+    return (g * sub, jnp.zeros_like(sub), None)
+
+
+_rank_hinge.defvjp(_rank_hinge_fwd, _rank_hinge_bwd)
+
+
+def pairwise_hinge_loss(scores: jnp.ndarray, utilities: jnp.ndarray,
+                        group_ids: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Average pairwise hinge loss (RankSVM R_emp) with linearithmic VJP.
+
+    Args:
+      scores:    (m,) predicted utility scores (any float dtype).
+      utilities: (m,) ground-truth utility scores — arbitrary reals.
+      group_ids: optional (m,) int group labels; only within-group pairs count.
+    Returns:
+      scalar float32 loss = (1/N) sum_{y_i<y_j, same group} hinge(1+p_i-p_j).
+    """
+    if group_ids is None:
+        dummy = jnp.zeros(scores.shape, jnp.int32)
+        return _rank_hinge(scores, utilities, dummy, False)
+    return _rank_hinge(scores, utilities, group_ids, True)
+
+
+def loss_and_subgradient(scores, utilities, group_ids=None):
+    """(loss, dloss/dscores) without tracing autodiff — for BMRM / hosts."""
+    loss, (c, d, n) = _forward(scores, utilities, group_ids)
+    sub = (c.astype(jnp.float32) - d.astype(jnp.float32)) / n
+    return loss, sub
+
+
+def ranking_error(scores, utilities, group_ids=None) -> jnp.ndarray:
+    """Pairwise ranking error, eq. (1): fraction of swapped pairs.
+
+    Follows the paper's convention: pairs with y_i < y_j count as errors when
+    f(x_i) > f(x_j); ties in the *predicted* scores are counted as half an
+    error (standard AUC-consistent tie handling).
+    """
+    p = scores.astype(jnp.float32)
+    y = utilities.astype(jnp.float32)
+    if group_ids is not None:
+        p, y = _counts._group_offsets(p, y, group_ids)
+        n = jnp.maximum(_counts.num_pairs_grouped(utilities, group_ids), 1.0)
+    else:
+        n = jnp.maximum(_counts.num_pairs(utilities), 1.0)
+    # Count swaps with a margin-free variant of the counting machinery:
+    # swaps = |{(i,j): y_i < y_j and p_i > p_j}|. Reuse the merge-tree by
+    # shrinking the margin to 0 via p' = p / BIG (margin 1 then means ~inf)?
+    # Simpler: a swap for pair (i,j), y_i<y_j, is p_j < p_i. Count with the
+    # same prefix machinery: sweep sorted p, frontier = strictly-smaller set.
+    m = p.shape[0]
+    order = jnp.argsort(p)
+    ps = jnp.take(p, order)
+    ys = jnp.take(y, order)
+    lt = jnp.searchsorted(ps, ps, side='left').astype(jnp.int32)   # p_k <  p_i
+    le = jnp.searchsorted(ps, ps, side='right').astype(jnp.int32)  # p_k <= p_i
+    # errors where i is the preferred-lower side: y_k > y_i among p_k < p_i
+    swaps = _counts._prefix_count_greater(ys, lt, ys).astype(jnp.float32)
+    # ties in p: pairs with p_k == p_i, y_k > y_i -> half error each.
+    ties_gt = (_counts._prefix_count_greater(ys, le, ys)
+               - _counts._prefix_count_greater(ys, lt, ys)).astype(jnp.float32)
+    # note: prefix [lt, le) == all k with p_k == p_i (including k == i, which
+    # contributes 0 since y_i > y_i is false).
+    total = jnp.sum(swaps) + 0.5 * jnp.sum(ties_gt)
+    return total / n

@@ -1,0 +1,86 @@
+"""Pure-jnp O(m^2) oracles for the RankSVM pairwise hinge loss.
+
+These are the ground truth the linearithmic implementations (core.counts,
+kernels.pairwise_rank) are validated against. Notation follows the paper
+(Airola et al., 2011):
+
+    p_i = w^T x_i                       (predicted utility scores)
+    c_i = |{j : y_i < y_j  and  p_i > p_j - 1}|        (eq. 5)
+    d_i = |{j : y_i > y_j  and  p_i < p_j + 1}|        (eq. 6)
+    N   = |{(i, j) : y_i < y_j}|        (ordered pairs)
+
+    R_emp = (1/N) sum_{y_i < y_j} max(0, 1 + p_i - p_j)             (eq. 4)
+          = (1/N) sum_i ((c_i - d_i) * p_i + c_i)                   (Lemma 1)
+    a     = (1/N) X (c - d)   is a subgradient of R_emp             (Lemma 2)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def counts_ref(p: jnp.ndarray, y: jnp.ndarray):
+    """O(m^2) reference computation of the frequency vectors (c, d).
+
+    Args:
+      p: (m,) predicted scores.
+      y: (m,) true utility scores (arbitrary reals, ties allowed).
+    Returns:
+      c, d: (m,) int32 vectors per eqs. (5) and (6).
+    """
+    # [i, j] entries: does example j contribute to c_i / d_i?
+    y_j_gt_y_i = y[None, :] > y[:, None]
+    p_j_in_margin_c = p[None, :] < p[:, None] + 1.0  # p_i > p_j - 1
+    c = jnp.sum(y_j_gt_y_i & p_j_in_margin_c, axis=1).astype(jnp.int32)
+
+    y_j_lt_y_i = y[None, :] < y[:, None]
+    p_j_in_margin_d = p[None, :] > p[:, None] - 1.0  # p_i < p_j + 1
+    d = jnp.sum(y_j_lt_y_i & p_j_in_margin_d, axis=1).astype(jnp.int32)
+    return c, d
+
+
+def num_pairs_ref(y: jnp.ndarray) -> jnp.ndarray:
+    """N = number of ordered pairs (i, j) with y_i < y_j. O(m^2)."""
+    return jnp.sum(y[:, None] < y[None, :]).astype(jnp.int32)
+
+
+def loss_ref(p: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Direct O(m^2) evaluation of the average pairwise hinge loss (eq. 4)."""
+    diff = 1.0 + p[:, None] - p[None, :]  # [i, j] margin for pair (i, j)
+    mask = y[:, None] < y[None, :]
+    n = jnp.maximum(num_pairs_ref(y), 1)
+    return jnp.sum(jnp.where(mask, jnp.maximum(diff, 0.0), 0.0)) / n
+
+
+def loss_from_counts(p: jnp.ndarray, c: jnp.ndarray, d: jnp.ndarray,
+                     n_pairs) -> jnp.ndarray:
+    """Lemma 1: R_emp = (1/N) sum_i ((c_i - d_i) p_i + c_i)."""
+    n = jnp.maximum(n_pairs, 1)
+    cf = c.astype(p.dtype)
+    df = d.astype(p.dtype)
+    return jnp.sum((cf - df) * p + cf) / n
+
+
+def subgradient_ref(X: jnp.ndarray, p: jnp.ndarray, y: jnp.ndarray):
+    """Lemma 2 subgradient via the O(m^2) counts. X is (m, n) row-major."""
+    c, d = counts_ref(p, y)
+    n = jnp.maximum(num_pairs_ref(y), 1).astype(X.dtype)
+    return X.T @ ((c - d).astype(X.dtype)) / n
+
+
+def grouped_counts_ref(p: jnp.ndarray, y: jnp.ndarray, g: jnp.ndarray):
+    """O(m^2) counts restricted to within-group pairs (g_i == g_j)."""
+    same = g[None, :] == g[:, None]
+    y_j_gt_y_i = (y[None, :] > y[:, None]) & same
+    p_j_in_margin_c = p[None, :] < p[:, None] + 1.0
+    c = jnp.sum(y_j_gt_y_i & p_j_in_margin_c, axis=1).astype(jnp.int32)
+
+    y_j_lt_y_i = (y[None, :] < y[:, None]) & same
+    p_j_in_margin_d = p[None, :] > p[:, None] - 1.0
+    d = jnp.sum(y_j_lt_y_i & p_j_in_margin_d, axis=1).astype(jnp.int32)
+    return c, d
+
+
+def grouped_num_pairs_ref(y: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    same = g[None, :] == g[:, None]
+    return jnp.sum((y[:, None] < y[None, :]) & same).astype(jnp.int32)

@@ -1,0 +1,4 @@
+from .sparse import CSRMatrix, random_tfidf  # noqa: F401
+from .synthetic import (RankingData, cadata_like, grouped_queries,  # noqa: F401
+                        ordinal_like, reuters_like)
+from .tokens import RewardPipeline, TokenPipeline, TokenPipelineConfig  # noqa: F401

@@ -1,0 +1,107 @@
+"""Synthetic ranking datasets reproducing the paper's two experimental setups.
+
+The paper (sec. 5.1) uses:
+  * Cadata — ~20k examples, 8 dense features, real-valued labels as utilities.
+  * Reuters RCV1 — ~800k docs, ~50k sparse tf-idf features; utilities are dot
+    products against one randomly removed target document ("rank documents by
+    similarity to the target") so that r ~= m: every score distinct.
+
+Both generators below match those statistical shapes without shipping the
+datasets: dense low-dim nonlinear regression for cadata, sparse tf-idf with
+similarity utilities for reuters. Deterministic in `seed`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .sparse import CSRMatrix, random_tfidf
+
+
+@dataclasses.dataclass
+class RankingData:
+    X: object                    # (m, n) ndarray or CSRMatrix
+    y: np.ndarray                # (m,) real-valued utilities
+    X_test: object
+    y_test: np.ndarray
+    name: str
+
+    @property
+    def m(self) -> int:
+        return self.X.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.X.shape[1]
+
+
+def cadata_like(m: int = 16000, m_test: int = 4000, seed: int = 0,
+                noise: float = 0.1) -> RankingData:
+    """Low-dimensional dense utilities — the paper's Cadata stand-in.
+
+    8 features like the housing data; utility is a smooth nonlinear function
+    so the linear model has irreducible ranking error (as in Fig. 4 left,
+    where test error plateaus ~0.2).
+    """
+    rng = np.random.default_rng(seed)
+    total = m + m_test
+    X = rng.normal(size=(total, 8))
+    w = rng.normal(size=8)
+    y = (X @ w
+         + 0.5 * np.sin(2.0 * X[:, 0]) * X[:, 1]
+         + 0.3 * X[:, 2] ** 2
+         + noise * rng.normal(size=total))
+    return RankingData(X[:m], y[:m], X[m:], y[m:], 'cadata-like')
+
+
+def reuters_like(m: int = 64000, m_test: int = 20000, n: int = 49152,
+                 nnz_per_row: int = 50, seed: int = 0) -> RankingData:
+    """Sparse tf-idf + similarity-to-target utilities — the Reuters stand-in.
+
+    Reproduces the property that drives the paper's headline result:
+    real-valued utilities with r ~= m distinct values, so O(rm)-style methods
+    degrade to O(m^2) while the tree method stays linearithmic.
+    """
+    X = random_tfidf(m + m_test + 1, n, nnz_per_row, seed=seed)
+    target = X.row_slice(m + m_test, m + m_test + 1)   # the removed doc
+    tvec = np.zeros(n)
+    tvec[target.indices] = target.data
+    y = X.matvec(tvec)                                  # similarity scores
+    Xtr = X.rows(m)
+    Xte = X.row_slice(m, m + m_test)
+    return RankingData(Xtr, y[:m], Xte, y[m:m + m_test], 'reuters-like')
+
+
+def ordinal_like(m: int = 8000, m_test: int = 2000, n: int = 32,
+                 levels: int = 5, seed: int = 0) -> RankingData:
+    """r-level ordinal data (movie-ratings setting) — exercises the tie-heavy
+    regime where Joachims' O(rm) method is also applicable; used to validate
+    the tree method under massive y-duplication."""
+    rng = np.random.default_rng(seed)
+    total = m + m_test
+    X = rng.normal(size=(total, n))
+    w = rng.normal(size=n)
+    raw = X @ w + 0.5 * rng.normal(size=total)
+    edges = np.quantile(raw, np.linspace(0, 1, levels + 1)[1:-1])
+    y = np.digitize(raw, edges).astype(np.float64)
+    return RankingData(X[:m], y[:m], X[m:], y[m:], f'ordinal-{levels}')
+
+
+def grouped_queries(n_queries: int = 200, per_query: int = 50, n: int = 64,
+                    seed: int = 0) -> tuple:
+    """Query-grouped LTR data (paper sec. 2, document-retrieval setting).
+
+    Returns (X, y, groups): preferences only hold within a query. Each query
+    has its own relevance offset, making cross-query comparisons meaningless —
+    exactly the structure the grouped loss must ignore.
+    """
+    rng = np.random.default_rng(seed)
+    m = n_queries * per_query
+    X = rng.normal(size=(m, n))
+    w = rng.normal(size=n)
+    groups = np.repeat(np.arange(n_queries, dtype=np.int32), per_query)
+    query_bias = rng.normal(scale=5.0, size=n_queries)  # large nuisance shift
+    y = X @ w + query_bias[groups] + 0.2 * rng.normal(size=m)
+    return X, y, groups

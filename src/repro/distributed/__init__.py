@@ -1,0 +1,2 @@
+from . import sharding  # noqa: F401
+from .compression import compressed_mean  # noqa: F401

@@ -1,0 +1,102 @@
+"""Logical-axis sharding rules for the ('pod','data','model') production mesh.
+
+Parallelism map (DESIGN.md §3):
+  * batch           -> ('pod','data')     data parallelism, 2-level on multipod
+  * embed (weights) -> 'data'             FSDP / ZeRO-3: params + optimizer
+                                          state sharded over the DP axis,
+                                          all-gathered per scanned layer by XLA
+  * vocab/heads/ffn/experts -> 'model'    tensor / expert parallelism
+  * cache_seq       -> 'data'             SP for batch-1 long-context decode
+Axes that do not divide a dimension are dropped (replication fallback) — e.g.
+qwen2.5's kv_heads=2 on a 16-way model axis, or minicpm's odd 122753 vocab
+before padding.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> tuple of mesh axes (tried in order, combined).
+DEFAULT_RULES = {
+    'batch': ('pod', 'data'),
+    'seq': (),
+    'embed': ('data',),          # FSDP shard dim for weights
+    'embed_act': (),             # activations keep d_model replicated
+    'vocab': ('model',),
+    'heads': ('model',),
+    'kv_heads': ('model',),
+    'head_dim': (),
+    'ffn': ('model',),
+    'experts': ('model',),
+    'expert_cap': (),
+    'mamba_inner': ('model',),
+    'state': (),
+    'kv_lora': ('model',),
+    'cache_seq': ('data',),      # SP: shard KV cache length when batch == 1
+    'cache_batch': ('pod', 'data'),
+    'none': (),
+}
+
+
+class ShardingRules:
+    """Resolves logical axis names to PartitionSpecs on a concrete mesh."""
+
+    def __init__(self, mesh: Mesh, rules: dict | None = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES if rules is None else rules)
+
+    def spec(self, logical_axes, shape=None) -> P:
+        """PartitionSpec for `logical_axes`.
+
+        Mesh axes that do not divide the dimension are dropped (replication
+        fallback), and an axis is never used for two dimensions of the same
+        array — first dimension wins, later ones fall back. This yields e.g.
+        automatic sequence parallelism for batch-1 decode caches: with
+        global_batch=1 the 'data' axis can't shard cache_batch, so it is
+        free to shard cache_seq instead.
+        """
+        parts = []
+        used: set = set()
+        for i, name in enumerate(logical_axes):
+            mesh_axes = tuple(a for a in self.rules.get(name, ())
+                              if a in self.mesh.axis_names and a not in used)
+            if shape is not None and mesh_axes:
+                total = 1
+                kept = []
+                for a in mesh_axes:
+                    n = self.mesh.shape[a]
+                    if shape[i] % (total * n) == 0:
+                        kept.append(a)
+                        total *= n
+                mesh_axes = tuple(kept)
+            used.update(mesh_axes)
+            if not mesh_axes:
+                parts.append(None)
+            elif len(mesh_axes) == 1:
+                parts.append(mesh_axes[0])
+            else:
+                parts.append(mesh_axes)
+        return P(*parts)
+
+    def sharding(self, logical_axes, shape=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+    def constrain(self, x, logical_axes):
+        """with_sharding_constraint by logical names (no-op off-mesh)."""
+        spec = self.spec(logical_axes, x.shape)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+class NoSharding:
+    """Identity stand-in used for single-device smoke tests."""
+
+    def spec(self, logical_axes, shape=None):
+        return P()
+
+    def sharding(self, logical_axes, shape=None):
+        return None
+
+    def constrain(self, x, logical_axes):
+        return x

@@ -1,0 +1,1 @@
+from .ops import pairwise_counts, pairwise_rank_loss, counts_auto  # noqa: F401

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: tiled O(m^2) RankSVM frequency counts.
+
+Computes the paper's c/d vectors (eqs. 5-6) by brute-force pairwise
+comparison, tiled for VMEM. This is (a) the PairRSVM baseline the paper
+benchmarks against, and (b) the *fast path* for small ranking groups on TPU:
+for m <= a few thousand the dense 8x128-lane compare+reduce beats the
+gather-bound merge-sort-tree queries of core.counts (see DESIGN.md §2 and
+benchmarks/fig5_crossover.py).
+
+Tiling: grid (m/TI, m/TJ); each step loads a (TI,) slice of queries i and a
+(TJ,) slice of candidates j, forms the (TI, TJ) comparison tile in registers
+(fp32 VPU ops), reduces over j, and accumulates into the (TI,) outputs.
+TPU grids iterate the trailing axis sequentially, so the j-axis accumulation
+into the i-indexed output block is the canonical revisiting pattern.
+
+Inputs are reshaped to (m/128, 128) so every VMEM block is a hardware-aligned
+(rows, 128) tile. Padding convention (see ops.py): p_pad = +inf, y_pad = +inf
+never contributes to either count.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _pairwise_kernel(p_i_ref, y_i_ref, p_j_ref, y_j_ref, c_ref, d_ref,
+                     *, tj_tiles: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        d_ref[...] = jnp.zeros_like(d_ref)
+
+    # (TI_ROWS, 128) query tile flattened to (TI,) vs (TJ,) candidate tile.
+    p_i = p_i_ref[...].reshape(-1)   # (TI,)
+    y_i = y_i_ref[...].reshape(-1)
+    p_j = p_j_ref[...].reshape(-1)   # (TJ,)
+    y_j = y_j_ref[...].reshape(-1)
+
+    # c_i += |{j : y_j > y_i  and  p_j < p_i + 1}|
+    y_gt = y_j[None, :] > y_i[:, None]
+    in_margin_c = p_j[None, :] < p_i[:, None] + 1.0
+    c_tile = jnp.sum(jnp.logical_and(y_gt, in_margin_c), axis=1,
+                     dtype=jnp.int32)
+    # d_i += |{j : y_j < y_i  and  p_j > p_i - 1}|
+    y_lt = y_j[None, :] < y_i[:, None]
+    in_margin_d = p_j[None, :] > p_i[:, None] - 1.0
+    d_tile = jnp.sum(jnp.logical_and(y_lt, in_margin_d), axis=1,
+                     dtype=jnp.int32)
+
+    c_ref[...] += c_tile.reshape(c_ref.shape)
+    d_ref[...] += d_tile.reshape(d_ref.shape)
+
+
+def pairwise_counts_kernel(p2: jnp.ndarray, y2: jnp.ndarray,
+                           ti_rows: int = 2, tj_rows: int = 8,
+                           interpret: bool = True):
+    """Raw pallas_call on pre-padded (rows, 128) inputs.
+
+    Args:
+      p2, y2: (R, 128) float32, R % max(ti_rows, tj_rows) == 0.
+      ti_rows / tj_rows: VMEM tile heights for the query/candidate axes.
+        Defaults: (2*128) x (8*128) = 256 x 1024 comparison tile = 256 KiB of
+        fp32 intermediates, comfortably inside the ~16 MiB v5e VMEM along with
+        the operand slices.
+      interpret: run the kernel body in Python (CPU validation mode).
+    """
+    rows = p2.shape[0]
+    grid = (rows // ti_rows, rows // tj_rows)
+    kernel = functools.partial(_pairwise_kernel, tj_tiles=grid[1])
+    c2, d2 = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ti_rows, LANES), lambda i, j: (i, 0)),
+            pl.BlockSpec((ti_rows, LANES), lambda i, j: (i, 0)),
+            pl.BlockSpec((tj_rows, LANES), lambda i, j: (j, 0)),
+            pl.BlockSpec((tj_rows, LANES), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((ti_rows, LANES), lambda i, j: (i, 0)),
+            pl.BlockSpec((ti_rows, LANES), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+        ],
+        interpret=interpret,
+    )(p2, y2, p2, y2)
+    return c2, d2

@@ -1,0 +1,2 @@
+"""Pure-jnp oracle for the pairwise_rank kernel (= the paper's eqs. 5-6)."""
+from repro.core.ref import counts_ref, loss_ref, loss_from_counts  # noqa: F401

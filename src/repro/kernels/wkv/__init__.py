@@ -1,0 +1,1 @@
+from .ops import wkv_apply  # noqa: F401

@@ -1,0 +1,234 @@
+"""Pallas TPU kernels for the WKV-6 recurrence (forward + backward).
+
+Why a kernel: the recurrence is sequential in T with a per-(batch, head)
+(K x V) state. Expressed as a lax.scan, XLA stores the state to HBM every
+step — the dry-run profile charges ~2 x state x T x layers of HBM traffic,
+which makes rwkv6-3b/train_4k the worst memory-roofline cell of the sweep
+(EXPERIMENTS.md §Perf cell A). The kernel keeps the state in a VMEM scratch
+across the whole sequence and streams only r/k/v/w/o through HBM:
+
+    traffic/layer: 5 * B*T*H*K*4 B   (vs  + 2 * B*H*K*V * T * 4 B for scan)
+
+Layout: batch and heads are flattened to N = B*H; the grid is
+(N / bn, T / chunk) with the T axis iterated sequentially (TPU grids iterate
+the trailing axis innermost), so the VMEM state scratch carries across
+chunks of the same N-tile and re-initializes at chunk 0.
+
+Forward also emits the per-chunk-boundary states (N, T/chunk, K, V): the
+backward kernel re-runs each chunk forward from its boundary state into a
+VMEM scratch (flash-attention-style recompute) and then walks the chunk in
+reverse accumulating dS — O(T/chunk * state) HBM instead of O(T * state).
+
+Gradients (S_t = diag(w_t) S_{t-1} + k_t v_t^T,  o_t = r_t (S_{t-1} +
+diag(u) k_t v_t^T)):
+
+    dr_t = (S_{t-1} + diag(u) k_t v_t^T) do_t
+    dk_t = (u * r_t) <v_t, do_t> + dS_t v_t
+    dv_t = sum_k (u_k r_k k_k) do_t + dS_t^T k_t
+    dw_t = (dS_t * S_{t-1}) summed over v
+    dS_{t-1} = diag(w_t) dS_t + r_t do_t^T
+    du  += sum_t (k_t <v_t, do_t>) r_t          (accumulated per N)
+    ds0  = dS_0
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+f32 = jnp.float32
+
+
+# ------------------------------------------------------------------ forward
+
+
+def _wkv_fwd_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+                    o_ref, sT_ref, bnd_ref, s_scratch, *, chunk: int):
+    t_idx = pl.program_id(1)
+    nt = pl.num_programs(1)
+
+    @pl.when(t_idx == 0)
+    def _init():
+        s_scratch[...] = s0_ref[...].astype(f32)
+
+    # chunk-boundary state (pre-chunk) for the backward recompute
+    bnd_ref[...] = s_scratch[...][:, None, :, :]
+
+    u = u_ref[...].astype(f32)                     # (bn, K)
+
+    def step(t, s):
+        rt = r_ref[:, t, :].astype(f32)            # (bn, K)
+        kt = k_ref[:, t, :].astype(f32)
+        vt = v_ref[:, t, :].astype(f32)
+        wt = w_ref[:, t, :].astype(f32)
+        kv = kt[:, :, None] * vt[:, None, :]       # (bn, K, V)
+        o = jnp.sum((s + u[:, :, None] * kv) * rt[:, :, None], axis=1)
+        o_ref[:, t, :] = o.astype(o_ref.dtype)
+        return wt[:, :, None] * s + kv
+
+    s = jax.lax.fori_loop(0, chunk, step, s_scratch[...])
+    s_scratch[...] = s
+
+    @pl.when(t_idx == nt - 1)
+    def _final():
+        sT_ref[...] = s.astype(sT_ref.dtype)
+
+
+def wkv_forward(r, k, v, w, u, s0, *, bn: int = 8, chunk: int = 64,
+                interpret: bool = True):
+    """r,k,v,w: (N, T, K) f32; u: (N, K); s0: (N, K, K).
+
+    Returns (o: (N, T, K) f32, sT: (N, K, K) f32,
+             boundaries: (N, T/chunk, K, K) f32)."""
+    n, t, kk = r.shape
+    assert t % chunk == 0 and n % bn == 0, (n, t, bn, chunk)
+    nchunk = t // chunk
+    grid = (n // bn, nchunk)
+
+    kernel = functools.partial(_wkv_fwd_kernel, chunk=chunk)
+    o, sT, bnd = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, chunk, kk), lambda i, j: (i, j, 0)),  # r
+            pl.BlockSpec((bn, chunk, kk), lambda i, j: (i, j, 0)),  # k
+            pl.BlockSpec((bn, chunk, kk), lambda i, j: (i, j, 0)),  # v
+            pl.BlockSpec((bn, chunk, kk), lambda i, j: (i, j, 0)),  # w
+            pl.BlockSpec((bn, kk), lambda i, j: (i, 0)),            # u
+            pl.BlockSpec((bn, kk, kk), lambda i, j: (i, 0, 0)),     # s0
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, chunk, kk), lambda i, j: (i, j, 0)),   # o
+            pl.BlockSpec((bn, kk, kk), lambda i, j: (i, 0, 0)),      # sT
+            pl.BlockSpec((bn, 1, kk, kk), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, t, kk), r.dtype),   # o matches input
+            jax.ShapeDtypeStruct((n, kk, kk), f32),
+            jax.ShapeDtypeStruct((n, nchunk, kk, kk), f32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bn, kk, kk), f32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return o, sT, bnd
+
+
+# ----------------------------------------------------------------- backward
+
+
+def _wkv_bwd_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, bnd_ref, do_ref,
+                    dsT_ref, dr_ref, dk_ref, dv_ref, dw_ref, du_ref,
+                    ds0_ref, ds_scratch, s_hist, *, chunk: int):
+    t_idx = pl.program_id(1)                       # 0 = LAST chunk (reversed)
+    nt = pl.num_programs(1)
+
+    @pl.when(t_idx == 0)
+    def _init():
+        ds_scratch[...] = dsT_ref[...].astype(f32)
+        du_ref[...] = jnp.zeros_like(du_ref)
+
+    u = u_ref[...].astype(f32)
+
+    # pass 1: recompute S_{t-1} for every t in the chunk from the boundary
+    def fwd_step(t, s):
+        s_hist[:, t, :, :] = s
+        kt = k_ref[:, t, :].astype(f32)
+        vt = v_ref[:, t, :].astype(f32)
+        wt = w_ref[:, t, :].astype(f32)
+        return wt[:, :, None] * s + kt[:, :, None] * vt[:, None, :]
+
+    jax.lax.fori_loop(0, chunk, fwd_step, bnd_ref[...][:, 0, :, :])
+
+    # pass 2: reverse sweep accumulating dS
+    def bwd_step(i, carry):
+        ds, du = carry
+        t = chunk - 1 - i
+        rt = r_ref[:, t, :].astype(f32)
+        kt = k_ref[:, t, :].astype(f32)
+        vt = v_ref[:, t, :].astype(f32)
+        wt = w_ref[:, t, :].astype(f32)
+        dot = do_ref[:, t, :].astype(f32)          # (bn, V)
+        s_prev = s_hist[:, t, :, :]                # S_{t-1}
+
+        kv = kt[:, :, None] * vt[:, None, :]
+        dr = jnp.sum((s_prev + u[:, :, None] * kv) * dot[:, None, :],
+                     axis=2)
+        vdo = jnp.sum(vt * dot, axis=1)            # (bn,)
+        dk = (u * rt) * vdo[:, None] + jnp.sum(ds * vt[:, None, :], axis=2)
+        dv = (jnp.sum(u * rt * kt, axis=1))[:, None] * dot \
+            + jnp.sum(ds * kt[:, :, None], axis=1)
+        dw = jnp.sum(ds * s_prev, axis=2)
+        du = du + (kt * vdo[:, None]) * rt
+
+        dr_ref[:, t, :] = dr.astype(dr_ref.dtype)
+        dk_ref[:, t, :] = dk.astype(dk_ref.dtype)
+        dv_ref[:, t, :] = dv.astype(dv_ref.dtype)
+        dw_ref[:, t, :] = dw.astype(dw_ref.dtype)
+
+        ds = wt[:, :, None] * ds + rt[:, :, None] * dot[:, None, :]
+        return ds, du
+
+    ds0 = ds_scratch[...]
+    du0 = du_ref[...].astype(f32)
+    ds, du = jax.lax.fori_loop(0, chunk, bwd_step, (ds0, du0))
+    ds_scratch[...] = ds
+    du_ref[...] = du.astype(du_ref.dtype)
+
+    @pl.when(t_idx == nt - 1)
+    def _final():
+        ds0_ref[...] = ds.astype(ds0_ref.dtype)
+
+
+def wkv_backward(r, k, v, w, u, boundaries, do, dsT, *, bn: int = 2,
+                 chunk: int = 64, interpret: bool = True):
+    """Reverse-mode gradients. Returns (dr, dk, dv, dw, du, ds0)."""
+    n, t, kk = r.shape
+    nchunk = t // chunk
+    assert n % bn == 0
+    grid = (n // bn, nchunk)
+
+    def rev_t(i, j):
+        return (i, (nchunk - 1 - j), 0)
+
+    kernel = functools.partial(_wkv_bwd_kernel, chunk=chunk)
+    dr, dk, dv, dw, du, ds0 = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, chunk, kk), rev_t),                   # r
+            pl.BlockSpec((bn, chunk, kk), rev_t),                   # k
+            pl.BlockSpec((bn, chunk, kk), rev_t),                   # v
+            pl.BlockSpec((bn, chunk, kk), rev_t),                   # w
+            pl.BlockSpec((bn, kk), lambda i, j: (i, 0)),            # u
+            pl.BlockSpec((bn, 1, kk, kk),
+                         lambda i, j: (i, nchunk - 1 - j, 0, 0)),   # bnd
+            pl.BlockSpec((bn, chunk, kk), rev_t),                   # do
+            pl.BlockSpec((bn, kk, kk), lambda i, j: (i, 0, 0)),     # dsT
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, chunk, kk), rev_t),                   # dr
+            pl.BlockSpec((bn, chunk, kk), rev_t),                   # dk
+            pl.BlockSpec((bn, chunk, kk), rev_t),                   # dv
+            pl.BlockSpec((bn, chunk, kk), rev_t),                   # dw
+            pl.BlockSpec((bn, kk), lambda i, j: (i, 0)),            # du
+            pl.BlockSpec((bn, kk, kk), lambda i, j: (i, 0, 0)),     # ds0
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, t, kk), r.dtype),   # dr
+            jax.ShapeDtypeStruct((n, t, kk), k.dtype),   # dk
+            jax.ShapeDtypeStruct((n, t, kk), v.dtype),   # dv
+            jax.ShapeDtypeStruct((n, t, kk), w.dtype),   # dw
+            jax.ShapeDtypeStruct((n, kk), f32),          # du (tiny, f32)
+            jax.ShapeDtypeStruct((n, kk, kk), f32),      # ds0
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bn, kk, kk), f32),          # dS carry
+            pltpu.VMEM((bn, chunk, kk, kk), f32),   # S_{t-1} history
+        ],
+        interpret=interpret,
+    )(r, k, v, w, u, boundaries, do, dsT)
+    return dr, dk, dv, dw, du, ds0

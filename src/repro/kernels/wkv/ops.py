@@ -1,0 +1,134 @@
+"""Public WKV op: custom-VJP wrapper + sharding-aware dispatch.
+
+Three execution modes, selected automatically:
+  * TPU backend          -> compiled Pallas kernels (interpret=False).
+  * CPU, no mesh         -> Pallas interpret mode (tests, examples).
+  * CPU under a mesh     -> `jax.pure_callback` stub wrapping the interpret
+    kernel. The stub is an opaque custom-call in HLO, so (a) the SPMD
+    dry-run lowers it with exactly the kernel's interface cost — operands +
+    results streamed once, state resident in VMEM — which is what the
+    roofline analyzer should charge for the real TPU kernel, and (b) it
+    still executes correctly on CPU if called.
+
+Under a mesh the op is wrapped in shard_map (batch*heads sharded over the
+DP axes, T and K local), because an opaque kernel cannot be partitioned by
+XLA's SPMD pass.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import kernel as K
+
+f32 = jnp.float32
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == 'tpu'
+
+
+def _fwd_parts(r, k, v, w, u, s0, *, stub: bool, chunk: int, bn: int):
+    n, t, kk = r.shape
+    nchunk = t // chunk
+    if stub:
+        out_shapes = (jax.ShapeDtypeStruct((n, t, kk), r.dtype),
+                      jax.ShapeDtypeStruct((n, kk, kk), f32),
+                      jax.ShapeDtypeStruct((n, nchunk, kk, kk), f32))
+
+        def host_fwd(*args):
+            o, sT, bnd = K.wkv_forward(*[jnp.asarray(a) for a in args],
+                                       bn=bn, chunk=chunk, interpret=True)
+            import numpy as np
+            return (np.asarray(o), np.asarray(sT), np.asarray(bnd))
+
+        return jax.pure_callback(host_fwd, out_shapes, r, k, v, w, u, s0,
+                                 vmap_method='sequential')
+    return K.wkv_forward(r, k, v, w, u, s0, bn=bn, chunk=chunk,
+                         interpret=not _on_tpu())
+
+
+def _bwd_parts(r, k, v, w, u, bnd, do, dsT, *, stub: bool, chunk: int,
+               bn: int):
+    n, t, kk = r.shape
+    if stub:
+        out_shapes = (jax.ShapeDtypeStruct((n, t, kk), r.dtype),
+                      jax.ShapeDtypeStruct((n, t, kk), k.dtype),
+                      jax.ShapeDtypeStruct((n, t, kk), v.dtype),
+                      jax.ShapeDtypeStruct((n, t, kk), w.dtype),
+                      jax.ShapeDtypeStruct((n, kk), f32),
+                      jax.ShapeDtypeStruct((n, kk, kk), f32))
+
+        def host_bwd(*args):
+            outs = K.wkv_backward(*[jnp.asarray(a) for a in args],
+                                  bn=bn, chunk=chunk, interpret=True)
+            import numpy as np
+            return tuple(np.asarray(o) for o in outs)
+
+        return jax.pure_callback(host_bwd, out_shapes, r, k, v, w, u, bnd,
+                                 do, dsT, vmap_method='sequential')
+    return K.wkv_backward(r, k, v, w, u, bnd, do, dsT, bn=bn, chunk=chunk,
+                          interpret=not _on_tpu())
+
+
+@functools.lru_cache(maxsize=8)
+def _make_wkv(stub: bool, chunk: int, bn_fwd: int, bn_bwd: int):
+    @jax.custom_vjp
+    def wkv(r, k, v, w, u, s0):
+        o, sT, _ = _fwd_parts(r, k, v, w, u, s0, stub=stub, chunk=chunk,
+                              bn=bn_fwd)
+        return o, sT
+
+    def fwd(r, k, v, w, u, s0):
+        o, sT, bnd = _fwd_parts(r, k, v, w, u, s0, stub=stub, chunk=chunk,
+                                bn=bn_fwd)
+        return (o, sT), (r, k, v, w, u, bnd)
+
+    def bwd(res, cts):
+        r, k, v, w, u, bnd = res
+        do, dsT = cts
+        dr, dk, dv, dw, du, ds0 = _bwd_parts(
+            r, k, v, w, u, bnd, do.astype(r.dtype), dsT.astype(f32),
+            stub=stub, chunk=chunk, bn=bn_bwd)
+        return dr, dk, dv, dw, du, ds0
+
+    wkv.defvjp(fwd, bwd)
+    return wkv
+
+
+def _pick_geometry(n: int, t: int):
+    """Largest chunk/tile sizes that divide the problem (VMEM-safe)."""
+    chunk = 64
+    while t % chunk:
+        chunk //= 2
+    bn_fwd = 8
+    while n % bn_fwd:
+        bn_fwd //= 2
+    bn_bwd = min(2, bn_fwd)
+    return chunk, bn_fwd, bn_bwd
+
+
+def wkv_apply(r, k, v, w, u, s0, mesh=None):
+    """WKV over (N, T, K) inputs; shards N over ('pod','data') when a mesh
+    is given. Returns (o, sT)."""
+    n, t, kk = r.shape
+    chunk, bn_fwd, bn_bwd = _pick_geometry(n, t)
+    stub = (mesh is not None) and not _on_tpu()
+    fn = _make_wkv(stub, chunk, bn_fwd, bn_bwd)
+    if mesh is None:
+        return fn(r, k, v, w, u, s0)
+
+    rows = tuple(a for a in ('pod', 'data') if a in mesh.axis_names)
+    spec3 = P(rows, None, None)
+    spec2 = P(rows, None)
+    spec_s = P(rows, None, None)
+    shard_fn = jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(spec3, spec3, spec3, spec3, spec2, spec_s),
+        out_specs=(spec3, spec_s),
+        check_vma=False)
+    return shard_fn(r, k, v, w, u, s0)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the WKV-6 recurrence (the RWKV-6 time-mix core).
+
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+Shapes (flattened batch*heads = N): r, k, v, w: (N, T, K); u: (N, K);
+s0: (N, K, K) with S[k, v] indexing. Returns (o: (N, T, K), sT)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, w, u, s0):
+    def step(s, inp):
+        rt, kt, vt, wt = inp                       # (N, K)
+        kv = kt[:, :, None] * vt[:, None, :]       # (N, K, V)
+        o = jnp.einsum('nk,nkv->nv', rt, s + u[:, :, None] * kv)
+        s = wt[:, :, None] * s + kv
+        return s, o
+
+    xs = jax.tree.map(lambda a: a.transpose(1, 0, 2), (r, k, v, w))
+    sT, o = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return o.transpose(1, 0, 2), sT
+
+
+def wkv_ref_vjp(r, k, v, w, u, s0, do, dsT):
+    """Reference gradients via jax.vjp over the scan (oracle for the
+    backward kernel)."""
+    def f(args):
+        return wkv_ref(*args)
+    out, vjp = jax.vjp(f, (r, k, v, w, u, s0))
+    (dr, dk, dv, dw, du, ds0), = vjp((do, dsT))
+    return dr, dk, dv, dw, du, ds0

@@ -1,0 +1,338 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: 512 placeholder
+host devices stand in for 2 TPU v5e pods; `jax.jit(step).lower(...).compile()`
+must succeed for every cell on the single-pod (16,16) and multi-pod (2,16,16)
+meshes. Per cell we record:
+
+  * memory_analysis()  — per-device bytes (does the cell fit 16 GB HBM?)
+  * cost_analysis()    — HLO FLOPs + bytes accessed
+  * collective bytes   — parsed from the optimized HLO, summed per op kind
+
+and derive the three roofline terms (EXPERIMENTS.md §Roofline):
+
+  compute    = FLOPs / (chips * 197e12 FLOP/s)         [bf16 MXU peak, v5e]
+  memory     = bytes / (chips * 819e9 B/s)             [HBM bandwidth]
+  collective = coll_bytes / (chips * 50e9 B/s)         [ICI per link]
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.configs.base import TrainConfig, shapes_for
+from repro.launch import hlo_analysis
+from repro.distributed.sharding import ShardingRules
+from repro.launch import shardings as SH
+from repro.launch import steps as ST
+from repro.launch.mesh import make_production_mesh
+from repro.train import trainer
+
+# ------------------------------------------------------- hardware constants
+
+PEAK_FLOPS = 197e12          # bf16 per chip, TPU v5e
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    'f64': 8, 's64': 8, 'u64': 8, 'c64': 8,
+    'f32': 4, 's32': 4, 'u32': 4,
+    'bf16': 2, 'f16': 2, 's16': 2, 'u16': 2,
+    's8': 1, 'u8': 1, 'pred': 1, 'f8e4m3fn': 1, 'f8e5m2': 1,
+}
+
+_COLLECTIVES = ('all-gather', 'all-reduce', 'reduce-scatter', 'all-to-all',
+                'collective-permute')
+
+_SHAPE_RE = re.compile(r'\b([a-z0-9]+)\[([0-9,]*)\]')
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(','):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in optimized HLO text.
+
+    HLO operands are printed with their shapes:
+        %ar = f32[512]{0} all-reduce(f32[512]{0} %x), replica_groups=...
+    We take the shapes inside the op's argument parentheses (the operands).
+    `start` variants (async collectives) are counted; `done` ops are skipped
+    so nothing is double-counted.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if ' = ' not in s:
+            continue
+        rhs = s.split(' = ', 1)[1]
+        for kind in _COLLECTIVES:
+            # match "all-gather(", "all-gather-start(" but not "-done("
+            m = re.search(rf'\b{kind}(-start)?\(', rhs)
+            if not m:
+                continue
+            args = rhs[m.end():]
+            depth = 1
+            end = 0
+            for i, ch in enumerate(args):
+                if ch == '(':
+                    depth += 1
+                elif ch == ')':
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            ops = args[:end]
+            out[kind] += sum(_shape_bytes(dt, dims)
+                             for dt, dims in _SHAPE_RE.findall(ops))
+            break
+    out['total'] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def roofline(flops: float, bytes_acc: float, coll_bytes: float,
+             chips: int) -> dict:
+    terms = {
+        'compute_s': flops / (chips * PEAK_FLOPS),
+        'memory_s': bytes_acc / (chips * HBM_BW),
+        'collective_s': coll_bytes / (chips * ICI_BW),
+    }
+    terms['bottleneck'] = max(terms, key=lambda k: terms[k]).split('_')[0]
+    return terms
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE) for train;
+    2 N D for one forward token batch (prefill/decode)."""
+    if getattr(cfg, 'family', None) == 'ranksvm':
+        # one oracle: X w and X^T v, dense bf16: 2 * 2 * m * n
+        return 4.0 * shape.m * shape.n
+    from repro.models.params import count_params
+    from repro.models import lm as LM
+
+    defs = LM.model_defs(cfg)
+    # active params: replace routed-expert weight count with top_k experts
+    from repro.models.params import _leaves
+    total = active = 0
+    for d in jax.tree.leaves(defs,
+                             is_leaf=lambda x: hasattr(x, 'shape')
+                             and hasattr(x, 'axes')):
+        import numpy as np
+        sz = int(np.prod(d.shape))
+        total += sz
+        if 'experts' in d.axes and cfg.moe is not None:
+            e = cfg.moe.num_experts
+            axis = d.axes.index('experts')
+            if d.shape[axis] == e:
+                sz = sz * cfg.moe.top_k // e
+        active += sz
+    if shape.kind == 'train':
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == 'prefill':
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    return 2.0 * active * shape.global_batch        # decode: 1 token / seq
+
+
+# ----------------------------------------------------------- cell builders
+
+
+def build_cell(arch: str, shape_name: str, mesh, variant: str = 'base'):
+    """Returns (jitted_fn, example_args) ready to .lower(*args).
+
+    variant='opt' selects the beyond-paper optimized path for the cells
+    hillclimbed in EXPERIMENTS.md §Perf (baseline records use 'base').
+    """
+    cfg = registry.get(arch)
+
+    if getattr(cfg, 'family', None) == 'ranksvm':
+        from repro.core import distributed as D
+        shape = D.REUTERS_1M
+        specs = D.input_specs(cfg, shape)
+        sh = D.arg_shardings(mesh)
+        fn = jax.jit(D.make_oracle_step(mesh, variant=variant),
+                     in_shardings=(sh['X'], sh['y'], sh['w'], sh['n_pairs']),
+                     out_shardings=D.out_shardings(mesh))
+        return fn, (specs['X'], specs['y'], specs['w'], specs['n_pairs']), \
+            cfg, shape
+
+    shape = {s.name: s for s in shapes_for(cfg)}[shape_name]
+    rules = ShardingRules(mesh)
+
+    if variant == 'opt':
+        import dataclasses as _dc
+        if cfg.attn == 'rwkv6':
+            # §Perf cell A: Pallas WKV kernel (VMEM-resident state)
+            cfg = _dc.replace(cfg, wkv_impl='kernel')
+        if cfg.moe is not None:
+            # §Perf cell B: expert-parallel local dispatch + combine psum
+            cfg = _dc.replace(cfg, moe_impl='ep')
+
+    if shape.kind == 'train':
+        tcfg = TrainConfig(remat='layer',
+                           microbatches=1)
+        step = trainer.make_train_step(cfg, tcfg, rules)
+        state = trainer.abstract_state(cfg)
+        batch = ST.train_batch_specs(cfg, shape)
+        in_sh = (SH.state_shardings(cfg, rules),
+                 SH.batch_shardings(cfg, shape, rules, batch))
+        out_sh = (SH.state_shardings(cfg, rules), SH.metric_shardings(rules))
+        fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(0,))
+        return fn, (state, batch), cfg, shape
+
+    from repro.models.params import abstract_params
+    from repro.models import lm as LM
+    params = abstract_params(LM.model_defs(cfg))
+    psh = SH.params_shardings(cfg, rules)
+
+    if shape.kind == 'prefill':
+        step = ST.make_prefill_step(cfg, rules)
+        batch = ST.prefill_batch_specs(cfg, shape)
+        in_sh = (psh, SH.batch_shardings(cfg, shape, rules, batch))
+        fn = jax.jit(step, in_shardings=in_sh)
+        return fn, (params, batch), cfg, shape
+
+    step = ST.make_decode_step(cfg, rules)
+    specs = ST.decode_batch_specs(cfg, shape)
+    dsh = SH.decode_arg_shardings(cfg, shape, rules, specs)
+    in_sh = (psh, dsh['cache'], dsh['batch'], dsh['pos'])
+    fn = jax.jit(step, in_shardings=in_sh, donate_argnums=(1,))
+    return fn, (params, specs['cache'], specs['batch'], specs['pos']), \
+        cfg, shape
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             variant: str = 'base') -> dict:
+    multi = mesh_kind == 'multi'
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = mesh.devices.size
+    rec = {'arch': arch, 'shape': shape_name, 'mesh': mesh_kind,
+           'chips': chips, 'variant': variant}
+    t0 = time.perf_counter()
+    with mesh:
+        fn, args, cfg, shape = build_cell(arch, shape_name, mesh, variant)
+        lowered = fn.lower(*args)
+        rec['lower_s'] = round(time.perf_counter() - t0, 1)
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        rec['compile_s'] = round(time.perf_counter() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        rec['memory'] = {
+            'argument_bytes': int(getattr(mem, 'argument_size_in_bytes', 0)),
+            'output_bytes': int(getattr(mem, 'output_size_in_bytes', 0)),
+            'temp_bytes': int(getattr(mem, 'temp_size_in_bytes', 0)),
+            'peak_bytes': int(getattr(mem, 'peak_memory_in_bytes', 0)) or None,
+        }
+        # raw XLA numbers (while bodies counted ONCE — kept for reference)
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        rec['xla_cost_raw'] = {
+            'flops': float(cost.get('flops', 0.0)),
+            'bytes_accessed': float(cost.get('bytes accessed', 0.0))}
+
+        # loop-aware analysis (launch.hlo_analysis): the roofline source.
+        # All numbers are PER DEVICE (the HLO is the per-partition program).
+        hlo = compiled.as_text()
+        ana = hlo_analysis.analyze(hlo)
+        rec['analysis'] = ana
+        rec['hlo_lines'] = hlo.count('\n')
+
+        flops = ana['flops'] * chips        # whole-job totals
+        # memory: the TPU-fusion-calibrated bytes model (bare elementwise
+        # ops fuse away); ana['bytes'] (raw per-op) kept as an upper bound.
+        bytes_acc = ana['bytes_fused'] * chips
+        coll_bytes = ana['collective_bytes'] * chips
+        rec['roofline'] = roofline(flops, bytes_acc, coll_bytes, chips)
+        rec['roofline']['memory_raw_s'] = ana['bytes'] / HBM_BW
+        rec['roofline']['collective_wire_s'] = (
+            ana['collective_wire_bytes'] / ICI_BW)   # per-chip wire time
+        mf = model_flops(cfg, shape)
+        rec['model_flops'] = mf
+        rec['useful_flops_frac'] = mf / flops if flops else None
+    return rec
+
+
+def iter_cells(mesh_kinds):
+    for arch, shape_name in registry.all_cells():
+        for mk in mesh_kinds:
+            yield arch, shape_name, mk
+    for mk in mesh_kinds:                      # the paper's own workload
+        yield 'ranksvm-linear', 'reuters_1m', mk
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--arch')
+    ap.add_argument('--shape')
+    ap.add_argument('--mesh', choices=['single', 'multi', 'both'],
+                    default='both')
+    ap.add_argument('--all', action='store_true')
+    ap.add_argument('--out', default='results/dryrun')
+    ap.add_argument('--variant', default='base', choices=['base', 'opt'])
+    ap.add_argument('--force', action='store_true',
+                    help='recompute cells that already have a result file')
+    args = ap.parse_args(argv)
+
+    mesh_kinds = ['single', 'multi'] if args.mesh == 'both' else [args.mesh]
+    if args.all:
+        cells = list(iter_cells(mesh_kinds))
+    else:
+        if not args.arch or not args.shape:
+            ap.error('need --arch and --shape, or --all')
+        cells = [(args.arch, args.shape, mk) for mk in mesh_kinds]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shape_name, mk in cells:
+        tag = f'{arch}__{shape_name}__{mk}'.replace('/', '_')
+        if args.variant != 'base':
+            tag += f'__{args.variant}'
+        path = os.path.join(args.out, tag + '.json')
+        if os.path.exists(path) and not args.force:
+            print(f'[skip] {tag}', flush=True)
+            continue
+        print(f'[cell] {tag} ...', flush=True)
+        try:
+            rec = run_cell(arch, shape_name, mk, args.variant)
+            rl = rec['roofline']
+            print(f'    ok  lower={rec["lower_s"]}s compile={rec["compile_s"]}s '
+                  f'flops/dev={rec["analysis"]["flops"]:.3e} '
+                  f'coll/dev={rec["analysis"]["collective_bytes"]:.3e}B '
+                  f'bottleneck={rl["bottleneck"]}', flush=True)
+        except Exception as e:
+            failures += 1
+            rec = {'arch': arch, 'shape': shape_name, 'mesh': mk,
+                   'error': repr(e), 'traceback': traceback.format_exc()}
+            print(f'    FAIL {e!r}', flush=True)
+        with open(path, 'w') as f:
+            json.dump(rec, f, indent=1)
+        jax.clear_caches()       # keep the long sweep's RSS bounded
+    print(f'done: {len(cells)} cells, {failures} failures', flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == '__main__':
+    sys.exit(main())

@@ -1,0 +1,482 @@
+"""Loop-aware cost model over optimized HLO text.
+
+`compiled.cost_analysis()` counts each while-loop *body once*, which makes it
+useless for scanned layer stacks (a 96-layer scan shows up as one layer).
+This module re-derives the three roofline inputs from `compiled.as_text()`:
+
+  * FLOPs       — dot ops exactly (2 * prod(result) * contracted size, read
+                  through a module-wide symbol table), elementwise/reduce ops
+                  approximately (1 flop/element); while bodies multiplied by
+                  their `known_trip_count` backend config, fusions/calls by
+                  reference.
+  * HBM bytes   — per top-level instruction: operand + result bytes, with
+                  fusion internals collapsed (a fusion moves its params +
+                  root, its body lives in registers/VMEM).
+  * collectives — per op kind: operand bytes (the assignment's definition)
+                  and estimated wire bytes per chip (ring schedules:
+                  all-reduce 2x, all-gather/reduce-scatter (g-1)/g x full),
+                  again trip-count aware.
+
+This is a static dry-run profile — the "profiler" for a machine we don't
+have. Accuracy is validated against closed-form matmul counts in
+tests/test_hlo_analysis.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+_DTYPE_BYTES = {
+    'f64': 8, 's64': 8, 'u64': 8, 'c64': 8, 'c128': 16,
+    'f32': 4, 's32': 4, 'u32': 4,
+    'bf16': 2, 'f16': 2, 's16': 2, 'u16': 2,
+    's8': 1, 'u8': 1, 'pred': 1, 'f8e4m3fn': 1, 'f8e5m2': 1,
+    'token': 0, 'opaque': 0,
+}
+
+_SHAPE_RE = re.compile(r'([a-z0-9]+)\[([0-9,]*)\]')
+_INSTR_RE = re.compile(
+    r'^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\((.*)$')
+_COMP_RE = re.compile(r'^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->')
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_RE = re.compile(r'replica_groups=\[(\d+),(\d+)\]')
+_GROUPS_LIST_RE = re.compile(r'replica_groups=\{\{([^}]*)\}')
+_CALL_RE = re.compile(r'(?:to_apply|body|calls)=%?([\w.\-]+)')
+_COND_RE = re.compile(r'condition=%?([\w.\-]+)')
+_CDIMS_RE = re.compile(r'lhs_contracting_dims=\{([0-9,]*)\}')
+
+_ELEMENTWISE = frozenset((
+    'add', 'subtract', 'multiply', 'divide', 'maximum', 'minimum', 'power',
+    'and', 'or', 'xor', 'not', 'negate', 'abs', 'sign', 'compare', 'select',
+    'exponential', 'log', 'tanh', 'rsqrt', 'sqrt', 'logistic', 'sine',
+    'cosine', 'expm1', 'log1p', 'floor', 'ceil', 'round-nearest-afz',
+    'clamp', 'atan2', 'remainder', 'shift-left', 'shift-right-logical',
+    'shift-right-arithmetic', 'cbrt', 'erf', 'exponential-minus-one'))
+_REDUCES = frozenset(('reduce', 'reduce-window'))
+_FREE = frozenset((
+    'parameter', 'constant', 'tuple', 'get-tuple-element', 'bitcast',
+    'after-all', 'partition-id', 'replica-id', 'iota', 'reshape'))
+_COLLECTIVES = ('all-gather', 'all-reduce', 'reduce-scatter', 'all-to-all',
+                'collective-permute')
+
+
+def _type_elems_bytes(type_str: str):
+    """Total (elements, bytes) across every shape literal in a type string
+    (handles tuples)."""
+    elems = nbytes = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(','):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str          # argument list + attributes (raw tail of the line)
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    dot_flops: float = 0.0
+    bytes: float = 0.0
+    bytes_fused: float = 0.0    # TPU-fusion-calibrated (see cost())
+    transcendentals: float = 0.0
+    # collective kind -> [operand_bytes, wire_bytes, op_count]
+    collectives: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: 'Cost', mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.dot_flops += other.dot_flops * mult
+        self.bytes += other.bytes * mult
+        self.bytes_fused += other.bytes_fused * mult
+        self.transcendentals += other.transcendentals * mult
+        for k, v in other.collectives.items():
+            cur = self.collectives.setdefault(k, [0.0, 0.0, 0.0])
+            cur[0] += v[0] * mult
+            cur[1] += v[1] * mult
+            cur[2] += v[2] * mult
+
+    def to_dict(self) -> dict:
+        coll = {k: {'operand_bytes': v[0], 'wire_bytes': v[1], 'count': v[2]}
+                for k, v in sorted(self.collectives.items())}
+        total_operand = sum(v[0] for v in self.collectives.values())
+        total_wire = sum(v[1] for v in self.collectives.values())
+        return {'flops': self.flops, 'dot_flops': self.dot_flops,
+                'bytes': self.bytes,
+                'bytes_fused': self.bytes_fused,
+                'transcendentals': self.transcendentals,
+                'collectives': coll,
+                'collective_bytes': total_operand,
+                'collective_wire_bytes': total_wire}
+
+
+class HloModule:
+    """Parsed HLO text: computations, instructions, module-wide symbols."""
+
+    def __init__(self, text: str):
+        self.computations: dict[str, list[Instr]] = {}
+        self.entry: str | None = None
+        self.symbols: dict[str, str] = {}    # instr/param name -> type str
+        self._parse(text)
+        self._cost_cache: dict[str, Cost] = {}
+
+    def _parse(self, text: str):
+        cur = None
+        for raw in text.splitlines():
+            if raw and not raw[0].isspace() and ('{' in raw):
+                m = _COMP_RE.match(raw)
+                if m:
+                    cur = m.group(1)
+                    self.computations[cur] = []
+                    if raw.startswith('ENTRY'):
+                        self.entry = cur
+                    # parameters: "name: type" pairs inside the header parens
+                    hdr = raw[m.end(1):]
+                    for pm in re.finditer(r'%?([\w.\-]+):\s*([^,()]*(?:\([^)]*\))?[^,]*)',
+                                          m.group(2)):
+                        self.symbols.setdefault(pm.group(1), pm.group(2))
+                    continue
+            if cur is None:
+                continue
+            m = _INSTR_RE.match(raw)
+            if not m:
+                continue
+            name, type_str, opcode, rest = m.groups()
+            self.computations[cur].append(
+                Instr(name, type_str, opcode, rest))
+            self.symbols[name] = type_str
+
+    # ------------------------------------------------------------- costing
+
+    def _operand_names(self, rest: str) -> list:
+        """Names inside the top-level parens of the op's argument list."""
+        depth = 1
+        out = []
+        for i, ch in enumerate(rest):
+            if ch == '(':
+                depth += 1
+            elif ch == ')':
+                depth -= 1
+                if depth == 0:
+                    rest = rest[:i]
+                    break
+        for m in re.finditer(r'%([\w.\-]+)', rest):
+            out.append(m.group(1))
+        return out
+
+    def _dot_flops(self, ins: Instr) -> float:
+        res_elems, _ = _type_elems_bytes(ins.type_str)
+        cd = _CDIMS_RE.search(ins.rest)
+        ops = self._operand_names(ins.rest)
+        k = 1
+        if cd and ops:
+            lhs_t = self.symbols.get(ops[0], '')
+            sm = _SHAPE_RE.search(lhs_t)
+            if sm:
+                dims = [int(d) for d in sm.group(2).split(',') if d]
+                for ci in cd.group(1).split(','):
+                    if ci and int(ci) < len(dims):
+                        k *= dims[int(ci)]
+        return 2.0 * res_elems * k
+
+    def _instr_bytes(self, ins: Instr) -> float:
+        _, res_b = _type_elems_bytes(ins.type_str)
+        op = ins.opcode
+        # Slicing ops only touch the slice, not the whole operand; counting
+        # the full operand would charge a scanned weight stack L times.
+        if op in ('dynamic-slice', 'slice', 'gather'):
+            return 2.0 * res_b
+        if op == 'dynamic-update-slice':
+            ops = self._operand_names(ins.rest)
+            upd_b = 0
+            if len(ops) > 1:
+                _, upd_b = _type_elems_bytes(self.symbols.get(ops[1], ''))
+            return 2.0 * max(float(upd_b), 1.0)
+        opb = 0
+        for nm in self._operand_names(ins.rest):
+            _, b = _type_elems_bytes(self.symbols.get(nm, ''))
+            opb += b
+        return float(res_b + opb)
+
+    def _fusion_bytes(self, ins: Instr, comp: str) -> float:
+        """Fusion-boundary traffic: root result + params, where a param read
+        only through dynamic-slice/gather inside the fused body is charged at
+        consumer size (a fused scan-weight slice reads one layer, not the
+        whole stack)."""
+        _, res_b = _type_elems_bytes(ins.type_str)
+        body = self.computations.get(comp, ())
+        params = [i for i in body if i.opcode == 'parameter']
+        consumers: dict[str, list] = {p.name: [] for p in params}
+        for i in body:
+            if i.opcode == 'parameter':
+                continue
+            for nm in self._operand_names(i.rest):
+                if nm in consumers:
+                    consumers[nm].append(i)
+        total = float(res_b)
+        for p in params:
+            cons = consumers.get(p.name, [])
+            if cons and all(c.opcode in ('dynamic-slice', 'gather', 'slice')
+                            for c in cons):
+                total += sum(_type_elems_bytes(c.type_str)[1] for c in cons)
+            elif cons and all(c.opcode == 'dynamic-update-slice'
+                              for c in cons):
+                # in-place write of a slice into a big (scan-stacked) buffer:
+                # traffic is the update, not the whole buffer. The result
+                # res_b of the fusion still over-counts (it is the full
+                # buffer); subtract it back down to the update size.
+                upd = 0.0
+                for c in cons:
+                    ops = self._operand_names(c.rest)
+                    if len(ops) > 1:
+                        _, ub = _type_elems_bytes(
+                            self.symbols.get(ops[1], ''))
+                        upd += ub
+                _, pb = _type_elems_bytes(p.type_str)
+                total += upd
+                total -= max(0.0, pb - upd)     # undo full-size result charge
+            else:
+                _, b = _type_elems_bytes(p.type_str)
+                total += b
+        return max(total, 0.0)
+
+    def _collective(self, ins: Instr, kind: str):
+        _, res_b = _type_elems_bytes(ins.type_str)
+        g = 1
+        gm = _GROUPS_RE.search(ins.rest)
+        if gm:
+            g = int(gm.group(2))
+        else:
+            gl = _GROUPS_LIST_RE.search(ins.rest)
+            if gl:
+                g = len([x for x in gl.group(1).split(',') if x.strip()])
+        g = max(g, 1)
+        if kind == 'all-gather':
+            operand = res_b / g
+            wire = res_b * (g - 1) / g
+        elif kind == 'all-reduce':
+            operand = float(res_b)
+            wire = 2.0 * res_b * (g - 1) / g
+        elif kind == 'reduce-scatter':
+            operand = float(res_b) * g
+            wire = res_b * (g - 1)
+        else:                                   # all-to-all / permute
+            operand = float(res_b)
+            wire = float(res_b)
+        return operand, wire
+
+    def cost(self, comp: str | None = None) -> Cost:
+        comp = comp or self.entry
+        if comp in self._cost_cache:
+            return self._cost_cache[comp]
+        total = Cost()
+        self._cost_cache[comp] = total          # break cycles defensively
+        for ins in self.computations.get(comp, ()):
+            op = ins.opcode
+            if op == 'while':
+                trip = 1
+                tm = _TRIP_RE.search(ins.rest)
+                if tm:
+                    trip = int(tm.group(1))
+                body = _CALL_RE.search(ins.rest)
+                cond = _COND_RE.search(ins.rest)
+                if body:
+                    total.add(self.cost(body.group(1)), trip)
+                if cond:
+                    total.add(self.cost(cond.group(1)), trip)
+                continue
+            if op in ('fusion', 'call', 'map'):
+                cm = _CALL_RE.search(ins.rest)
+                if cm:
+                    sub = self.cost(cm.group(1))
+                    # flops from the whole fused body; bytes only at the
+                    # fusion boundary (params + root live in HBM)
+                    total.flops += sub.flops
+                    total.dot_flops += sub.dot_flops
+                    total.transcendentals += sub.transcendentals
+                    for k, v in sub.collectives.items():
+                        cur = total.collectives.setdefault(k, [0., 0., 0.])
+                        cur[0] += v[0]; cur[1] += v[1]; cur[2] += v[2]
+                    fb = self._fusion_bytes(ins, cm.group(1))
+                    total.bytes += fb
+                    total.bytes_fused += fb
+                else:
+                    b = self._instr_bytes(ins)
+                    total.bytes += b
+                    total.bytes_fused += b
+                continue
+            if op == 'conditional':
+                for cm in re.finditer(
+                        r'(?:true_computation|false_computation|'
+                        r'branch_computations=\{)([^,}]+)', ins.rest):
+                    total.add(self.cost(cm.group(1).strip('% ')), 1.0)
+                b = self._instr_bytes(ins)
+                total.bytes += b
+                total.bytes_fused += b
+                continue
+
+            matched_coll = None
+            for kind in _COLLECTIVES:
+                if op == kind or op == kind + '-start':
+                    matched_coll = kind
+                    break
+            if matched_coll:
+                operand, wire = self._collective(ins, matched_coll)
+                cur = total.collectives.setdefault(matched_coll,
+                                                   [0., 0., 0.])
+                cur[0] += operand
+                cur[1] += wire
+                cur[2] += 1
+                b = self._instr_bytes(ins)
+                total.bytes += b
+                total.bytes_fused += b
+                continue
+            if op.endswith('-done'):
+                continue
+
+            if op == 'dot':
+                f = self._dot_flops(ins)
+                total.flops += f
+                total.dot_flops += f
+                b = self._instr_bytes(ins)
+                total.bytes += b
+                total.bytes_fused += b
+                continue
+            if op == 'convolution':
+                # rough: 2 * out_elems * (prod of kernel spatial+channels)
+                res_elems, _ = _type_elems_bytes(ins.type_str)
+                ops = self._operand_names(ins.rest)
+                k_elems = 1.0
+                if len(ops) > 1:
+                    k_elems, _ = _type_elems_bytes(
+                        self.symbols.get(ops[1], ''))
+                total.flops += 2.0 * res_elems * max(k_elems, 1.0)
+                total.dot_flops += 2.0 * res_elems * max(k_elems, 1.0)
+                b = self._instr_bytes(ins)
+                total.bytes += b
+                total.bytes_fused += b
+                continue
+            if op in _FREE:
+                continue
+            if op in _ELEMENTWISE or op in _REDUCES or op in (
+                    'convert', 'broadcast', 'transpose', 'copy', 'slice',
+                    'dynamic-slice', 'dynamic-update-slice', 'pad', 'gather',
+                    'scatter', 'concatenate', 'sort', 'rng', 'cholesky',
+                    'triangular-solve', 'custom-call', 'reverse', 'rev',
+                    'reduce-precision', 'clz', 'popcnt', 'dynamic-reshape'):
+                elems, _ = _type_elems_bytes(ins.type_str)
+                if op in _ELEMENTWISE or op in _REDUCES:
+                    total.flops += elems
+                    if op in ('exponential', 'log', 'tanh', 'logistic',
+                              'sine', 'cosine', 'power', 'rsqrt', 'sqrt',
+                              'expm1', 'log1p', 'erf', 'cbrt'):
+                        total.transcendentals += elems
+                if op == 'sort':
+                    # comparison-network depth ~ log^2 for XLA's sort
+                    total.flops += elems * 10
+                b = self._instr_bytes(ins)
+                total.bytes += b
+                # bytes_fused: the TPU-calibrated model assumes bare
+                # elementwise / convert / broadcast / transpose / reduce ops
+                # fuse into their producers/consumers (they would on TPU;
+                # CPU XLA leaves many unfused). Ops that genuinely move HBM
+                # data (copy/slice/scatter/sort/concat/custom-call) count.
+                if not (op in _ELEMENTWISE or op in _REDUCES or op in (
+                        'convert', 'broadcast', 'transpose')):
+                    total.bytes_fused += b
+                continue
+            # unknown op: count its data movement, no flops
+            b = self._instr_bytes(ins)
+            total.bytes += b
+            total.bytes_fused += b
+        self._cost_cache[comp] = total
+        return total
+
+
+def analyze(hlo_text: str) -> dict:
+    return HloModule(hlo_text).cost().to_dict()
+
+
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def breakdown(hlo_text: str, top: int = 25):
+    """Trip-count-weighted per-instruction profile: the dry-run 'profiler'.
+
+    Returns (per_opcode, top_instrs) where top_instrs are the `top` heaviest
+    instructions by bytes with their jax op_name metadata — tells you WHERE
+    (which model code) the traffic/flops/collective bytes come from.
+    """
+    mod = HloModule(hlo_text)
+    per_op: dict[str, list] = {}
+    instrs: list = []
+
+    def walk(comp: str, mult: float, seen: tuple):
+        if comp in seen:
+            return
+        for ins in mod.computations.get(comp, ()):
+            op = ins.opcode
+            if op == 'while':
+                trip = 1
+                tm = _TRIP_RE.search(ins.rest)
+                if tm:
+                    trip = int(tm.group(1))
+                b = _CALL_RE.search(ins.rest)
+                c = _COND_RE.search(ins.rest)
+                if b:
+                    walk(b.group(1), mult * trip, seen + (comp,))
+                if c:
+                    walk(c.group(1), mult * trip, seen + (comp,))
+                continue
+            if op in ('fusion', 'call', 'map'):
+                cm = _CALL_RE.search(ins.rest)
+                sub = mod.cost(cm.group(1)) if cm else Cost()
+                nbytes = (mod._fusion_bytes(ins, cm.group(1)) if cm
+                          else mod._instr_bytes(ins))
+                flops = sub.flops
+                coll = sum(v[0] for v in sub.collectives.values())
+            elif op in _FREE or op.endswith('-done'):
+                continue
+            else:
+                matched = None
+                for kind in _COLLECTIVES:
+                    if op == kind or op == kind + '-start':
+                        matched = kind
+                        break
+                if matched:
+                    coll, _ = mod._collective(ins, matched)
+                else:
+                    coll = 0.0
+                nbytes = mod._instr_bytes(ins)
+                flops = mod._dot_flops(ins) if op == 'dot' else (
+                    _type_elems_bytes(ins.type_str)[0]
+                    if op in _ELEMENTWISE or op in _REDUCES else 0.0)
+            agg = per_op.setdefault(op, [0.0, 0.0, 0.0])
+            agg[0] += flops * mult
+            agg[1] += nbytes * mult
+            agg[2] += coll * mult
+            meta = _META_RE.search(ins.rest)
+            instrs.append({
+                'op': op, 'name': ins.name,
+                'flops': flops * mult, 'bytes': nbytes * mult,
+                'collective_bytes': coll * mult, 'trip_mult': mult,
+                'where': meta.group(1) if meta else ''})
+
+    walk(mod.entry, 1.0, ())
+    instrs.sort(key=lambda r: -(r['bytes'] + r['collective_bytes'] * 10))
+    per_op_d = {k: {'flops': v[0], 'bytes': v[1], 'collective_bytes': v[2]}
+                for k, v in sorted(per_op.items(),
+                                   key=lambda kv: -kv[1][1])}
+    return per_op_d, instrs[:top]

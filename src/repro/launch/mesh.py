@@ -1,0 +1,21 @@
+"""Production mesh construction (assignment §MULTI-POD DRY-RUN).
+
+A FUNCTION, not a module constant: importing this module never touches jax
+device state. Single pod: (16, 16) = 256 chips ('data', 'model'); multi-pod:
+(2, 16, 16) = 512 chips ('pod', 'data', 'model').
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ('pod', 'data', 'model') if multi_pod else ('data', 'model')
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh for tests (e.g. (2, 2) on 4 host devices)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))

@@ -1,0 +1,76 @@
+"""Sharding-tree builders for each (arch x shape) dry-run / launch cell.
+
+Maps the ParamDef logical axes and the CACHE_AXES tables onto a concrete
+mesh via distributed.sharding.ShardingRules, producing the in/out sharding
+pytrees handed to jax.jit for lowering.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import ShardingRules
+from repro.models import lm as LM
+from repro.models.params import param_shardings
+
+
+def _repl(mesh):
+    return NamedSharding(mesh, P())
+
+
+def state_shardings(cfg: ModelConfig, rules: ShardingRules):
+    """Sharding tree matching trainer.init_state / abstract_state."""
+    defs = LM.model_defs(cfg)
+    pshard = param_shardings(defs, rules)
+    mesh = rules.mesh
+
+    def opt_leaf(s):
+        return {'master': s, 'm': s, 'v': s}
+    opt = {'mu': jax.tree.map(opt_leaf, pshard,
+                              is_leaf=lambda x: isinstance(x, NamedSharding)),
+           'count': _repl(mesh)}
+    return {'params': pshard, 'opt': opt, 'step': _repl(mesh)}
+
+
+def params_shardings(cfg: ModelConfig, rules: ShardingRules):
+    return param_shardings(LM.model_defs(cfg), rules)
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig,
+                    rules: ShardingRules, specs: dict):
+    """Shard every batch leaf's leading (batch) dim over ('pod','data')."""
+    out = {}
+    for k, v in specs.items():
+        axes = ['batch'] + ['none'] * (len(v.shape) - 1)
+        out[k] = rules.sharding(axes, v.shape)
+    return out
+
+
+def cache_shardings(cfg: ModelConfig, rules: ShardingRules, cache_struct):
+    out = {}
+    for k, v in cache_struct.items():
+        axes = LM.CACHE_AXES[k]
+        out[k] = rules.sharding(axes, v.shape)
+    return out
+
+
+def decode_arg_shardings(cfg: ModelConfig, shape: ShapeConfig,
+                         rules: ShardingRules, specs: dict):
+    """Shardings for the decode-step args {batch, cache, pos}."""
+    return {
+        'batch': batch_shardings(cfg, shape, rules, specs['batch']),
+        'cache': cache_shardings(cfg, rules, specs['cache']),
+        'pos': _repl(rules.mesh),
+    }
+
+
+def metric_shardings(rules: ShardingRules):
+    mesh = rules.mesh
+    return {'loss': _repl(mesh), 'gnorm': _repl(mesh), 'lr': _repl(mesh)}
+
+
+# NOTE: batch-1 long-context SP falls out of ShardingRules.spec's
+# divisibility + axis-dedupe fallback: cache_batch can't take 'data' when
+# batch == 1, so cache_seq (listed next in CACHE_AXES) claims it instead.

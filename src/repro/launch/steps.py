@@ -1,0 +1,85 @@
+"""Step builders + ShapeDtypeStruct input specs for every (arch x shape) cell.
+
+`input_specs(cfg, shape)` is the no-allocation stand-in generator used by the
+dry-run: weak-type-correct, shardable, covering every model input (tokens /
+frontend embeddings / KV caches / position counters).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.models import lm as LM
+
+i32 = jnp.int32
+bf16 = jnp.bfloat16
+
+
+def sd(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.frontend == 'vision':
+        f = cfg.frontend_tokens
+        return {'tokens': sd((b, s - f), i32),
+                'image_embeds': sd((b, f, cfg.d_model), bf16),
+                'targets': sd((b, s - f), i32)}
+    if cfg.frontend == 'audio':
+        return {'frame_embeds': sd((b, s, cfg.d_model), bf16),
+                'targets': sd((b, s), i32)}
+    return {'tokens': sd((b, s), i32), 'targets': sd((b, s), i32)}
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    specs = train_batch_specs(cfg, shape)
+    specs.pop('targets')
+    return specs
+
+
+def decode_batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    b = shape.global_batch
+    if cfg.frontend == 'audio':
+        batch = {'frame_embeds': sd((b, 1, cfg.d_model), bf16)}
+    else:
+        batch = {'tokens': sd((b, 1), i32)}
+    cache = LM.cache_struct(cfg, b, shape.seq_len)
+    return {'batch': batch, 'cache': cache, 'pos': sd((), i32)}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    if shape.kind == 'train':
+        return train_batch_specs(cfg, shape)
+    if shape.kind == 'prefill':
+        return prefill_batch_specs(cfg, shape)
+    return decode_batch_specs(cfg, shape)
+
+
+# ----------------------------------------------------------- step builders
+
+
+def make_prefill_step(cfg: ModelConfig, shd):
+    def prefill_step(params, batch):
+        return LM.forward_prefill(params, cfg, batch, shd)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, shd):
+    def decode_step(params, cache, batch, pos):
+        return LM.forward_decode(params, cfg, cache, batch, pos, shd)
+    return decode_step
+
+
+def make_step(cfg: ModelConfig, shape: ShapeConfig, shd,
+              tcfg: TrainConfig | None = None):
+    """(step_fn, example_args_spec) for the cell — args exclude params/state."""
+    from repro.train.trainer import make_train_step
+    if shape.kind == 'train':
+        tcfg = tcfg or TrainConfig()
+        return make_train_step(cfg, tcfg, shd), input_specs(cfg, shape)
+    if shape.kind == 'prefill':
+        return make_prefill_step(cfg, shd), input_specs(cfg, shape)
+    return make_decode_step(cfg, shd), input_specs(cfg, shape)

@@ -1,0 +1,1 @@
+from . import layers, lm, mamba, params, rwkv6  # noqa: F401

@@ -1,0 +1,446 @@
+"""Transformer building blocks: norms, RoPE, GQA/MLA attention, FFN, MoE.
+
+Every block has a `*_defs(cfg)` param-declaration and a matching forward
+function over the resulting pytree. Attention uses a blockwise online-softmax
+(flash-style) formulation in pure JAX so that 32k prefill never materializes
+the (S, S) score matrix; XLA maps it to MXU matmuls per block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .params import ParamDef
+
+f32 = jnp.float32
+
+# ---------------------------------------------------------------- norms/rope
+
+
+def rmsnorm_defs(d):
+    return {'scale': ParamDef((d,), ('embed_act',), init='ones')}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    xf = x.astype(f32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * p['scale']
+
+
+def rope(x, positions, theta: float):
+    """x: (..., T, H, D) with D even; positions: (..., T)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=f32) / half)
+    ang = positions[..., None].astype(f32) * freq          # (..., T, half)
+    cos = jnp.cos(ang)[..., None, :]                        # (..., T, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(f32), x[..., half:].astype(f32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+
+
+def attention_defs(cfg):
+    d, h, g, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    defs = {
+        'wq': ParamDef((d, h * hd), ('embed', 'heads')),
+        'wk': ParamDef((d, g * hd), ('embed', 'kv_heads')),
+        'wv': ParamDef((d, g * hd), ('embed', 'kv_heads')),
+        'wo': ParamDef((h * hd, d), ('heads', 'embed')),
+    }
+    if cfg.qkv_bias:
+        defs['bq'] = ParamDef((h * hd,), ('heads',), init='zeros')
+        defs['bk'] = ParamDef((g * hd,), ('kv_heads',), init='zeros')
+        defs['bv'] = ParamDef((g * hd,), ('kv_heads',), init='zeros')
+    return defs
+
+
+def _repeat_kv(x, n_rep: int):
+    """(B, S, G, D) -> (B, S, G*n_rep, D) without copying until matmul."""
+    if n_rep == 1:
+        return x
+    b, s, g, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :],
+                            (b, s, g, n_rep, d)).reshape(b, s, g * n_rep, d)
+
+
+def blockwise_attention(q, k, v, *, causal: bool, q_offset=0,
+                        block_kv: int = 1024, kv_len=None):
+    """Online-softmax attention. q: (B,T,H,D); k,v: (B,S,H,D).
+
+    Never materializes (T, S); scans KV in blocks with running max/denom.
+    `kv_len`: optional actual cache length (positions >= kv_len are masked) —
+    used by decode steps where the cache is a fixed-size ring.
+    """
+    b, t, h, dh = q.shape
+    s = k.shape[1]
+    blk = min(block_kv, s)
+    nblk = s // blk if s % blk == 0 else -(-s // blk)
+    pad = nblk * blk - s
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    scale = dh ** -0.5
+    q = (q * scale).astype(q.dtype)
+    qpos = q_offset + jnp.arange(t)
+
+    kb = k.reshape(b, nblk, blk, h, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nblk, blk, h, dh).transpose(1, 0, 2, 3, 4)
+
+    def step(carry, inp):
+        acc, m, denom, j = carry
+        kj, vj = inp                                   # (B, blk, H, D)
+        sc = jnp.einsum('bthd,bshd->bhts', q, kj,
+                        preferred_element_type=f32)    # (B,H,T,blk)
+        kpos = j * blk + jnp.arange(blk)
+        mask = jnp.ones((t, blk), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if kv_len is not None:
+            mask &= kpos[None, :] < kv_len
+        if pad:
+            mask &= kpos[None, :] < s
+        sc = jnp.where(mask[None, None], sc, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        # guard: fully-masked rows keep m == -inf; exp(-inf - -inf) -> nan
+        m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+        p = jnp.exp(sc - m_safe[..., None])
+        # exp(-inf - m_safe) = 0 zeroes the first-block correction; never
+        # rewrite m's -inf to 0 here (exp(0 - very-negative-max) overflows).
+        corr = jnp.exp(m - m_safe)
+        denom = denom * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum('bhts,bshd->bthd', p.astype(q.dtype), vj,
+                        preferred_element_type=f32)
+        acc = acc * corr.transpose(0, 2, 1)[..., None] + pv
+        return (acc, m_new, denom, j + 1), None
+
+    acc0 = jnp.zeros((b, t, h, dh), f32)
+    m0 = jnp.full((b, h, t), -jnp.inf, f32)
+    den0 = jnp.zeros((b, h, t), f32)
+    (acc, m, denom, _), _ = jax.lax.scan(step, (acc0, m0, den0, 0), (kb, vb))
+    denom = jnp.maximum(denom, 1e-30)
+    return (acc / denom.transpose(0, 2, 1)[..., None]).astype(q.dtype)
+
+
+def gqa_attention(p, cfg, x, positions, shd, *, cache_kv=None, cache_len=None,
+                  decode=False):
+    """Returns (out, (k, v)) — k/v are this call's new keys/values (pre-cache).
+
+    Train/prefill: full causal self-attention over x.
+    Decode: x is (B, 1, d); caller provides cache (B, S, G, D) pair in
+    cache_kv and the current length; we attend over cache + new token.
+    """
+    b, t, d = x.shape
+    h, g, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum('btd,dk->btk', x, p['wq'])
+    k = jnp.einsum('btd,dk->btk', x, p['wk'])
+    v = jnp.einsum('btd,dk->btk', x, p['wv'])
+    if cfg.qkv_bias:
+        q, k, v = q + p['bq'], k + p['bk'], v + p['bv']
+    q = shd.constrain(q.reshape(b, t, h, hd),
+                      ('batch', 'seq', 'heads', 'head_dim'))
+    k = k.reshape(b, t, g, hd)
+    v = v.reshape(b, t, g, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    new_kv = (k, v)
+
+    rep = h // g
+    if decode:
+        ck, cv = cache_kv
+        pos = cache_len  # scalar: tokens already in cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, pos, 0, 0))
+        kk = _repeat_kv(ck, rep)
+        vv = _repeat_kv(cv, rep)
+        out = blockwise_attention(q, kk, vv, causal=False,
+                                  kv_len=pos + 1, block_kv=2048)
+        new_kv = (ck, cv)
+    else:
+        kk = _repeat_kv(k, rep)
+        vv = _repeat_kv(v, rep)
+        out = blockwise_attention(q, kk, vv, causal=True, block_kv=1024)
+    out = jnp.einsum('btk,kd->btd', out.reshape(b, t, h * hd), p['wo'])
+    return shd.constrain(out, ('batch', 'seq', 'embed_act')), new_kv
+
+
+# ------------------------------------------------------------------- MLA
+
+
+def mla_defs(cfg):
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    lora, rdim = cfg.mla_kv_lora, cfg.mla_rope_dim
+    return {
+        'wq': ParamDef((d, h * (hd + rdim)), ('embed', 'heads')),
+        'w_dkv': ParamDef((d, lora), ('embed', 'kv_lora')),
+        'w_krope': ParamDef((d, rdim), ('embed', 'none')),
+        'w_uk': ParamDef((lora, h * hd), ('kv_lora', 'heads')),
+        'w_uv': ParamDef((lora, h * hd), ('kv_lora', 'heads')),
+        'wo': ParamDef((h * hd, d), ('heads', 'embed')),
+    }
+
+
+def mla_attention(p, cfg, x, positions, shd, *, cache=None, cache_len=None,
+                  decode=False):
+    """Multi-head Latent Attention (DeepSeek-V2). Cache stores only the
+    compressed c_kv (lora) + the shared rope key — the MLA memory win.
+
+    Returns (out, new_cache) with cache = (c_kv: (B,S,lora), k_rope: (B,S,r)).
+    """
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    lora, rdim = cfg.mla_kv_lora, cfg.mla_rope_dim
+
+    q = jnp.einsum('btd,dk->btk', x, p['wq']).reshape(b, t, h, hd + rdim)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    ckv_new = jnp.einsum('btd,dl->btl', x, p['w_dkv'])          # (B,T,lora)
+    krope_new = rope(jnp.einsum('btd,dr->btr', x, p['w_krope'])[:, :, None, :],
+                     positions, cfg.rope_theta)[:, :, 0, :]      # (B,T,r)
+
+    if decode:
+        ckv, krope = cache
+        pos = cache_len
+        ckv = jax.lax.dynamic_update_slice(ckv, ckv_new.astype(ckv.dtype),
+                                           (0, pos, 0))
+        krope = jax.lax.dynamic_update_slice(
+            krope, krope_new.astype(krope.dtype), (0, pos, 0))
+        kv_len = pos + 1
+        new_cache = (ckv, krope)
+    else:
+        ckv, krope = ckv_new, krope_new
+        kv_len = None
+        new_cache = (ckv_new, krope_new)
+
+    k_nope = jnp.einsum('bsl,lk->bsk', ckv, p['w_uk']).reshape(
+        b, -1, h, hd)
+    vfull = jnp.einsum('bsl,lk->bsk', ckv, p['w_uv']).reshape(
+        b, -1, h, hd)
+    k_rope_b = jnp.broadcast_to(krope[:, :, None, :],
+                                (b, k_nope.shape[1], h, rdim))
+    kfull = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+    # pad v to head_dim+rdim so one blockwise call handles both
+    vpad = jnp.pad(vfull, ((0, 0), (0, 0), (0, 0), (0, rdim)))
+    out = blockwise_attention(qfull, kfull, vpad, causal=not decode,
+                              kv_len=kv_len,
+                              block_kv=2048 if decode else 1024)
+    out = out[..., :hd].reshape(b, t, h * hd).astype(x.dtype)
+    out = jnp.einsum('btk,kd->btd', out, p['wo'])
+    return shd.constrain(out, ('batch', 'seq', 'embed_act')), new_cache
+
+
+# ------------------------------------------------------------------- FFN
+
+
+def mlp_defs(cfg, d_ff=None):
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    if cfg.act == 'sq_relu':
+        return {'w1': ParamDef((d, ff), ('embed', 'ffn')),
+                'w2': ParamDef((ff, d), ('ffn', 'embed'))}
+    return {'w1': ParamDef((d, ff), ('embed', 'ffn')),
+            'w3': ParamDef((d, ff), ('embed', 'ffn')),
+            'w2': ParamDef((ff, d), ('ffn', 'embed'))}
+
+
+def mlp(p, cfg, x, shd):
+    if cfg.act == 'sq_relu':
+        hgelu = jnp.einsum('btd,df->btf', x, p['w1'])
+        h = jnp.square(jax.nn.relu(hgelu))
+    else:
+        h = jax.nn.silu(jnp.einsum('btd,df->btf', x, p['w1'])) * \
+            jnp.einsum('btd,df->btf', x, p['w3'])
+    h = shd.constrain(h, ('batch', 'seq', 'ffn'))
+    return jnp.einsum('btf,fd->btd', h, p['w2'])
+
+
+# ------------------------------------------------------------------- MoE
+
+
+def moe_defs(cfg):
+    m = cfg.moe
+    d, ff, e = cfg.d_model, m.moe_d_ff, m.num_experts
+    defs = {
+        'router': ParamDef((d, e), ('embed', 'experts'), scale=0.02),
+        'w1': ParamDef((e, d, ff), ('experts', 'embed', 'ffn')),
+        'w3': ParamDef((e, d, ff), ('experts', 'embed', 'ffn')),
+        'w2': ParamDef((e, ff, d), ('experts', 'ffn', 'embed')),
+    }
+    if m.shared_experts:
+        sff = m.moe_d_ff * m.shared_experts
+        defs['shared'] = mlp_defs(cfg, d_ff=sff)
+    return defs
+
+
+def moe_ffn(p, cfg, x, shd):
+    """Top-k capacity-based MoE with gather dispatch / scatter-add combine.
+
+    Tokens are gathered per expert into an (E, C, d) buffer (C from the
+    capacity factor), run through the expert FFN as one batched einsum
+    (expert-parallel over the 'model' mesh axis), and combined back with the
+    router weights. Overflowed tokens are dropped (standard capacity trick) —
+    with cf=1.25 this affects <1% of tokens at convergence-scale loads.
+    """
+    m = cfg.moe
+    b, t, d = x.shape
+    n = b * t
+    e, k = m.num_experts, m.top_k
+    cap = int(max(1, (n * k / e) * m.capacity_factor))
+    cap = -(-cap // 8) * 8  # align
+
+    xf = x.reshape(n, d)
+    logits = jnp.einsum('nd,de->ne', xf, p['router'],
+                        preferred_element_type=f32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                      # (n, k)
+    gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+
+    # position of each (token, slot) within its expert queue
+    flat_e = idx.reshape(-1)                                  # (n*k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)       # (n*k, e)
+    pos = (jnp.cumsum(onehot, axis=0) - 1) * onehot           # (n*k, e)
+    pos = jnp.sum(pos, axis=-1)                               # (n*k,)
+    keep = pos < cap
+
+    # scatter token ids into the (e, cap) dispatch table; n = sentinel row
+    tok_of_slot = jnp.repeat(jnp.arange(n), k)
+    target = jnp.where(keep, flat_e * cap + pos, e * cap)     # overflow bin
+    table = jnp.full((e * cap + 1,), n, jnp.int32).at[target].set(
+        tok_of_slot.astype(jnp.int32), mode='drop')
+    table = table[:e * cap].reshape(e, cap)
+
+    xpad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)
+    x_e = jnp.take(xpad, table, axis=0)                       # (e, cap, d)
+    x_e = shd.constrain(x_e, ('experts', 'expert_cap', 'embed_act'))
+
+    h = jax.nn.silu(jnp.einsum('ecd,edf->ecf', x_e, p['w1'])) * \
+        jnp.einsum('ecd,edf->ecf', x_e, p['w3'])
+    y_e = jnp.einsum('ecf,efd->ecd', h, p['w2'])              # (e, cap, d)
+
+    # combine: route each kept slot's output back, weighted by its gate
+    slot_gate = jnp.where(keep, gate.reshape(-1), 0.0)        # (n*k,)
+    y_slots = y_e.reshape(e * cap, d)
+    slot_src = jnp.where(keep, flat_e * cap + pos, 0)
+    y_tok = jnp.take(y_slots, slot_src, axis=0) * slot_gate[:, None]
+    y = jnp.sum(y_tok.reshape(n, k, d), axis=1)
+
+    if m.shared_experts:
+        y = y + mlp(p['shared'], cfg, xf[None], shd)[0]
+    return y.reshape(b, t, d).astype(x.dtype)
+
+
+def moe_ffn_ep(p, cfg, x, shd):
+    """Expert-parallel MoE with a LOCAL dispatch + one combine psum
+    (§Perf cell B). Requires shd.mesh (falls back to moe_ffn without one).
+
+    Why: the gather-dispatch of `moe_ffn` redistributes tokens from the
+    data-sharded buffer into the expert(model)-sharded (E, C, d) buffer;
+    XLA's SPMD pass lowers that cross-axis gather/scatter into masked
+    all-reduces of the full token buffer (~8 GB/layer/device on the
+    deepseek train cell). But activations are already REPLICATED over the
+    'model' axis — every model rank holds all of its data-shard's tokens.
+    So each rank can gather tokens for its local experts with zero
+    communication, run the expert FFN, and the only collective needed is
+    the combine: one bf16 psum of (n_local, d) over 'model'.
+
+    Capacity is per data-shard (cap_l = n_local * k / E * cf), the standard
+    EP formulation — slightly different drop behavior than the global-
+    capacity baseline, same expected drop rate.
+    """
+    mesh = getattr(shd, 'mesh', None)
+    if mesh is None:
+        return moe_ffn(p, cfg, x, shd)
+    m = cfg.moe
+    b, t, d = x.shape
+    n = b * t
+    e, k = m.num_experts, m.top_k
+    rows = tuple(a for a in ('pod', 'data') if a in mesh.axis_names)
+    msize = mesh.shape['model']
+    if e % msize:
+        return moe_ffn(p, cfg, x, shd)           # experts must divide EP
+    e_loc = e // msize
+
+    xf = x.reshape(n, d)
+    logits = jnp.einsum('nd,de->ne', xf, p['router'],
+                        preferred_element_type=f32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                      # (n, k)
+    gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+
+    def local_moe(xf_l, gate_l, idx_l, w1, w3, w2):
+        # shapes (per device): xf_l (n_loc, d); idx/gate (n_loc, k);
+        # w1/w3 (e_loc, d/|data|, ff); w2 (e_loc, ff, d/|data|).
+        n_loc = xf_l.shape[0]
+        mi = jax.lax.axis_index('model')
+        w1g = jax.lax.all_gather(w1, 'data', axis=1, tiled=True)
+        w3g = jax.lax.all_gather(w3, 'data', axis=1, tiled=True)
+        w2g = jax.lax.all_gather(w2, 'data', axis=2, tiled=True)
+
+        cap = int(max(1, (n_loc * k / e) * m.capacity_factor))
+        cap = -(-cap // 8) * 8
+
+        flat_e = idx_l.reshape(-1)                            # (n_loc*k,)
+        onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+        pos = jnp.sum((jnp.cumsum(onehot, axis=0) - 1) * onehot, axis=-1)
+        local = (flat_e >= mi * e_loc) & (flat_e < (mi + 1) * e_loc)
+        keep = (pos < cap) & local
+        loc_e = jnp.where(local, flat_e - mi * e_loc, 0)
+
+        tok_of_slot = jnp.repeat(jnp.arange(n_loc), k)
+        target = jnp.where(keep, loc_e * cap + pos, e_loc * cap)
+        table = jnp.full((e_loc * cap + 1,), n_loc,
+                         jnp.int32).at[target].set(
+            tok_of_slot.astype(jnp.int32), mode='drop')
+        table = table[:e_loc * cap].reshape(e_loc, cap)
+
+        xpad = jnp.concatenate([xf_l, jnp.zeros((1, d), xf_l.dtype)],
+                               axis=0)
+        x_e = jnp.take(xpad, table, axis=0)                   # local gather
+        h = jax.nn.silu(jnp.einsum('ecd,edf->ecf', x_e, w1g)) * \
+            jnp.einsum('ecd,edf->ecf', x_e, w3g)
+        y_e = jnp.einsum('ecf,efd->ecd', h, w2g)
+
+        slot_gate = jnp.where(keep, gate_l.reshape(-1), 0.0)
+        y_slots = y_e.reshape(e_loc * cap, d)
+        slot_src = jnp.where(keep, loc_e * cap + pos, 0)
+        y_tok = (jnp.take(y_slots, slot_src, axis=0).astype(jnp.bfloat16)
+                 * slot_gate[:, None].astype(jnp.bfloat16))
+        y_l = jnp.sum(y_tok.reshape(n_loc, k, d), axis=1)
+        # the ONE collective: combine expert outputs over the EP axis
+        return jax.lax.psum(y_l, 'model')
+
+    row_spec = jax.sharding.PartitionSpec(rows, None)
+    y = jax.shard_map(
+        local_moe, mesh=mesh,
+        in_specs=(row_spec, row_spec, row_spec,
+                  jax.sharding.PartitionSpec('model', 'data', None),
+                  jax.sharding.PartitionSpec('model', 'data', None),
+                  jax.sharding.PartitionSpec('model', None, 'data')),
+        out_specs=row_spec, check_vma=False,
+    )(xf, gate, idx, p['w1'], p['w3'], p['w2'])
+
+    if m.shared_experts:
+        y = y + mlp(p['shared'], cfg, xf[None], shd)[0].astype(y.dtype)
+    return y.reshape(b, t, d).astype(x.dtype)
+
+
+def moe_aux_loss(p, cfg, x):
+    """Load-balancing auxiliary loss (Switch-style)."""
+    m = cfg.moe
+    xf = x.reshape(-1, x.shape[-1])
+    probs = jax.nn.softmax(jnp.einsum('nd,de->ne', xf, p['router'],
+                                      preferred_element_type=f32), -1)
+    _, idx = jax.lax.top_k(probs, m.top_k)
+    frac = jnp.mean(jax.nn.one_hot(idx, m.num_experts, dtype=f32), axis=(0, 1))
+    imp = jnp.mean(probs, axis=0)
+    return m.num_experts * jnp.sum(frac * imp)

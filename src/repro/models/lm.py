@@ -1,0 +1,427 @@
+"""Decoder-LM assembly: param declarations, scanned layer stacks, and the
+train / prefill / decode forwards for every assigned architecture family.
+
+Layer stacks are lax.scan'd over stacked parameters so the HLO stays compact
+(one layer body) — essential for the 80-compile multi-pod dry-run sweep and
+the standard production pattern (MaxText-style). Heterogeneous archs scan the
+largest homogeneous unit: DeepSeek-style models scan layers 1..L-1 (layer 0
+has a dense FFN); Jamba scans 9 identical 8-layer blocks (1 attention + 7
+Mamba, MoE on odd sub-layers).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import mamba as M
+from . import rwkv6 as R
+from .params import ParamDef, stack_tree
+
+f32 = jnp.float32
+
+
+def padded_vocab(cfg) -> int:
+    """Vocab rounded up to 256 so logits shard over the model axis
+    (e.g. minicpm's odd 122753 -> 122880). Padded ids are masked in the loss."""
+    return -(-cfg.vocab // 256) * 256
+
+
+# ------------------------------------------------------------- declarations
+
+
+def _ffn_defs(cfg, l: int):
+    if cfg.layer_is_moe(l):
+        return L.moe_defs(cfg)
+    if cfg.dense_d_ff_first and l == 0:
+        return L.mlp_defs(cfg, d_ff=cfg.dense_d_ff_first)
+    return L.mlp_defs(cfg)
+
+
+def _layer_defs(cfg, l: int):
+    kind = cfg.layer_kind(l)
+    if kind == 'rwkv6':
+        d = R.rwkv_defs(cfg)
+        d['ln1'] = L.rmsnorm_defs(cfg.d_model)
+        d['ln2'] = L.rmsnorm_defs(cfg.d_model)
+        return d
+    defs = {'ln1': L.rmsnorm_defs(cfg.d_model),
+            'ln2': L.rmsnorm_defs(cfg.d_model)}
+    if kind == 'attn':
+        defs['attn'] = (L.mla_defs(cfg) if cfg.attn == 'mla'
+                        else L.attention_defs(cfg))
+    else:
+        defs['mamba'] = M.mamba_defs(cfg)
+    defs['ffn'] = _ffn_defs(cfg, l)
+    return defs
+
+
+def model_defs(cfg):
+    vp = padded_vocab(cfg)
+    d = cfg.d_model
+    defs = {
+        'embed': ParamDef((vp, d), ('vocab', 'embed'), scale=0.02),
+        'ln_f': L.rmsnorm_defs(d),
+        'score_head': ParamDef((d,), ('embed_act',), scale=0.02),
+    }
+    if not cfg.tie_embeddings:
+        defs['lm_head'] = ParamDef((d, vp), ('embed', 'vocab'))
+
+    if cfg.hybrid_period > 0:  # jamba: scan over identical blocks
+        nblk = cfg.n_layers // cfg.hybrid_period
+        block = {f'sub{r}': _layer_defs(cfg, r)
+                 for r in range(cfg.hybrid_period)}
+        defs['blocks'] = stack_tree(block, nblk)
+    elif cfg.dense_d_ff_first:  # deepseek-style: layer0 special
+        defs['layer0'] = _layer_defs(cfg, 0)
+        defs['layers'] = stack_tree(_layer_defs(cfg, 1), cfg.n_layers - 1)
+    else:
+        defs['layers'] = stack_tree(_layer_defs(cfg, 0), cfg.n_layers)
+    return defs
+
+
+# ------------------------------------------------------------- cache shapes
+
+
+def cache_struct(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs of the decode cache (also used to allocate)."""
+    g, hd = cfg.n_kv_heads, cfg.head_dim
+    d = cfg.d_model
+
+    def sd(shape, dt=dtype):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    if cfg.attn == 'rwkv6':
+        h = cfg.n_heads
+        k = cfg.rwkv_head_dim
+        return {'s': sd((cfg.n_layers, batch, h, k, k), f32),
+                'tm_last': sd((cfg.n_layers, batch, d)),
+                'cm_last': sd((cfg.n_layers, batch, d))}
+    if cfg.hybrid_period > 0:
+        nblk = cfg.n_layers // cfg.hybrid_period
+        nm = cfg.hybrid_period - 1
+        di = cfg.mamba_expand * d
+        return {'k': sd((nblk, batch, seq, g, hd)),
+                'v': sd((nblk, batch, seq, g, hd)),
+                'h': sd((nblk, nm, batch, di, cfg.mamba_d_state), f32),
+                'conv': sd((nblk, nm, batch, cfg.mamba_conv - 1, di))}
+    if cfg.attn == 'mla':
+        return {'ckv': sd((cfg.n_layers, batch, seq, cfg.mla_kv_lora)),
+                'krope': sd((cfg.n_layers, batch, seq, cfg.mla_rope_dim))}
+    return {'k': sd((cfg.n_layers, batch, seq, g, hd)),
+            'v': sd((cfg.n_layers, batch, seq, g, hd))}
+
+
+CACHE_AXES = {
+    'k': ('none', 'cache_batch', 'cache_seq', 'kv_heads', 'head_dim'),
+    'v': ('none', 'cache_batch', 'cache_seq', 'kv_heads', 'head_dim'),
+    'ckv': ('none', 'cache_batch', 'cache_seq', 'kv_lora'),
+    'krope': ('none', 'cache_batch', 'cache_seq', 'none'),
+    's': ('none', 'cache_batch', 'heads', 'head_dim', 'none'),
+    'tm_last': ('none', 'cache_batch', 'embed_act'),
+    'cm_last': ('none', 'cache_batch', 'embed_act'),
+    'h': ('none', 'none', 'cache_batch', 'mamba_inner', 'none'),
+    'conv': ('none', 'none', 'cache_batch', 'none', 'mamba_inner'),
+}
+
+
+def init_cache(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_struct(cfg, batch, seq, dtype))
+
+
+# ------------------------------------------------------------- layer bodies
+
+
+def _ffn_apply(lp, cfg, x, l_is_moe, shd, d_ff_first=False):
+    if l_is_moe:
+        if cfg.moe_impl == 'ep':
+            return L.moe_ffn_ep(lp, cfg, x, shd)
+        return L.moe_ffn(lp, cfg, x, shd)
+    return L.mlp(lp, cfg, x, shd)
+
+
+def _attn_layer(lp, cfg, x, positions, shd, is_moe, cache=None, cache_len=None,
+                decode=False):
+    h = L.rmsnorm(lp['ln1'], x)
+    if cfg.attn == 'mla':
+        h, new_cache = L.mla_attention(lp['attn'], cfg, h, positions, shd,
+                                       cache=cache, cache_len=cache_len,
+                                       decode=decode)
+    else:
+        h, new_cache = L.gqa_attention(lp['attn'], cfg, h, positions, shd,
+                                       cache_kv=cache, cache_len=cache_len,
+                                       decode=decode)
+    x = x + h
+    x = x + _ffn_apply(lp['ffn'], cfg, L.rmsnorm(lp['ln2'], x), is_moe, shd)
+    return x, new_cache
+
+
+def _mamba_layer(lp, cfg, x, shd, is_moe, state=None, conv_prev=None):
+    h = L.rmsnorm(lp['ln1'], x)
+    h, new_state, new_conv = M.mamba_block(lp['mamba'], cfg, h, shd,
+                                           state=state, conv_prev=conv_prev)
+    x = x + h
+    x = x + _ffn_apply(lp['ffn'], cfg, L.rmsnorm(lp['ln2'], x), is_moe, shd)
+    return x, new_state, new_conv
+
+
+def _rwkv_layer(lp, cfg, x, shd, state=None, tm_last=None, cm_last=None):
+    h, new_s, new_tm = R.rwkv_time_mix(lp['tm'], cfg, L.rmsnorm(lp['ln1'], x),
+                                       shd, state=state, shift_last=tm_last)
+    x = x + h
+    h2, new_cm = R.rwkv_channel_mix(lp['cm'], cfg, L.rmsnorm(lp['ln2'], x),
+                                    shift_last=cm_last)
+    x = x + h2
+    return x, new_s, new_tm, new_cm
+
+
+# ------------------------------------------------------------- full stacks
+
+
+def _embed_tokens(params, cfg, tokens):
+    return jnp.take(params['embed'], tokens, axis=0)
+
+
+def _assemble_inputs(params, cfg, batch):
+    """Token/frontend embedding -> (B, S, d) hidden + target mask offset."""
+    if cfg.frontend == 'vision':
+        tok = _embed_tokens(params, cfg, batch['tokens'])
+        x = jnp.concatenate(
+            [batch['image_embeds'].astype(tok.dtype), tok], axis=1)
+        return x
+    if cfg.frontend == 'audio':
+        return batch['frame_embeds']
+    return _embed_tokens(params, cfg, batch['tokens'])
+
+
+def forward_train(params, cfg, batch, shd, remat: str = 'layer'):
+    """Full causal forward -> final hidden states (B, S, d)."""
+    x = _assemble_inputs(params, cfg, batch).astype(jnp.bfloat16)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = shd.constrain(x, ('batch', 'seq', 'embed_act'))
+
+    if cfg.hybrid_period > 0:
+        def block_fn(h, bp):
+            for r in range(cfg.hybrid_period):
+                lp = bp[f'sub{r}']
+                moe = cfg.layer_is_moe(r)
+                if cfg.layer_kind(r) == 'attn':
+                    h, _ = _attn_layer(lp, cfg, h, positions, shd, moe)
+                else:
+                    h, _, _ = _mamba_layer(lp, cfg, h, shd, moe)
+            return h, None
+        fn = jax.checkpoint(block_fn) if remat == 'layer' else block_fn
+        x, _ = jax.lax.scan(fn, x, params['blocks'])
+    elif cfg.attn == 'rwkv6':
+        def layer_fn(h, lp):
+            h, _, _, _ = _rwkv_layer(lp, cfg, h, shd)
+            return h, None
+        fn = jax.checkpoint(layer_fn) if remat == 'layer' else layer_fn
+        x, _ = jax.lax.scan(fn, x, params['layers'])
+    else:
+        if cfg.dense_d_ff_first:
+            x, _ = _attn_layer(params['layer0'], cfg, x, positions, shd,
+                               False)
+        def layer_fn(h, lp):
+            h, _ = _attn_layer(lp, cfg, h, positions, shd,
+                               cfg.moe is not None)
+            return h, None
+        fn = jax.checkpoint(layer_fn) if remat == 'layer' else layer_fn
+        x, _ = jax.lax.scan(fn, x, params['layers'])
+    return L.rmsnorm(params['ln_f'], x)
+
+
+def lm_head_weight(params, cfg):
+    if cfg.tie_embeddings:
+        return params['embed'].T
+    return params['lm_head']
+
+
+def chunked_xent(params, cfg, hidden, targets, shd, chunk: int = 512):
+    """Cross-entropy over the (padded, model-sharded) vocab, scanned over
+    sequence chunks so per-device logits stay O(B * chunk * V / tp)."""
+    b, s, d = hidden.shape
+    vp = padded_vocab(cfg)
+    w = lm_head_weight(params, cfg)
+    chunk = min(chunk, s)
+    nchunk = s // chunk
+    hs = hidden[:, :nchunk * chunk].reshape(b, nchunk, chunk, d)
+    ts = targets[:, :nchunk * chunk].reshape(b, nchunk, chunk)
+
+    def step(carry, inp):
+        h, t = inp                       # (B, chunk, d), (B, chunk)
+        logits = jnp.einsum('bcd,dv->bcv', h, w,
+                            preferred_element_type=f32)
+        logits = shd.constrain(logits, ('batch', 'seq', 'vocab'))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tl = jnp.sum(logits * jax.nn.one_hot(t, vp, dtype=logits.dtype), -1)
+        valid = (t >= 0) & (t < cfg.vocab)
+        return (carry[0] + jnp.sum(jnp.where(valid, lse - tl, 0.0)),
+                carry[1] + jnp.sum(valid)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        step, (jnp.zeros((), f32), jnp.zeros((), f32)),
+        (hs.transpose(1, 0, 2, 3), ts.transpose(1, 0, 2)))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ------------------------------------------------------------- serving
+
+
+def forward_prefill(params, cfg, batch, shd):
+    """Causal forward that also returns the populated KV/state cache and the
+    last-position logits (B, vocab_padded)."""
+    x = _assemble_inputs(params, cfg, batch).astype(jnp.bfloat16)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = shd.constrain(x, ('batch', 'seq', 'embed_act'))
+
+    if cfg.hybrid_period > 0:
+        def block_fn(h, bp):
+            caches = {}
+            for r in range(cfg.hybrid_period):
+                lp = bp[f'sub{r}']
+                moe = cfg.layer_is_moe(r)
+                if cfg.layer_kind(r) == 'attn':
+                    h, kv = _attn_layer(lp, cfg, h, positions, shd, moe)
+                    caches['k'], caches['v'] = kv
+                else:
+                    h, st, cv = _mamba_layer(lp, cfg, h, shd, moe)
+                    caches.setdefault('h', []).append(st)
+                    caches.setdefault('conv', []).append(cv)
+            caches['h'] = jnp.stack(caches['h'])
+            caches['conv'] = jnp.stack(caches['conv'])
+            return h, caches
+        x, cache = jax.lax.scan(block_fn, x, params['blocks'])
+    elif cfg.attn == 'rwkv6':
+        def layer_fn(h, lp):
+            h, st, tm, cm = _rwkv_layer(lp, cfg, h, shd)
+            return h, {'s': st, 'tm_last': tm, 'cm_last': cm}
+        x, cache = jax.lax.scan(layer_fn, x, params['layers'])
+    else:
+        caches0 = None
+        if cfg.dense_d_ff_first:
+            x, c0 = _attn_layer(params['layer0'], cfg, x, positions, shd,
+                                False)
+            caches0 = c0
+        def layer_fn(h, lp):
+            h, c = _attn_layer(lp, cfg, h, positions, shd,
+                               cfg.moe is not None)
+            return h, c
+        x, cache_kv = jax.lax.scan(layer_fn, x, params['layers'])
+        if cfg.attn == 'mla':
+            ckv, krope = cache_kv
+            if caches0 is not None:
+                ckv = jnp.concatenate([caches0[0][None], ckv], 0)
+                krope = jnp.concatenate([caches0[1][None], krope], 0)
+            cache = {'ckv': ckv, 'krope': krope}
+        else:
+            k, v = cache_kv
+            if caches0 is not None:
+                k = jnp.concatenate([caches0[0][None], k], 0)
+                v = jnp.concatenate([caches0[1][None], v], 0)
+            cache = {'k': k, 'v': v}
+
+    x = L.rmsnorm(params['ln_f'], x)
+    logits = jnp.einsum('bd,dv->bv', x[:, -1].astype(jnp.bfloat16),
+                        lm_head_weight(params, cfg),
+                        preferred_element_type=f32)
+    return cache, logits
+
+
+def forward_decode(params, cfg, cache, batch, pos, shd):
+    """One-token decode with a fixed-capacity cache. pos: scalar int32 count
+    of tokens already in the cache. Returns (new_cache, logits)."""
+    if cfg.frontend == 'audio':
+        x = batch['frame_embeds'].astype(jnp.bfloat16)      # (B, 1, d)
+    else:
+        x = _embed_tokens(params, cfg, batch['tokens']).astype(jnp.bfloat16)
+    b = x.shape[0]
+    positions = jnp.broadcast_to(pos[None, None] if pos.ndim == 0 else pos,
+                                 (b, 1)).astype(jnp.int32)
+
+    if cfg.hybrid_period > 0:
+        def block_fn(h, inp):
+            bp, ck, cv, chs, ccv = inp
+            mi = 0
+            new_hs, new_cvs = [], []
+            nk, nv = ck, cv
+            for r in range(cfg.hybrid_period):
+                lp = bp[f'sub{r}']
+                moe = cfg.layer_is_moe(r)
+                if cfg.layer_kind(r) == 'attn':
+                    h, (nk, nv) = _attn_layer(lp, cfg, h, positions, shd, moe,
+                                              cache=(ck, cv), cache_len=pos,
+                                              decode=True)
+                else:
+                    h, st, cv2 = _mamba_layer(lp, cfg, h, shd, moe,
+                                              state=chs[mi],
+                                              conv_prev=ccv[mi])
+                    new_hs.append(st)
+                    new_cvs.append(cv2)
+                    mi += 1
+            return h, (nk, nv, jnp.stack(new_hs), jnp.stack(new_cvs))
+        x, (k, v, hst, cvs) = jax.lax.scan(
+            block_fn, x, (params['blocks'], cache['k'], cache['v'],
+                          cache['h'], cache['conv']))
+        new_cache = {'k': k, 'v': v, 'h': hst, 'conv': cvs}
+    elif cfg.attn == 'rwkv6':
+        def layer_fn(h, inp):
+            lp, st, tm, cm = inp
+            h, s2, tm2, cm2 = _rwkv_layer(lp, cfg, h, shd, state=st,
+                                          tm_last=tm, cm_last=cm)
+            return h, {'s': s2, 'tm_last': tm2, 'cm_last': cm2}
+        x, new_cache = jax.lax.scan(
+            layer_fn, x, (params['layers'], cache['s'], cache['tm_last'],
+                          cache['cm_last']))
+    else:
+        layers = params['layers']
+        if cfg.attn == 'mla':
+            def layer_fn(h, inp):
+                lp, ckv, krope = inp
+                h, c = _attn_layer(lp, cfg, h, positions, shd,
+                                   cfg.moe is not None, cache=(ckv, krope),
+                                   cache_len=pos, decode=True)
+                return h, c
+            ck, kr = cache['ckv'], cache['krope']
+            if cfg.dense_d_ff_first:
+                x, c0 = _attn_layer(params['layer0'], cfg, x, positions, shd,
+                                    False, cache=(ck[0], kr[0]),
+                                    cache_len=pos, decode=True)
+                x, (ckv2, kr2) = jax.lax.scan(layer_fn, x,
+                                              (layers, ck[1:], kr[1:]))
+                new_cache = {
+                    'ckv': jnp.concatenate([c0[0][None], ckv2], 0),
+                    'krope': jnp.concatenate([c0[1][None], kr2], 0)}
+            else:
+                x, (ckv2, kr2) = jax.lax.scan(layer_fn, x, (layers, ck, kr))
+                new_cache = {'ckv': ckv2, 'krope': kr2}
+        else:
+            def layer_fn(h, inp):
+                lp, k, v = inp
+                h, c = _attn_layer(lp, cfg, h, positions, shd,
+                                   cfg.moe is not None, cache=(k, v),
+                                   cache_len=pos, decode=True)
+                return h, c
+            k, v = cache['k'], cache['v']
+            if cfg.dense_d_ff_first:
+                x, c0 = _attn_layer(params['layer0'], cfg, x, positions, shd,
+                                    False, cache=(k[0], v[0]), cache_len=pos,
+                                    decode=True)
+                x, (k2, v2) = jax.lax.scan(layer_fn, x, (layers, k[1:], v[1:]))
+                new_cache = {'k': jnp.concatenate([c0[0][None], k2], 0),
+                             'v': jnp.concatenate([c0[1][None], v2], 0)}
+            else:
+                x, (k2, v2) = jax.lax.scan(layer_fn, x, (layers, k, v))
+                new_cache = {'k': k2, 'v': v2}
+
+    x = L.rmsnorm(params['ln_f'], x)
+    logits = jnp.einsum('bd,dv->bv', x[:, -1].astype(jnp.bfloat16),
+                        lm_head_weight(params, cfg),
+                        preferred_element_type=f32)
+    return new_cache, logits

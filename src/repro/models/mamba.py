@@ -1,0 +1,93 @@
+"""Mamba (selective SSM) block for the Jamba hybrid stack.
+
+Selective state-space recurrence (Gu & Dao, 2023; as used by Jamba,
+arXiv:2403.19887): input-dependent (dt, B, C) make the SSM content-aware,
+
+    h_t = exp(dt_t * A) h_{t-1} + (dt_t * B_t) x_t,      y_t = C_t h_t + D x_t
+
+with depthwise causal conv + SiLU gating around it. State is
+(B, d_inner, d_state): O(1) per decoded token — with 63/72 Jamba layers being
+Mamba, the long_500k cell stays sub-quadratic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .params import ParamDef
+
+f32 = jnp.float32
+
+
+def mamba_defs(cfg):
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    ds = cfg.mamba_d_state
+    dt_rank = max(d // 16, 8)
+    return {
+        'in_proj': ParamDef((d, 2 * di), ('embed', 'mamba_inner')),
+        'conv_w': ParamDef((cfg.mamba_conv, di), ('none', 'mamba_inner'),
+                           scale=0.5),
+        'conv_b': ParamDef((di,), ('mamba_inner',), init='zeros'),
+        'w_bc': ParamDef((di, 2 * ds), ('mamba_inner', 'none'), scale=0.02),
+        'w_dt1': ParamDef((di, dt_rank), ('mamba_inner', 'none'), scale=0.02),
+        'w_dt2': ParamDef((dt_rank, di), ('none', 'mamba_inner'), scale=0.02),
+        'dt_bias': ParamDef((di,), ('mamba_inner',), init='zeros'),
+        'a_log': ParamDef((di, ds), ('mamba_inner', 'none'), init='custom',
+                          custom=lambda k: jnp.log(jnp.broadcast_to(
+                              jnp.arange(1, ds + 1, dtype=f32), (di, ds)))),
+        'd_skip': ParamDef((di,), ('mamba_inner',), init='ones'),
+        'out_proj': ParamDef((di, d), ('mamba_inner', 'embed')),
+    }
+
+
+def _causal_conv(x, w, b, prev=None):
+    """x: (B, T, di); w: (K, di) depthwise. prev: (B, K-1, di) history."""
+    k = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)          # (B, T+K-1, di)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b, xp[:, -(k - 1):, :]
+
+
+def mamba_block(p, cfg, x, shd, *, state=None, conv_prev=None):
+    """Returns (y, ssm_state, conv_state). x: (B, T, d)."""
+    b, t, d = x.shape
+    di = cfg.mamba_expand * d
+    ds = cfg.mamba_d_state
+
+    xz = jnp.einsum('btd,dk->btk', x, p['in_proj'])
+    xi, z = xz[..., :di], xz[..., di:]
+    xi = shd.constrain(xi, ('batch', 'seq', 'mamba_inner'))
+    xi, conv_state = _causal_conv(xi, p['conv_w'], p['conv_b'], conv_prev)
+    xi = jax.nn.silu(xi)
+
+    bc = jnp.einsum('btk,kc->btc', xi, p['w_bc']).astype(f32)
+    bmat, cmat = bc[..., :ds], bc[..., ds:]          # (B, T, ds)
+    dt = jax.nn.softplus(
+        jnp.einsum('btr,rk->btk',
+                   jnp.einsum('btk,kr->btr', xi, p['w_dt1']), p['w_dt2'])
+        .astype(f32) + p['dt_bias'].astype(f32))     # (B, T, di)
+    a = -jnp.exp(p['a_log'].astype(f32))             # (di, ds)
+
+    da = jnp.exp(dt[..., None] * a)                  # (B, T, di, ds)
+    dbx = (dt * xi.astype(f32))[..., None] * bmat[..., None, :]
+
+    def step(h, inp):
+        da_t, dbx_t, c_t = inp                       # (B, di, ds), .., (B, ds)
+        h = da_t * h + dbx_t
+        y = jnp.einsum('bis,bs->bi', h, c_t)
+        return h, y
+
+    h0 = (jnp.zeros((b, di, ds), f32) if state is None else state.astype(f32))
+    hT, y = jax.lax.scan(
+        step, h0,
+        (da.transpose(1, 0, 2, 3), dbx.transpose(1, 0, 2, 3),
+         cmat.transpose(1, 0, 2)))
+    y = y.transpose(1, 0, 2)                          # (B, T, di)
+    y = y + p['d_skip'].astype(f32) * xi.astype(f32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = jnp.einsum('btk,kd->btd', y, p['out_proj'])
+    return shd.constrain(out, ('batch', 'seq', 'embed_act')), hT, conv_state

@@ -1,0 +1,90 @@
+"""Minimal parameter system: shape+logical-axes defs -> arrays / specs / abstract.
+
+No flax dependency: a model is a pure function over a pytree of arrays. Every
+parameter is declared once as a ParamDef carrying its logical sharding axes,
+from which we derive (a) real initialized arrays, (b) PartitionSpecs for
+pjit, (c) ShapeDtypeStructs for the no-allocation dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    axes: tuple                  # logical axis names, len == len(shape)
+    init: str = 'normal'         # normal | zeros | ones | custom
+    scale: float | None = None   # stddev; default fan-in
+    custom: Callable | None = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_def(x):
+    return isinstance(x, ParamDef)
+
+
+def _leaves(tree):
+    return jax.tree.leaves(tree, is_leaf=is_def)
+
+
+def init_params(defs, rng, dtype=jnp.bfloat16):
+    """Materialize a ParamDef tree into initialized arrays (deterministic)."""
+    flat, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    out = []
+    for i, d in enumerate(flat):
+        k = jax.random.fold_in(rng, i)
+        if d.custom is not None:
+            # Stacked (scanned) defs keep the original custom callable; its
+            # per-layer output broadcasts over the added leading layer dim.
+            arr = jnp.broadcast_to(d.custom(k).astype(dtype), d.shape)
+        elif d.init == 'zeros':
+            arr = jnp.zeros(d.shape, dtype)
+        elif d.init == 'ones':
+            arr = jnp.ones(d.shape, dtype)
+        else:
+            fan_in = d.shape[0] if len(d.shape) >= 2 else max(d.shape[-1], 1)
+            scale = d.scale if d.scale is not None else 1.0 / np.sqrt(fan_in)
+            arr = (jax.random.normal(k, d.shape, jnp.float32) * scale).astype(
+                dtype)
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(defs, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct tree — zero allocation, for .lower() dry-runs."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs, is_leaf=is_def)
+
+
+def param_specs(defs, rules):
+    """PartitionSpec tree matching the ParamDef tree under `rules`."""
+    return jax.tree.map(
+        lambda d: rules.spec(d.axes, d.shape), defs, is_leaf=is_def)
+
+
+def param_shardings(defs, rules):
+    return jax.tree.map(
+        lambda d: rules.sharding(d.axes, d.shape), defs, is_leaf=is_def)
+
+
+def count_params(defs) -> int:
+    return int(sum(np.prod(d.shape) for d in _leaves(defs)))
+
+
+def stack_defs(d: ParamDef, n: int, axis_name: str = 'layers') -> ParamDef:
+    """Prepend a stacked (scan) leading dimension to a ParamDef."""
+    return dataclasses.replace(d, shape=(n,) + d.shape,
+                               axes=(axis_name,) + d.axes)
+
+
+def stack_tree(defs, n: int):
+    return jax.tree.map(lambda d: stack_defs(d, n), defs, is_leaf=is_def)

@@ -1,0 +1,153 @@
+"""RWKV-6 "Finch" block: attention-free time-mix with data-dependent decay.
+
+Faithful to the Finch signature (arXiv:2404.05892): the per-channel decay
+w_t is a *function of the input* (low-rank: w_t = exp(-exp(w0 + tanh(x A) B)))
+and the recurrence keeps a per-head (K x V) state
+
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t),   S_t = diag(w_t) S_{t-1} + k_t^T v_t.
+
+Training runs the recurrence as a lax.scan over time (O(T) sequential,
+O(B H K V) state); decode carries S directly — O(1) per token, which is why
+rwkv6 runs the long_500k cell. Token-shift is the RWKV lerp with learned mu.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .params import ParamDef
+
+f32 = jnp.float32
+DECAY_LORA = 64
+
+
+def rwkv_defs(cfg):
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = cfg.rwkv_head_dim
+    ff = cfg.d_ff
+    return {
+        'tm': {  # time mix
+            'mu_r': ParamDef((d,), ('embed_act',), init='zeros'),
+            'mu_k': ParamDef((d,), ('embed_act',), init='zeros'),
+            'mu_v': ParamDef((d,), ('embed_act',), init='zeros'),
+            'mu_w': ParamDef((d,), ('embed_act',), init='zeros'),
+            'mu_g': ParamDef((d,), ('embed_act',), init='zeros'),
+            'wr': ParamDef((d, h * hd), ('embed', 'heads')),
+            'wk': ParamDef((d, h * hd), ('embed', 'heads')),
+            'wv': ParamDef((d, h * hd), ('embed', 'heads')),
+            'wg': ParamDef((d, h * hd), ('embed', 'heads')),
+            'wo': ParamDef((h * hd, d), ('heads', 'embed')),
+            # data-dependent decay (the Finch contribution)
+            'w0': ParamDef((h * hd,), ('heads',), init='zeros'),
+            'wa': ParamDef((d, DECAY_LORA), ('embed', 'none'), scale=0.02),
+            'wb': ParamDef((DECAY_LORA, h * hd), ('none', 'heads'),
+                           scale=0.02),
+            'u': ParamDef((h, hd), ('heads', 'head_dim'), init='zeros'),
+            'ln_scale': ParamDef((h * hd,), ('heads',), init='ones'),
+        },
+        'cm': {  # channel mix
+            'mu_k': ParamDef((d,), ('embed_act',), init='zeros'),
+            'mu_r': ParamDef((d,), ('embed_act',), init='zeros'),
+            'wk': ParamDef((d, ff), ('embed', 'ffn')),
+            'wv': ParamDef((ff, d), ('ffn', 'embed')),
+            'wr': ParamDef((d, d), ('embed', 'embed_act')),
+        },
+    }
+
+
+def _token_shift(x, last):
+    """shift right by one along T; `last` (B, d) fills position 0."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _lerp(x, xs, mu):
+    return x + (xs - x) * mu
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """r,k,v,w: (B,T,H,K); u: (H,K); s0: (B,H,K,V=K). Returns (o, sT)."""
+    def step(s, inp):
+        rt, kt, vt, wt = inp                    # (B,H,K)
+        kv = kt[..., :, None] * vt[..., None, :]            # (B,H,K,V)
+        o = jnp.einsum('bhk,bhkv->bhv', rt, s + u[..., None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, o
+
+    rkvw = jax.tree.map(lambda a: a.transpose(1, 0, 2, 3), (r, k, v, w))
+    sT, o = jax.lax.scan(step, s0, rkvw)
+    return o.transpose(1, 0, 2, 3), sT           # (B,T,H,V)
+
+
+def rwkv_time_mix(p, cfg, x, shd, *, state=None, shift_last=None):
+    """state: (B,H,K,V) or None; shift_last: (B,d) previous token (decode)."""
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.rwkv_head_dim
+    if shift_last is None:
+        shift_last = jnp.zeros((b, d), x.dtype)
+    xs = _token_shift(x, shift_last)
+    # NOTE (§Perf cell A it4, REFUTED): absorbing the token-shift lerp into
+    # the weights (x_c @ W_c = x @ W_c + z @ (mu_c*W_c)) to share dL/dx
+    # all-reduces across the five branches DOUBLES the projection flops
+    # (two matmuls per branch) and the concat of differently-sharded weight
+    # pieces forces per-step resharding: measured +14% compute, +19%
+    # collective. Reverted; see EXPERIMENTS.md.
+    xr = _lerp(x, xs, p['mu_r'])
+    xk = _lerp(x, xs, p['mu_k'])
+    xv = _lerp(x, xs, p['mu_v'])
+    xw = _lerp(x, xs, p['mu_w'])
+    xg = _lerp(x, xs, p['mu_g'])
+
+    r = jnp.einsum('btd,dk->btk', xr, p['wr']).reshape(b, t, h, hd)
+    k = jnp.einsum('btd,dk->btk', xk, p['wk']).reshape(b, t, h, hd)
+    v = jnp.einsum('btd,dk->btk', xv, p['wv']).reshape(b, t, h, hd)
+    g = jax.nn.silu(jnp.einsum('btd,dk->btk', xg, p['wg']))
+
+    # data-dependent decay in (0, 1): w = exp(-exp(w0 + tanh(x wa) wb))
+    dd = jnp.einsum('btl,lk->btk',
+                    jnp.tanh(jnp.einsum('btd,dl->btl', xw, p['wa'])),
+                    p['wb'])
+    w = jnp.exp(-jnp.exp((p['w0'] + dd).astype(f32))).reshape(b, t, h, hd)
+
+    s0 = (jnp.zeros((b, h, hd, hd), f32) if state is None
+          else state.astype(f32))
+    if cfg.wkv_impl == 'kernel' and t > 1:
+        # Pallas path: VMEM-resident state, HBM streams r/k/v/w/o once
+        # (see kernels/wkv). Flatten (B, H) -> N; batch stays the leading
+        # factor so the DP sharding of N is exactly the batch sharding.
+        # r/k/v/o stream in bf16 (half the kernel's HBM/ICI traffic); the
+        # decay w stays f32 — its 4096-step products are precision-critical.
+        from repro.kernels.wkv.ops import wkv_apply
+        flat = lambda x: x.transpose(0, 2, 1, 3).reshape(b * h, t, hd)
+        u_flat = jnp.broadcast_to(p['u'].astype(f32)[None], (b, h, hd)
+                                  ).reshape(b * h, hd)
+        o, sT = wkv_apply(flat(r), flat(k), flat(v), flat(w), u_flat,
+                          s0.reshape(b * h, hd, hd),
+                          mesh=getattr(shd, 'mesh', None))
+        o = o.astype(f32).reshape(b, h, t, hd).transpose(0, 2, 1, 3)
+        sT = sT.reshape(b, h, hd, hd)
+    else:
+        o, sT = _wkv_scan(r.astype(f32), k.astype(f32), v.astype(f32), w,
+                          p['u'].astype(f32), s0)
+    o = o.reshape(b, t, h * hd)
+    # per-head groupnorm
+    o = o.reshape(b, t, h, hd)
+    o = (o - jnp.mean(o, -1, keepdims=True)) * jax.lax.rsqrt(
+        jnp.var(o, -1, keepdims=True) + 1e-5)
+    o = o.reshape(b, t, h * hd).astype(x.dtype) * p['ln_scale'] * g
+    out = jnp.einsum('btk,kd->btd', o, p['wo'])
+    return shd.constrain(out, ('batch', 'seq', 'embed_act')), sT, x[:, -1, :]
+
+
+def rwkv_channel_mix(p, cfg, x, *, shift_last=None):
+    b, t, d = x.shape
+    if shift_last is None:
+        shift_last = jnp.zeros((b, d), x.dtype)
+    xs = _token_shift(x, shift_last)
+    xk = _lerp(x, xs, p['mu_k'])
+    xr = _lerp(x, xs, p['mu_r'])
+    k = jnp.square(jax.nn.relu(jnp.einsum('btd,df->btf', xk, p['wk'])))
+    kv = jnp.einsum('btf,fd->btd', k, p['wv'])
+    r = jax.nn.sigmoid(jnp.einsum('btd,de->bte', xr, p['wr']))
+    return r * kv, x[:, -1, :]

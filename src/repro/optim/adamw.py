@@ -1,0 +1,52 @@
+"""AdamW with bf16 compute params + fp32 master/moments (mixed precision).
+
+State layout (per leaf): master (f32), m (f32), v (f32). The train state
+keeps bf16 params for forward/backward; the optimizer updates the fp32
+master and re-casts. Master/m/v are sharded like the params (FSDP over the
+'data' axis via the same logical axes), i.e. ZeRO-style optimizer sharding
+falls out of the param sharding rules for free.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+def init(params):
+    def leaf(p):
+        return {'master': p.astype(f32),
+                'm': jnp.zeros(p.shape, f32),
+                'v': jnp.zeros(p.shape, f32)}
+    return {'mu': jax.tree.map(leaf, params),
+            'count': jnp.zeros((), jnp.int32)}
+
+
+def apply(grads, state, params, *, lr, beta1=0.9, beta2=0.95, eps=1e-8,
+          weight_decay=0.1, grad_clip=1.0, compute_dtype=jnp.bfloat16):
+    """Returns (new_params, new_state). `lr` is the scalar for this step."""
+    count = state['count'] + 1
+
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(f32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.where(gnorm > grad_clip, grad_clip / (gnorm + 1e-9), 1.0)
+
+    b1c = 1.0 - beta1 ** count.astype(f32)
+    b2c = 1.0 - beta2 ** count.astype(f32)
+
+    def leaf(g, s):
+        g = g.astype(f32) * scale
+        m = beta1 * s['m'] + (1 - beta1) * g
+        v = beta2 * s['v'] + (1 - beta2) * jnp.square(g)
+        upd = (m / b1c) / (jnp.sqrt(v / b2c) + eps)
+        master = s['master'] * (1.0 - lr * weight_decay) - lr * upd
+        return {'master': master, 'm': m, 'v': v}
+
+    new_mu = jax.tree.map(leaf, grads, state['mu'])
+    new_params = jax.tree.map(lambda s: s['master'].astype(compute_dtype),
+                              new_mu,
+                              is_leaf=lambda x: isinstance(x, dict)
+                              and 'master' in x)
+    return new_params, {'mu': new_mu, 'count': count}, gnorm

@@ -1,0 +1,41 @@
+"""LR schedules: cosine and WSD (warmup-stable-decay, MiniCPM arXiv:2404.06395)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+def cosine(step, *, base_lr, warmup_steps, decay_steps, min_ratio=0.1):
+    s = step.astype(f32)
+    warm = s / jnp.maximum(warmup_steps, 1)
+    prog = jnp.clip((s - warmup_steps) / jnp.maximum(decay_steps, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * jnp.where(s < warmup_steps, warm, cos)
+
+
+def wsd(step, *, base_lr, warmup_steps, stable_steps, decay_steps,
+        min_ratio=0.01):
+    """Warmup -> constant ("stable") -> short exponential-ish decay tail."""
+    s = step.astype(f32)
+    warm = s / jnp.maximum(warmup_steps, 1)
+    in_decay = s > warmup_steps + stable_steps
+    prog = jnp.clip((s - warmup_steps - stable_steps)
+                    / jnp.maximum(decay_steps, 1), 0.0, 1.0)
+    decay = min_ratio ** prog  # exponential decay to min_ratio
+    mult = jnp.where(s < warmup_steps, warm,
+                     jnp.where(in_decay, decay, 1.0))
+    return base_lr * mult
+
+
+def make_schedule(cfg_model, tcfg):
+    if cfg_model.schedule == 'wsd':
+        stable = tcfg.stable_steps or int(0.8 * tcfg.decay_steps)
+        return lambda step: wsd(step, base_lr=tcfg.learning_rate,
+                                warmup_steps=tcfg.warmup_steps,
+                                stable_steps=stable,
+                                decay_steps=max(tcfg.decay_steps - stable, 1))
+    return lambda step: cosine(step, base_lr=tcfg.learning_rate,
+                               warmup_steps=tcfg.warmup_steps,
+                               decay_steps=tcfg.decay_steps)

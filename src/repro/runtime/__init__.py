@@ -1,0 +1,1 @@
+from .loop import LoopConfig, LoopReport, SimulatedPreemption, run  # noqa: F401

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# `PYTHONPATH=src pytest tests/` is the canonical invocation; this insert
+# makes bare `pytest` work too. Deliberately NO xla_force_host_platform flag
+# here — tests must see the real single CPU device (dry-run sets its own).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), '..', 'src'))

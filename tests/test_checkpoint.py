@@ -1,0 +1,94 @@
+"""Checkpoint store + async checkpointer tests."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (AsyncCheckpointer, commit, gc, latest_step,
+                              restore, save)
+
+
+def _tree():
+    return {'a': jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            'n': {'b': jnp.ones((5,), jnp.bfloat16),
+                  'step': jnp.asarray(3, jnp.int32)}}
+
+
+def _like(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        tree)
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save(str(tmp_path), 7, t)
+    out, meta = restore(str(tmp_path), like=_like(t))
+    assert meta['step'] == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_roundtrip_multi_shard(tmp_path):
+    t = {'big': jnp.arange(100000, dtype=jnp.float32)}
+    save(str(tmp_path), 1, t, n_shards=4)
+    out, _ = restore(str(tmp_path), like=_like(t))
+    np.testing.assert_array_equal(np.asarray(out['big']),
+                                  np.asarray(t['big']))
+
+
+def test_uncommitted_checkpoints_invisible(tmp_path):
+    t = _tree()
+    save(str(tmp_path), 5, t)
+    # simulate a crash mid-save of step 9: shards written, no COMMITTED
+    save(str(tmp_path), 9, t, shard_filter=lambda s: True)
+    assert latest_step(str(tmp_path)) == 5
+    commit(str(tmp_path), 9)
+    assert latest_step(str(tmp_path)) == 9
+
+
+def test_gc_keeps_newest(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        save(str(tmp_path), s, t)
+    removed = gc(str(tmp_path), keep=2)
+    assert removed == [1, 2]
+    assert latest_step(str(tmp_path)) == 4
+    restore(str(tmp_path), 3, like=_like(t))     # still present
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    save(str(tmp_path), 1, {'a': jnp.zeros((3,))})
+    with pytest.raises(ValueError):
+        restore(str(tmp_path), like={'a': jax.ShapeDtypeStruct((4,),
+                                                               jnp.float32)})
+
+
+def test_restore_missing_leaf_raises(tmp_path):
+    save(str(tmp_path), 1, {'a': jnp.zeros((3,))})
+    with pytest.raises(KeyError):
+        restore(str(tmp_path),
+                like={'zz': jax.ShapeDtypeStruct((3,), jnp.float32)})
+
+
+def test_async_checkpointer_overlaps_and_persists(tmp_path):
+    t = _tree()
+    with AsyncCheckpointer(str(tmp_path), keep=2) as ck:
+        ck.save(1, t)
+        ck.save(2, t)       # waits for 1 internally
+        ck.save(3, t)
+    assert latest_step(str(tmp_path)) == 3
+    steps = sorted(n for n in os.listdir(str(tmp_path))
+                   if n.startswith('step_'))
+    assert len(steps) == 2   # gc keep=2
+
+
+def test_async_checkpointer_surfaces_errors(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path / 'missing' / ('x' * 300)), keep=1)
+    ck.save(1, _tree())
+    with pytest.raises(Exception):
+        ck.wait()

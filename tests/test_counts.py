@@ -1,0 +1,175 @@
+"""Property + oracle tests for the paper's core contribution: the
+linearithmic c/d frequency computation (core.counts vs core.ref)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import counts as C
+from repro.core import ref as R
+
+# bounded shape set -> bounded number of jit recompiles under hypothesis
+_SIZES = (1, 2, 3, 8, 33, 128)
+
+
+def _assert_counts_match(p, y):
+    c, d = C.counts(jnp.asarray(p), jnp.asarray(y))
+    cr, dr = R.counts_ref(jnp.asarray(p), jnp.asarray(y))
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(dr))
+    return np.asarray(c), np.asarray(d)
+
+
+@st.composite
+def _py_arrays(draw, tie_heavy: bool):
+    m = draw(st.sampled_from(_SIZES))
+    if tie_heavy:
+        # few distinct values in both p and y -> lots of boundary cases
+        pv = draw(st.lists(st.integers(-2, 2), min_size=m, max_size=m))
+        yv = draw(st.lists(st.integers(0, 2), min_size=m, max_size=m))
+        p = np.asarray(pv, np.float32) * 0.5
+        y = np.asarray(yv, np.float32)
+    else:
+        fin = st.floats(-100, 100, allow_nan=False, allow_subnormal=False,
+                        width=32)
+        p = np.asarray(draw(st.lists(fin, min_size=m, max_size=m)),
+                       np.float32)
+        y = np.asarray(draw(st.lists(fin, min_size=m, max_size=m)),
+                       np.float32)
+    return p, y
+
+
+@hypothesis.given(_py_arrays(tie_heavy=False))
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_counts_match_oracle_random(py):
+    _assert_counts_match(*py)
+
+
+@hypothesis.given(_py_arrays(tie_heavy=True))
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_counts_match_oracle_tie_heavy(py):
+    """Ties in p AND y exercise the strict/non-strict boundary semantics
+    (the margin conditions p_j < p_i + 1 are strict, y comparisons strict)."""
+    _assert_counts_match(*py)
+
+
+@hypothesis.given(_py_arrays(tie_heavy=True))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_sum_c_equals_sum_d(py):
+    """Invariant: sum_i c_i == sum_i d_i (pair (i,j) is counted once from
+    each side — relabelling symmetry of eqs. (5)/(6)).
+
+    Holds EXACTLY only when p ± 1 is exact in fp (here: multiples of 0.5):
+    for general floats the paper's own eqs. (5)/(6) evaluate `p_i + 1` and
+    `p_j - 1` with different roundings, so the two sums can differ by the
+    pairs that land inside one ulp of the margin — a property of the
+    equations, not of our implementation (which matches the oracle
+    bit-for-bit either way; hypothesis found the counterexample)."""
+    c, d = _assert_counts_match(*py)
+    assert c.sum() == d.sum()
+
+
+def test_counts_exact_margin_boundary():
+    """p_j == p_i + 1 must NOT count toward c (strict inequality in eq. 5)."""
+    p = np.asarray([0.0, 1.0], np.float32)   # p_1 == p_0 + 1 exactly
+    y = np.asarray([0.0, 1.0], np.float32)   # y_0 < y_1: preference pair
+    c, d = _assert_counts_match(p, y)
+    assert c[0] == 0 and d[1] == 0           # boundary excluded both sides
+
+
+def test_counts_just_inside_margin():
+    eps = np.float32(1e-3)
+    p = np.asarray([0.0, 1.0 - eps], np.float32)
+    y = np.asarray([0.0, 1.0], np.float32)
+    c, d = _assert_counts_match(p, y)
+    assert c[0] == 1 and d[1] == 1
+
+
+def test_counts_empty_and_singleton():
+    for m in (0, 1):
+        p = np.zeros(m, np.float32)
+        y = np.zeros(m, np.float32)
+        c, d = C.counts(jnp.asarray(p), jnp.asarray(y))
+        assert c.shape == (m,) and d.shape == (m,)
+
+
+def test_counts_large_scrambled():
+    rng = np.random.default_rng(7)
+    m = 4097                                  # crosses a pow2 padding edge
+    p = rng.normal(size=m).astype(np.float32)
+    y = rng.integers(0, 50, size=m).astype(np.float32)
+    c, d = C.counts(jnp.asarray(p), jnp.asarray(y))
+    cb, db = C.counts_blocked_host(jnp.asarray(p), jnp.asarray(y), block=512)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cb))
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(db))
+
+
+# ------------------------------------------------------------------ groups
+
+
+@hypothesis.given(_py_arrays(tie_heavy=True), st.integers(1, 5))
+@hypothesis.settings(max_examples=30, deadline=None)
+def test_grouped_counts_match_oracle(py, n_groups):
+    p, y = py
+    rng = np.random.default_rng(len(p))
+    g = rng.integers(0, n_groups, size=len(p)).astype(np.int32)
+    cg, dg = C.counts_grouped(jnp.asarray(p), jnp.asarray(y), jnp.asarray(g))
+    cr, dr = R.grouped_counts_ref(jnp.asarray(p), jnp.asarray(y),
+                                  jnp.asarray(g))
+    np.testing.assert_array_equal(np.asarray(cg), np.asarray(cr))
+    np.testing.assert_array_equal(np.asarray(dg), np.asarray(dr))
+
+
+def test_grouped_equals_global_when_one_group():
+    rng = np.random.default_rng(3)
+    p = rng.normal(size=64).astype(np.float32)
+    y = rng.normal(size=64).astype(np.float32)
+    g = np.zeros(64, np.int32)
+    c0, d0 = C.counts(jnp.asarray(p), jnp.asarray(y))
+    cg, dg = C.counts_grouped(jnp.asarray(p), jnp.asarray(y), jnp.asarray(g))
+    np.testing.assert_array_equal(np.asarray(c0), np.asarray(cg))
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(dg))
+
+
+# ---------------------------------------------------------------- num_pairs
+
+
+@hypothesis.given(_py_arrays(tie_heavy=True))
+@hypothesis.settings(max_examples=30, deadline=None)
+def test_num_pairs(py):
+    _, y = py
+    n = float(C.num_pairs(jnp.asarray(y)))
+    nr = int(R.num_pairs_ref(jnp.asarray(y)))
+    nh = C.num_pairs_host(y)
+    assert nh == nr
+    assert n == pytest.approx(nr, rel=1e-6)
+
+
+def test_num_pairs_grouped():
+    y = np.asarray([0, 1, 2, 0, 1, 2], np.float32)
+    g = np.asarray([0, 0, 0, 1, 1, 1], np.int32)
+    n = float(C.num_pairs_grouped(jnp.asarray(y), jnp.asarray(g)))
+    nr = int(R.grouped_num_pairs_ref(jnp.asarray(y), jnp.asarray(g)))
+    assert n == pytest.approx(nr)
+    assert nr == 6            # 3 ordered pairs in each of the two groups
+
+
+# ------------------------------------------------- Joachims r-level baseline
+
+
+@hypothesis.given(_py_arrays(tie_heavy=True))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_joachims_rlevel_matches_oracle(py):
+    """The paper's main baseline (SVM^rank's O(rm) counts) must agree with
+    the oracle — and with the tree method — on any tie pattern."""
+    import numpy as np
+    from repro.core import joachims as J
+    p, y = py
+    yl, r = J.levels_of(y)
+    c, d = J.counts_rlevel(jnp.asarray(p), jnp.asarray(yl), r)
+    cr, dr = R.counts_ref(jnp.asarray(p), jnp.asarray(y))
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(dr))

@@ -1,0 +1,85 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp oracle
+(assignment requirement), run in interpret mode on CPU."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ref as R
+from repro.kernels.pairwise_rank import ops
+
+
+def _case(m, seed, y_levels=None, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    p = rng.normal(size=m).astype(dtype)
+    if y_levels:
+        y = rng.integers(0, y_levels, size=m).astype(dtype)
+    else:
+        y = rng.normal(size=m).astype(dtype)
+    return p, y
+
+
+@pytest.mark.parametrize('m', [1, 2, 127, 128, 129, 1000, 2048, 2049])
+def test_pairwise_counts_shape_sweep(m):
+    p, y = _case(m, seed=m)
+    c, d = ops.pairwise_counts(jnp.asarray(p), jnp.asarray(y),
+                               interpret=True)
+    cr, dr = R.counts_ref(jnp.asarray(p), jnp.asarray(y))
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(dr))
+
+
+@pytest.mark.parametrize('dtype', [np.float32, np.float64, jnp.bfloat16])
+def test_pairwise_counts_dtype_sweep(dtype):
+    if dtype is jnp.bfloat16:
+        rng = np.random.default_rng(0)
+        p = jnp.asarray(rng.normal(size=300), jnp.bfloat16)
+        y = jnp.asarray(rng.integers(0, 4, size=300), jnp.bfloat16)
+    else:
+        pn, yn = _case(300, seed=1, y_levels=4, dtype=dtype)
+        p, y = jnp.asarray(pn), jnp.asarray(yn)
+    c, d = ops.pairwise_counts(p, y, interpret=True)
+    p32 = p.astype(jnp.float32)
+    y32 = y.astype(jnp.float32)
+    cr, dr = R.counts_ref(p32, y32)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(dr))
+
+
+@pytest.mark.parametrize('ti,tj', [(1, 1), (2, 8), (4, 2), (8, 8)])
+def test_pairwise_counts_tile_sweep(ti, tj):
+    """Output must be identical for any VMEM tiling choice."""
+    p, y = _case(700, seed=2, y_levels=6)
+    c, d = ops.pairwise_counts(jnp.asarray(p), jnp.asarray(y),
+                               ti_rows=ti, tj_rows=tj, interpret=True)
+    cr, dr = R.counts_ref(jnp.asarray(p), jnp.asarray(y))
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(dr))
+
+
+def test_pairwise_counts_tie_heavy():
+    rng = np.random.default_rng(3)
+    p = (rng.integers(-2, 3, size=500) * 0.5).astype(np.float32)
+    y = rng.integers(0, 2, size=500).astype(np.float32)
+    c, d = ops.pairwise_counts(jnp.asarray(p), jnp.asarray(y),
+                               interpret=True)
+    cr, dr = R.counts_ref(jnp.asarray(p), jnp.asarray(y))
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(dr))
+
+
+def test_pairwise_rank_loss_matches_ref():
+    p, y = _case(400, seed=4, y_levels=5)
+    n = int(R.num_pairs_ref(jnp.asarray(y)))
+    loss = ops.pairwise_rank_loss(jnp.asarray(p), jnp.asarray(y),
+                                  float(n), interpret=True)
+    ref = R.loss_ref(jnp.asarray(p), jnp.asarray(y))
+    assert float(loss) == pytest.approx(float(ref), rel=1e-5)
+
+
+def test_counts_auto_dispatches_to_tree_on_cpu():
+    p, y = _case(100, seed=5)
+    c, d = ops.counts_auto(jnp.asarray(p), jnp.asarray(y))
+    cr, dr = R.counts_ref(jnp.asarray(p), jnp.asarray(y))
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(dr))

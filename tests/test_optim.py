@@ -1,0 +1,102 @@
+"""Optimizer + schedule tests (AdamW mixed precision, cosine/WSD)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adamw
+from repro.optim.schedules import cosine, wsd
+
+
+def _np_adamw(params, grads, m, v, count, lr, b1, b2, eps, wd, clip):
+    gnorm = np.sqrt(sum(np.sum(g.astype(np.float64) ** 2)
+                        for g in grads.values()))
+    scale = clip / (gnorm + 1e-9) if gnorm > clip else 1.0
+    out_p, out_m, out_v = {}, {}, {}
+    b1c = 1 - b1 ** count
+    b2c = 1 - b2 ** count
+    for k in params:
+        g = grads[k].astype(np.float64) * scale
+        m2 = b1 * m[k] + (1 - b1) * g
+        v2 = b2 * v[k] + (1 - b2) * g * g
+        upd = (m2 / b1c) / (np.sqrt(v2 / b2c) + eps)
+        out_p[k] = params[k] * (1 - lr * wd) - lr * upd
+        out_m[k], out_v[k] = m2, v2
+    return out_p, out_m, out_v, gnorm
+
+
+def test_adamw_matches_numpy_reference():
+    rng = np.random.default_rng(0)
+    params = {'w': rng.normal(size=(4, 3)).astype(np.float32),
+              'b': rng.normal(size=(3,)).astype(np.float32)}
+    jp = jax.tree.map(lambda a: jnp.asarray(a, jnp.bfloat16), params)
+    state = adamw.init(jp)
+    m = {k: np.zeros_like(v, dtype=np.float64) for k, v in params.items()}
+    v = {k: np.zeros_like(vv, dtype=np.float64) for k, vv in params.items()}
+    np_master = {k: np.asarray(jnp.asarray(p, jnp.bfloat16), np.float64)
+                 for k, p in params.items()}
+
+    hp = dict(lr=0.01, beta1=0.9, beta2=0.95, eps=1e-8, weight_decay=0.1,
+              grad_clip=1.0)
+    for step in range(1, 4):
+        grads_np = {k: rng.normal(size=p.shape).astype(np.float32)
+                    for k, p in params.items()}
+        jg = jax.tree.map(jnp.asarray, grads_np)
+        jp, state, gnorm = adamw.apply(jg, state, jp, **hp)
+        np_master, m, v, gn = _np_adamw(np_master, grads_np, m, v, step,
+                                        hp['lr'], hp['beta1'], hp['beta2'],
+                                        hp['eps'], hp['weight_decay'],
+                                        hp['grad_clip'])
+        assert float(gnorm) == pytest.approx(gn, rel=1e-4)
+        for k in params:
+            np.testing.assert_allclose(
+                np.asarray(state['mu'][k]['master'], np.float64),
+                np_master[k], rtol=2e-3, atol=2e-3)
+
+
+def test_adamw_grad_clip_engages():
+    p = {'w': jnp.ones((4,), jnp.bfloat16)}
+    s = adamw.init(p)
+    g = {'w': jnp.full((4,), 100.0)}
+    _, _, gnorm = adamw.apply(g, s, p, lr=0.1, grad_clip=1.0)
+    assert float(gnorm) == pytest.approx(200.0, rel=1e-3)
+
+
+def test_adamw_weight_decay_shrinks_params():
+    p = {'w': jnp.ones((4,), jnp.bfloat16)}
+    s = adamw.init(p)
+    g = {'w': jnp.zeros((4,))}
+    p2, s2, _ = adamw.apply(g, s, p, lr=0.5, weight_decay=0.5)
+    assert float(s2['mu']['w']['master'][0]) == pytest.approx(0.75)
+
+
+def test_cosine_schedule_shape():
+    steps = jnp.arange(0, 1000)
+    lrs = np.asarray([float(cosine(s, base_lr=1.0, warmup_steps=100,
+                                   decay_steps=900)) for s in steps])
+    assert lrs[0] == 0.0
+    assert lrs[100] == pytest.approx(1.0, abs=0.02)
+    assert np.argmax(lrs) == pytest.approx(100, abs=2)
+    assert lrs[-1] < 0.2
+    assert np.all(np.diff(lrs[:99]) > 0)          # monotone warmup
+
+
+def test_wsd_schedule_shape():
+    f = lambda s: float(wsd(jnp.asarray(s), base_lr=1.0, warmup_steps=50,
+                            stable_steps=500, decay_steps=100))
+    assert f(0) == 0.0
+    assert f(50) == pytest.approx(1.0, abs=0.03)
+    assert f(300) == pytest.approx(1.0)           # stable plateau
+    assert f(549) == pytest.approx(1.0, abs=0.05)
+    assert f(650) == pytest.approx(0.01, rel=0.2)  # decayed to min ratio
+
+
+def test_minicpm_uses_wsd():
+    from repro.configs.base import TrainConfig
+    from repro.configs.registry import get
+    from repro.optim.schedules import make_schedule
+    sched = make_schedule(get('minicpm-2b'), TrainConfig(
+        warmup_steps=10, decay_steps=100))
+    mid = float(sched(jnp.asarray(60)))
+    assert mid == pytest.approx(3e-4, rel=1e-3)   # stable phase == base lr

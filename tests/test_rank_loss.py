@@ -1,0 +1,138 @@
+"""Tests for the differentiable linearithmic pairwise hinge (core.rank_loss)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rank_loss as RL
+from repro.core import ref as R
+
+_SIZES = (2, 3, 17, 64)
+
+
+@st.composite
+def _scores_utils(draw):
+    m = draw(st.sampled_from(_SIZES))
+    # allow_subnormal=False: XLA flushes denormals to zero, numpy doesn't
+    fin = st.floats(-10, 10, allow_nan=False, allow_subnormal=False,
+                    width=32)
+    p = np.asarray(draw(st.lists(fin, min_size=m, max_size=m)), np.float32)
+    y = np.asarray(draw(st.lists(st.integers(0, 3), min_size=m, max_size=m)),
+                   np.float32)
+    hypothesis.assume(len(np.unique(y)) > 1)      # need >= 1 preference pair
+    return p, y
+
+
+@hypothesis.given(_scores_utils())
+@hypothesis.settings(max_examples=30, deadline=None)
+def test_loss_matches_bruteforce(py):
+    p, y = py
+    loss = RL.pairwise_hinge_loss(jnp.asarray(p), jnp.asarray(y))
+    ref = R.loss_ref(jnp.asarray(p), jnp.asarray(y))
+    assert float(loss) == pytest.approx(float(ref), rel=1e-5, abs=1e-6)
+
+
+@hypothesis.given(_scores_utils())
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_vjp_is_lemma2_subgradient(py):
+    """The custom VJP must equal (c - d)/N (Lemma 2, wrt scores)."""
+    p, y = py
+    g = jax.grad(lambda s: RL.pairwise_hinge_loss(s, jnp.asarray(y)))(
+        jnp.asarray(p))
+    c, d = R.counts_ref(jnp.asarray(p), jnp.asarray(y))
+    n = max(int(R.num_pairs_ref(jnp.asarray(y))), 1)
+    expect = (np.asarray(c) - np.asarray(d)) / n
+    np.testing.assert_allclose(np.asarray(g), expect, rtol=1e-6)
+
+
+def test_vjp_matches_finite_differences_off_kinks():
+    """Away from hinge kinks the subgradient IS the gradient — check with
+    central differences."""
+    rng = np.random.default_rng(0)
+    m = 40
+    p = rng.normal(size=m).astype(np.float32) * 3
+    y = rng.integers(0, 5, size=m).astype(np.float32)
+    # nudge p away from kink surfaces p_i - p_j == -1
+    diff = p[:, None] - p[None, :] + 1.0
+    if np.min(np.abs(diff[~np.eye(m, dtype=bool)])) < 1e-2:
+        p += 0.005
+
+    f = lambda s: float(RL.pairwise_hinge_loss(jnp.asarray(s),
+                                               jnp.asarray(y)))
+    g = jax.grad(lambda s: RL.pairwise_hinge_loss(s, jnp.asarray(y)))(
+        jnp.asarray(p))
+    eps = 1e-3
+    for i in rng.choice(m, 6, replace=False):
+        e = np.zeros(m, np.float32)
+        e[i] = eps
+        fd = (f(p + e) - f(p - e)) / (2 * eps)
+        assert float(g[i]) == pytest.approx(fd, abs=2e-3)
+
+
+def test_grouped_loss_ignores_cross_group_pairs():
+    rng = np.random.default_rng(1)
+    p = rng.normal(size=30).astype(np.float32)
+    y = rng.normal(size=30).astype(np.float32)
+    g = (np.arange(30) % 3).astype(np.int32)
+    loss_g = RL.pairwise_hinge_loss(jnp.asarray(p), jnp.asarray(y),
+                                    jnp.asarray(g))
+    # brute force within groups
+    tot, n = 0.0, 0
+    for i in range(30):
+        for j in range(30):
+            if g[i] == g[j] and y[i] < y[j]:
+                n += 1
+                tot += max(0.0, 1.0 + p[i] - p[j])
+    assert float(loss_g) == pytest.approx(tot / n, rel=1e-5)
+
+
+def test_loss_and_subgradient_consistent_with_grad():
+    rng = np.random.default_rng(2)
+    p = jnp.asarray(rng.normal(size=50).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 7, size=50).astype(np.float32))
+    loss, sub = RL.loss_and_subgradient(p, y)
+    g = jax.grad(lambda s: RL.pairwise_hinge_loss(s, y))(p)
+    np.testing.assert_allclose(np.asarray(sub), np.asarray(g), rtol=1e-6)
+    assert float(loss) == pytest.approx(
+        float(RL.pairwise_hinge_loss(p, y)), rel=1e-6)
+
+
+# ----------------------------------------------------------- ranking error
+
+
+def _brute_rank_error(p, y, g=None):
+    m = len(p)
+    tot, n = 0.0, 0
+    for i in range(m):
+        for j in range(m):
+            if (g is None or g[i] == g[j]) and y[i] < y[j]:
+                n += 1
+                if p[i] > p[j]:
+                    tot += 1.0
+                elif p[i] == p[j]:
+                    tot += 0.5
+    return tot / max(n, 1)
+
+
+@hypothesis.given(_scores_utils())
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_ranking_error_matches_bruteforce(py):
+    p, y = py
+    err = RL.ranking_error(jnp.asarray(p), jnp.asarray(y))
+    assert float(err) == pytest.approx(_brute_rank_error(p, y), abs=1e-5)
+
+
+def test_ranking_error_with_predicted_ties():
+    p = np.asarray([0.0, 0.0, 1.0], np.float32)
+    y = np.asarray([0.0, 1.0, 2.0], np.float32)
+    err = RL.ranking_error(jnp.asarray(p), jnp.asarray(y))
+    assert float(err) == pytest.approx(_brute_rank_error(p, y), abs=1e-6)
+
+
+def test_ranking_error_perfect_and_inverted():
+    y = np.arange(10).astype(np.float32)
+    assert float(RL.ranking_error(jnp.asarray(y), jnp.asarray(y))) == 0.0
+    assert float(RL.ranking_error(jnp.asarray(-y), jnp.asarray(y))) == 1.0

@@ -1,0 +1,114 @@
+"""Fault-tolerance tests: bit-identical restart, NaN policies, stragglers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.configs.reduced import reduced
+from repro.data import TokenPipeline, TokenPipelineConfig
+from repro.distributed.sharding import NoSharding
+from repro.runtime import LoopConfig, SimulatedPreemption, run
+from repro.train.trainer import init_state, make_train_step
+
+
+@pytest.fixture(scope='module')
+def setup():
+    cfg = reduced('qwen2.5-3b')
+    tcfg = TrainConfig(remat='none', warmup_steps=2, decay_steps=20)
+    step_fn = jax.jit(make_train_step(cfg, tcfg, NoSharding()))
+    tp = TokenPipeline(TokenPipelineConfig(cfg.vocab, 16, 2, seed=0))
+    init_fn = lambda: init_state(cfg, jax.random.PRNGKey(0))
+    return cfg, step_fn, tp, init_fn
+
+
+def _max_param_diff(a, b):
+    d = jax.tree.map(
+        lambda x, y: float(jnp.max(jnp.abs(x.astype(jnp.float32)
+                                           - y.astype(jnp.float32)))),
+        a['params'], b['params'])
+    return max(jax.tree.leaves(d))
+
+
+def test_restart_is_bit_identical(tmp_path, setup):
+    _, step_fn, tp, init_fn = setup
+    lc_a = LoopConfig(total_steps=6, ckpt_dir=str(tmp_path / 'a'),
+                      ckpt_every=2, async_ckpt=False)
+    state_a, rep_a = run(step_fn, init_fn, tp.batch, lc_a)
+    assert rep_a.resumed_from is None
+
+    lc_b = LoopConfig(total_steps=6, ckpt_dir=str(tmp_path / 'b'),
+                      ckpt_every=2, async_ckpt=False)
+    with pytest.raises(SimulatedPreemption):
+        run(step_fn, init_fn, tp.batch, lc_b, fail_at=3)
+    state_b, rep_b = run(step_fn, init_fn, tp.batch, lc_b)
+    assert rep_b.resumed_from == 2
+    assert _max_param_diff(state_a, state_b) == 0.0
+    # losses replayed from the checkpoint match the uninterrupted tail
+    np.testing.assert_allclose(rep_b.losses, rep_a.losses[2:], rtol=1e-6)
+
+
+def test_double_failure_restart(tmp_path, setup):
+    _, step_fn, tp, init_fn = setup
+    lc = LoopConfig(total_steps=8, ckpt_dir=str(tmp_path / 'c'),
+                    ckpt_every=2, async_ckpt=False)
+    for fail in (3, 6):
+        with pytest.raises(SimulatedPreemption):
+            run(step_fn, init_fn, tp.batch, lc, fail_at=fail)
+    state, rep = run(step_fn, init_fn, tp.batch, lc)
+    assert rep.resumed_from == 6
+    assert rep.final_step == 8
+
+
+def test_nan_skip_policy(tmp_path, setup):
+    _, step_fn, tp, init_fn = setup
+
+    calls = {'n': 0}
+
+    def poisoned_step(state, batch):
+        calls['n'] += 1
+        new_state, metrics = step_fn(state, batch)
+        if calls['n'] == 2:
+            metrics = dict(metrics, loss=jnp.asarray(float('nan')))
+        return new_state, metrics
+
+    lc = LoopConfig(total_steps=4, ckpt_dir=str(tmp_path / 'd'),
+                    ckpt_every=10, async_ckpt=False, nan_policy='skip')
+    state, rep = run(poisoned_step, init_fn, tp.batch, lc)
+    assert rep.skipped_steps == 1
+    assert len(rep.losses) == 3
+
+
+def test_nan_halt_policy(tmp_path, setup):
+    _, step_fn, tp, init_fn = setup
+
+    def nan_step(state, batch):
+        new_state, metrics = step_fn(state, batch)
+        return new_state, dict(metrics, loss=jnp.asarray(float('nan')))
+
+    lc = LoopConfig(total_steps=4, ckpt_dir=str(tmp_path / 'e'),
+                    ckpt_every=10, async_ckpt=False, nan_policy='halt')
+    with pytest.raises(FloatingPointError):
+        run(nan_step, init_fn, tp.batch, lc)
+
+
+def test_straggler_detection(tmp_path, setup):
+    _, step_fn, tp, init_fn = setup
+    import time
+
+    calls = {'n': 0}
+
+    def slow_step(state, batch):
+        calls['n'] += 1
+        if calls['n'] == 5:
+            time.sleep(0.5)                 # inject one straggler step
+        return step_fn(state, batch)
+
+    seen = []
+    lc = LoopConfig(total_steps=6, ckpt_dir=str(tmp_path / 'f'),
+                    ckpt_every=10, async_ckpt=False, straggler_factor=3.0)
+    _, rep = run(slow_step, init_fn, tp.batch, lc,
+                 on_straggler=lambda s, ratio: seen.append((s, ratio)))
+    assert rep.straggler_steps >= 1
+    assert seen and seen[0][1] > 3.0

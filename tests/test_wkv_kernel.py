@@ -1,0 +1,143 @@
+"""WKV Pallas kernel validation: shape/dtype/tile sweeps vs the lax.scan
+oracle (kernels/wkv/ref.py), forward and backward, interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.wkv import kernel as K
+from repro.kernels.wkv import ref as R
+from repro.kernels.wkv.ops import wkv_apply
+
+f32 = jnp.float32
+
+
+def _case(n, t, kk, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    r, k, v = [jnp.asarray(rng.normal(size=(n, t, kk)).astype(dtype))
+               for _ in range(3)]
+    w = jnp.asarray(rng.uniform(0.5, 0.999, size=(n, t, kk)).astype(
+        np.float32))
+    u = jnp.asarray(rng.normal(size=(n, kk)).astype(np.float32))
+    s0 = jnp.asarray(0.1 * rng.normal(size=(n, kk, kk)).astype(np.float32))
+    return r, k, v, w, u, s0
+
+
+@pytest.mark.parametrize('n,t,kk,bn,chunk', [
+    (2, 32, 16, 1, 16),
+    (4, 64, 32, 2, 32),
+    (8, 128, 64, 8, 64),
+    (8, 128, 64, 4, 16),     # chunk smaller than K
+    (6, 96, 8, 2, 32),       # small head dim, non-pow2 n
+])
+def test_wkv_forward_shape_sweep(n, t, kk, bn, chunk):
+    r, k, v, w, u, s0 = _case(n, t, kk, seed=n + t)
+    o, sT, bnd = K.wkv_forward(r, k, v, w, u, s0, bn=bn, chunk=chunk,
+                               interpret=True)
+    o_r, sT_r = R.wkv_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_r),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(sT_r),
+                               rtol=1e-5, atol=1e-5)
+    assert bnd.shape == (n, t // chunk, kk, kk)
+    # chunk boundaries must equal the scan state at those offsets
+    _, s_mid = R.wkv_ref(r[:, :chunk], k[:, :chunk], v[:, :chunk],
+                         w[:, :chunk], u, s0)
+    np.testing.assert_allclose(np.asarray(bnd[:, 1]), np.asarray(s_mid),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize('n,t,kk,bn,chunk', [
+    (2, 64, 32, 1, 32),
+    (4, 128, 64, 2, 64),
+    (4, 128, 64, 2, 32),
+])
+def test_wkv_backward_matches_autodiff(n, t, kk, bn, chunk):
+    r, k, v, w, u, s0 = _case(n, t, kk, seed=7)
+    rng = np.random.default_rng(8)
+    do = jnp.asarray(rng.normal(size=(n, t, kk)).astype(np.float32))
+    dsT = jnp.asarray(rng.normal(size=(n, kk, kk)).astype(np.float32))
+    _, _, bnd = K.wkv_forward(r, k, v, w, u, s0, bn=bn, chunk=chunk,
+                              interpret=True)
+    outs = K.wkv_backward(r, k, v, w, u, bnd, do, dsT, bn=bn, chunk=chunk,
+                          interpret=True)
+    refs = R.wkv_ref_vjp(r, k, v, w, u, s0, do, dsT)
+    for name, a, b in zip(('dr', 'dk', 'dv', 'dw', 'du', 'ds0'), outs, refs):
+        scale = float(jnp.max(jnp.abs(b))) + 1e-9
+        err = float(jnp.max(jnp.abs(a - b))) / scale
+        assert err < 1e-5, f'{name}: rel err {err}'
+
+
+def test_wkv_bf16_io_matches_quantized_oracle():
+    """bf16 r/k/v streams must match the oracle run on the SAME quantized
+    values (isolates kernel error from quantization error)."""
+    rng = np.random.default_rng(3)
+    n, t, kk = 4, 128, 64
+    bf = jnp.bfloat16
+    r, k, v = [jnp.asarray(rng.normal(size=(n, t, kk)).astype(np.float32),
+                           bf) for _ in range(3)]
+    w = jnp.asarray(rng.uniform(0.6, 0.99, size=(n, t, kk)).astype(
+        np.float32))
+    u = jnp.asarray(rng.normal(size=(n, kk)).astype(np.float32))
+    s0 = jnp.zeros((n, kk, kk), f32)
+    o, sT = wkv_apply(r, k, v, w, u, s0)
+    o_r, sT_r = R.wkv_ref(r.astype(f32), k.astype(f32), v.astype(f32),
+                          w, u, s0)
+    assert o.dtype == bf
+    # o is rounded to bf16 on output: tolerance = bf16 eps * |o| scale
+    scale = float(jnp.max(jnp.abs(o_r)))
+    assert float(jnp.max(jnp.abs(o.astype(f32) - o_r))) < 0.01 * scale
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(sT_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_wkv_custom_vjp_grad_flow():
+    r, k, v, w, u, s0 = _case(4, 64, 32, seed=11)
+
+    def loss_k(rr):
+        return jnp.sum(wkv_apply(rr, k, v, w, u, s0)[0] ** 2)
+
+    def loss_r(rr):
+        return jnp.sum(R.wkv_ref(rr, k, v, w, u, s0)[0] ** 2)
+
+    gk = jax.grad(loss_k)(r)
+    gr = jax.grad(loss_r)(r)
+    np.testing.assert_allclose(np.asarray(gk), np.asarray(gr),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_wkv_state_chaining_matches_decode():
+    """Running two half-sequences with chained state == one full run —
+    the prefill/decode contract."""
+    r, k, v, w, u, s0 = _case(2, 64, 16, seed=5)
+    o_full, sT_full = R.wkv_ref(r, k, v, w, u, s0)
+    h = 32
+    o1, s_mid = wkv_apply(r[:, :h], k[:, :h], v[:, :h], w[:, :h], u, s0)
+    o2, sT = wkv_apply(r[:, h:], k[:, h:], v[:, h:], w[:, h:], u, s_mid)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([o1, o2], 1)),
+                               np.asarray(o_full), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(sT_full),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rwkv_model_kernel_impl_matches_scan_impl():
+    """Full reduced rwkv6 model: kernel impl forward == scan impl."""
+    import dataclasses
+    from repro.configs.reduced import reduced
+    from repro.distributed.sharding import NoSharding
+    from repro.models import lm as LM
+    from repro.models.params import init_params
+
+    cfg_s = reduced('rwkv6-3b')
+    cfg_k = dataclasses.replace(cfg_s, wkv_impl='kernel')
+    params = init_params(LM.model_defs(cfg_s), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {'tokens': jnp.asarray(
+        rng.integers(0, cfg_s.vocab, size=(2, 64)), jnp.int32)}
+    shd = NoSharding()
+    h_s = LM.forward_train(params, cfg_s, batch, shd, remat='none')
+    h_k = LM.forward_train(params, cfg_k, batch, shd, remat='none')
+    scale = float(jnp.max(jnp.abs(h_s.astype(f32))))
+    diff = float(jnp.max(jnp.abs(h_s.astype(f32) - h_k.astype(f32))))
+    assert diff < 0.05 * scale, (diff, scale)   # bf16 stream tolerance

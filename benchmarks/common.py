@@ -5,7 +5,6 @@ from __future__ import annotations
 import csv
 import os
 import resource
-import sys
 import time
 
 

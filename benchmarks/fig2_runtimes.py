@@ -1,10 +1,13 @@
 """Paper Figure 2: full training time to convergence (eps = 1e-3) vs m,
 TreeRSVM vs PairRSVM. The paper's headline: 18 min vs 83-122 h at 512k
-Reuters examples; here the same separation appears at CPU-budget sizes."""
+Reuters examples; here the same separation appears at CPU-budget sizes.
+
+Both methods train through the oracle layer (`RankSVM(method=...)` ->
+`core.oracle.make_oracle` -> fused device-resident TreeOracle /
+PairwiseOracle steps inside one BMRM loop)."""
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import RankSVM
 from repro.data import cadata_like, reuters_like

@@ -1,12 +1,14 @@
-"""Beyond-paper: dense-pairwise vs merge-tree crossover.
+"""Beyond-paper: dense-pairwise vs merge-tree oracle crossover.
 
-The framework dispatches between the tiled O(m²) pairwise kernel (dense
+The oracle layer dispatches between the tiled O(m²) pairwise kernel (dense
 compare+reduce — MXU/VPU-friendly) and the O(m log² m) merge-sort tree
-(gather-bound) per ranking-group size (`kernels/pairwise_rank/ops.counts_auto`).
+(gather-bound) per ranking-group size — `core.oracle.PairwiseOracle` with
+dispatch='auto' routes through `kernels/pairwise_rank/ops.counts_auto`.
 
-On this CPU container we measure the same trade with the vectorized dense
-pairwise pass (`counts_blocked_host`, the algorithmic twin of the Pallas
-kernel) vs the tree path, and report the empirical crossover. On TPU the
+On this CPU container we measure the same trade end-to-end through the
+oracle layer: a full `loss_and_subgrad` of `PairwiseOracle` (the blocked
+dense pairwise pass, the algorithmic twin of the Pallas kernel) vs
+`TreeOracle`, with a tiny feature dim so counting dominates. On TPU the
 dense side's advantage extends further right (the VPU does 8×128 compares
 per cycle; the tree's gathers do not vectorize) — the shipped default
 KERNEL_MAX_M=4096 is the analytic estimate for v5e.
@@ -14,10 +16,9 @@ KERNEL_MAX_M=4096 is the analytic estimate for v5e.
 
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import counts as C
+from repro.core.oracle import PairwiseOracle, TreeOracle
 
 from .common import Reporter, timeit
 
@@ -28,11 +29,18 @@ def main(full: bool = False):
     rng = np.random.default_rng(0)
     crossover = None
     for m in sizes:
-        p = jnp.asarray(rng.normal(size=m).astype(np.float32))
-        y = jnp.asarray(rng.integers(0, 8, size=m).astype(np.float32))
-        dense = timeit(lambda: C.counts_blocked_host(
-            p, y, block=min(m, 2048))[0].block_until_ready())
-        tree = timeit(lambda: C.counts(p, y)[0].block_until_ready())
+        X = rng.normal(size=(m, 8))
+        y = rng.integers(0, 8, size=m).astype(np.float32)
+        w = rng.normal(size=8)
+
+        def run(orc):
+            def f():
+                loss, a = orc.loss_and_subgrad(w)
+                return float(loss), np.asarray(a)
+            return timeit(f)
+
+        dense = run(PairwiseOracle(X, y, block=min(m, 2048)))
+        tree = run(TreeOracle(X, y))
         winner = 'dense' if dense < tree else 'tree'
         if winner == 'tree' and crossover is None:
             crossover = m

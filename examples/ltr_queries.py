@@ -4,8 +4,9 @@
 
 Preferences hold only within a query. The data has a large per-query bias
 (nuisance): the grouped loss ignores it; an ungrouped fit is poisoned by it.
-The grouped counts still run in ONE linearithmic pass (core.counts_grouped's
-key-offset trick) — complexity O(ms + m log(m)), paper sec. 4.3.
+The grouped counts still run in ONE linearithmic pass (the key-offset trick
+inside core.oracle.GroupedOracle, which `fit(..., groups=)` selects) —
+complexity O(ms + m log(m)), paper sec. 4.3.
 """
 
 import os

@@ -5,6 +5,10 @@ ranking with real-valued (r ~= m) utilities, TreeRSVM vs PairRSVM.
 
 At the paper's 512k scale the gap is 18 min vs 122 h; the same asymptotics
 are visible here at CPU sizes (use benchmarks/fig1,2 for the full curves).
+
+Training flows through the oracle layer: the CSR features live on device
+(gather-based matvec + fused single-tree counts in one jitted step;
+core.oracle.TreeOracle), with the transpose-matvec dispatched per backend.
 """
 
 import argparse

@@ -18,7 +18,6 @@ learnable, so held-out ranking error drops toward 0 as training proceeds.
 """
 
 import argparse
-import dataclasses
 import os
 import sys
 

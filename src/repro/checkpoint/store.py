@@ -29,14 +29,30 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:            # optional: only needed for compression='zstd'
+    zstandard = None
 
 _CHUNK = 1 << 26               # 64 MiB raw chunks inside a shard file
 _LEVEL = 3
+_ZSTD_MAGIC = b'\x28\xb5\x2f\xfd'   # zstd frame header
+
+
+def _require_zstandard(what: str):
+    if zstandard is None:
+        raise ModuleNotFoundError(
+            f'{what} requires the optional `zstandard` package '
+            f"(pip install zstandard, or the project's [compression] "
+            f"extra); pass compression='none' to save uncompressed.")
+    return zstandard
 
 
 def _tree_flatten_with_paths(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree.flatten_with_path only exists in newer jax; use the stable
+    # tree_util spelling so the pinned CI version works too.
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     paths = ['/'.join(str(getattr(k, 'key', getattr(k, 'idx', k)))
                       for k in path) for path, _ in flat]
     leaves = [leaf for _, leaf in flat]
@@ -48,7 +64,7 @@ def _step_dir(root: str, step: int) -> str:
 
 
 def save(root: str, step: int, tree, *, n_shards: int = 1,
-         shard_filter=None) -> str:
+         shard_filter=None, compression: str = 'auto') -> str:
     """Write `tree` (pytree of arrays) as checkpoint `step` under `root`.
 
     Args:
@@ -57,15 +73,25 @@ def save(root: str, step: int, tree, *, n_shards: int = 1,
         shards for which this returns True (multi-host mode). The COMMITTED
         marker must then be written by exactly one designated host after a
         barrier — `commit()` below, host 0 in `runtime.train_loop`.
+      compression: 'zstd' | 'none' | 'auto' ('zstd' when the optional
+        zstandard package is installed, else 'none'). 'zstd' without the
+        package raises a clear ModuleNotFoundError.
     Returns the checkpoint directory.
     """
+    if compression == 'auto':
+        compression = 'zstd' if zstandard is not None else 'none'
+    if compression not in ('zstd', 'none'):
+        raise ValueError(f'unknown compression {compression!r}')
+    cctx = (_require_zstandard("compression='zstd'")
+            .ZstdCompressor(level=_LEVEL) if compression == 'zstd' else None)
+
     d = _step_dir(root, step)
     os.makedirs(d, exist_ok=True)
     paths, leaves, _ = _tree_flatten_with_paths(tree)
 
     arrays = [np.asarray(jax.device_get(x)) for x in leaves]
-    meta = {'step': int(step), 'n_shards': int(n_shards), 'leaves': []}
-    cctx = zstandard.ZstdCompressor(level=_LEVEL)
+    meta = {'step': int(step), 'n_shards': int(n_shards),
+            'compression': compression, 'leaves': []}
 
     shards = [[] for _ in range(n_shards)]   # per-shard list of chunk records
     for li, (p, a) in enumerate(zip(paths, arrays)):
@@ -88,9 +114,11 @@ def save(root: str, step: int, tree, *, n_shards: int = 1,
         if shard_filter is not None and not shard_filter(sid):
             continue
         fn = os.path.join(d, f'shard_{sid:05d}_of_{n_shards:05d}.bin')
+        payload = msgpack.packb(shards[sid], use_bin_type=True)
+        if cctx is not None:
+            payload = cctx.compress(payload)
         with open(fn + '.tmp', 'wb') as f:
-            f.write(cctx.compress(msgpack.packb(shards[sid],
-                                                use_bin_type=True)))
+            f.write(payload)
         os.replace(fn + '.tmp', fn)
 
     with open(os.path.join(d, 'meta.json.tmp'), 'w') as f:
@@ -136,7 +164,6 @@ def restore(root: str, step: int | None = None, *, like=None,
     d = _step_dir(root, step)
     with open(os.path.join(d, 'meta.json')) as f:
         meta = json.load(f)
-    dctx = zstandard.ZstdDecompressor()
     shard_cache: dict[int, list] = {}
 
     def shard(sid: int):
@@ -144,8 +171,17 @@ def restore(root: str, step: int | None = None, *, like=None,
             fn = os.path.join(
                 d, f'shard_{sid:05d}_of_{meta["n_shards"]:05d}.bin')
             with open(fn, 'rb') as f:
-                shard_cache[sid] = msgpack.unpackb(
-                    dctx.decompress(f.read()), raw=False)
+                payload = f.read()
+            # Detect compression PER SHARD by the zstd frame magic rather
+            # than trusting meta['compression']: with compression='auto'
+            # and shard_filter, hosts with and without zstandard installed
+            # can legitimately mix shard formats under one checkpoint (and
+            # meta.json is last-writer-wins across hosts).
+            if payload[:4] == _ZSTD_MAGIC:
+                dctx = _require_zstandard(
+                    'restoring a zstd-compressed shard').ZstdDecompressor()
+                payload = dctx.decompress(payload)
+            shard_cache[sid] = msgpack.unpackb(payload, raw=False)
         return shard_cache[sid]
 
     leaves = {}

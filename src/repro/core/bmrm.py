@@ -5,18 +5,26 @@ Follows Teo et al. (2010) with the Franc & Sonnenburg (2009) best-iterate rule
 the paper adopts: w_b tracks the best J seen; the gap eps_t = J(w_b) - J_t(w_t)
 is the termination statistic (it upper-bounds J(w_b) - J(w*)).
 
-One oracle call per iteration: the caller's `loss_and_subgrad(w)` returns
-(R_emp(w), a) with a a subgradient — for RankSVM that is core.rank_loss /
-core.counts, i.e. the paper's O(ms + m log m) Algorithm 3.
+One oracle call per iteration. The oracle is either a bare callable
+`loss_and_subgrad(w) -> (R_emp(w), a)` or a `core.oracle.RankOracle`. For a
+device-resident RankOracle the cutting-plane state follows the oracle onto
+the device (DESIGN.md §4): the plane-gradient matrix A lives there, the
+Gram cross terms A @ a_t and the iterate w_t = -A^T alpha / (2 lam) are
+device matvecs, and only the tiny t x t bundle QP (`qp.solve_bundle_dual`)
+plus scalar bookkeeping run on host — per iteration nothing larger than a
+t-vector crosses the host<->device boundary.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Sequence
+import warnings
+from typing import Callable, Union
 
 import numpy as np
+
+import jax.numpy as jnp
 
 from .qp import solve_bundle_dual
 
@@ -39,9 +47,9 @@ class BMRMResult:
     stats: BMRMStats
 
 
-def bmrm(loss_and_subgrad: Callable[[np.ndarray], tuple],
-         dim: int,
-         lam: float,
+def bmrm(loss_and_subgrad: Union[Callable, object],
+         dim: int | None = None,
+         lam: float = 1e-3,
          eps: float = 1e-3,
          max_iter: int = 1000,
          w0: np.ndarray | None = None,
@@ -50,8 +58,9 @@ def bmrm(loss_and_subgrad: Callable[[np.ndarray], tuple],
     """Minimize R_emp(w) + lam ||w||^2 by cutting planes.
 
     Args:
-      loss_and_subgrad: w -> (R_emp(w), subgradient of R_emp at w).
-      dim: dimensionality of w.
+      loss_and_subgrad: w -> (R_emp(w), subgradient of R_emp at w), or a
+        RankOracle (anything exposing `.loss_and_subgrad` and `.n`).
+      dim: dimensionality of w; defaults to `oracle.n` for RankOracles.
       lam: regularization constant (the paper's lambda).
       eps: termination gap (paper uses 1e-3, SVM^rank's default).
       max_iter: iteration cap.
@@ -59,48 +68,79 @@ def bmrm(loss_and_subgrad: Callable[[np.ndarray], tuple],
       max_planes: optional cap on retained planes (oldest-inactive dropped) —
         keeps the master QP bounded for very long runs (Teo et al. sec. 5).
     """
-    w_prev = np.zeros(dim) if w0 is None else np.asarray(w0, np.float64)
+    oracle = (loss_and_subgrad
+              if hasattr(loss_and_subgrad, 'loss_and_subgrad') else None)
+    fn = oracle.loss_and_subgrad if oracle is not None else loss_and_subgrad
+    if dim is None:
+        if oracle is None:
+            raise ValueError('dim is required for bare-callable oracles')
+        dim = int(oracle.n)
+    device = bool(oracle is not None
+                  and getattr(oracle, 'device_resident', False))
+    if device and eps < 1e-5:
+        # Device oracles return f32 subgradients and the plane bookkeeping
+        # stays f32 on device; the duality gap then carries an ~1e-6-relative
+        # noise floor and may stall above very tight eps (bare callables keep
+        # the pre-refactor float64 path and are unaffected).
+        warnings.warn(f'eps={eps:g} is below the f32 noise floor of '
+                      'device-resident oracles; the gap may stall above it',
+                      RuntimeWarning, stacklevel=2)
 
-    A = np.zeros((0, dim))        # cutting-plane gradients a_i (rows)
-    bvec = np.zeros((0,))         # offsets b_i
-    G = np.zeros((0, 0))          # Gram matrix A A'
+    if device:
+        w_prev = (jnp.zeros(dim, jnp.float32) if w0 is None
+                  else jnp.asarray(w0, jnp.float32))
+        A = jnp.zeros((0, dim), jnp.float32)   # plane gradients, on device
+    else:
+        w_prev = np.zeros(dim) if w0 is None else np.asarray(w0, np.float64)
+        A = np.zeros((0, dim))
+
+    bvec = np.zeros((0,))         # offsets b_i            (host, tiny)
+    G = np.zeros((0, 0))          # Gram matrix A A'       (host, t x t)
     alpha = None
 
     # J at the starting point (evaluated inside the first loop turn).
-    w_best = w_prev.copy()
+    w_best = w_prev if device else w_prev.copy()
     j_best = np.inf
     stats = BMRMStats(0, False, np.inf, np.inf, [], [], [], [])
 
     for t in range(1, max_iter + 1):
         t0 = time.perf_counter()
-        r_emp, a_t = loss_and_subgrad(w_prev)
+        r_emp, a_t = fn(w_prev)
+        r_emp = float(r_emp)      # blocks on the fused device step
         stats.oracle_seconds.append(time.perf_counter() - t0)
-        r_emp = float(r_emp)
-        a_t = np.asarray(a_t, np.float64)
 
-        j_prev = r_emp + lam * float(w_prev @ w_prev)
+        a_t = (jnp.asarray(a_t, jnp.float32) if device
+               else np.asarray(a_t, np.float64))
+        wa = float(w_prev @ a_t)
+        ww = float(w_prev @ w_prev)
+        a_sq = float(a_t @ a_t)
+        cross = (np.asarray(A @ a_t, np.float64) if len(A)
+                 else np.zeros((0,)))
+        A = (jnp.concatenate([A, a_t[None, :]], axis=0) if device
+             else np.vstack([A, a_t[None, :]]))
+
+        j_prev = r_emp + lam * ww
         if j_prev < j_best:
-            j_best, w_best = j_prev, w_prev.copy()
+            j_best, w_best = j_prev, (w_prev if device else w_prev.copy())
 
-        b_t = r_emp - float(w_prev @ a_t)
-
-        # Incremental Gram update.
-        cross = A @ a_t if len(A) else np.zeros((0,))
-        A = np.vstack([A, a_t[None, :]])
-        bvec = np.append(bvec, b_t)
-        Gn = np.empty((len(A), len(A)))
+        bvec = np.append(bvec, r_emp - wa)
+        Gn = np.empty((len(bvec), len(bvec)))
         Gn[:-1, :-1] = G
         Gn[-1, :-1] = cross
         Gn[:-1, -1] = cross
-        Gn[-1, -1] = float(a_t @ a_t)
+        Gn[-1, -1] = a_sq
         G = Gn
 
-        if max_planes is not None and len(A) > max_planes:
+        if max_planes is not None and len(bvec) > max_planes:
             # Drop the plane with the smallest dual weight (least active).
             drop = int(np.argmin(alpha)) if alpha is not None else 0
-            keep = np.ones(len(A), bool)
+            keep = np.ones(len(bvec), bool)
             keep[drop] = False
-            A, bvec, G = A[keep], bvec[keep], G[np.ix_(keep, keep)]
+            bvec, G = bvec[keep], G[np.ix_(keep, keep)]
+            if device:
+                A = jnp.take(A, jnp.asarray(np.where(keep)[0]), axis=0)
+            else:
+                A = A[keep]
             if alpha is not None:
                 alpha = alpha[keep]
                 s = alpha.sum()
@@ -108,15 +148,17 @@ def bmrm(loss_and_subgrad: Callable[[np.ndarray], tuple],
 
         t1 = time.perf_counter()
         warm = None
-        if alpha is not None and len(alpha) == len(A) - 1:
+        if alpha is not None and len(alpha) == len(bvec) - 1:
             warm = np.append(alpha * (1.0 - 1e-3), 1e-3)
         alpha, dual_val = solve_bundle_dual(G, bvec, lam, alpha0=warm)
         stats.qp_seconds.append(time.perf_counter() - t1)
 
-        w_t = -(A.T @ alpha) / (2.0 * lam)
+        w_t = -(A.T @ (jnp.asarray(alpha, jnp.float32) if device
+                       else alpha)) / (2.0 * lam)
+        wt_sq = float(w_t @ w_t)
         # J_t(w_t) = max_i (a_i . w_t + b_i) + lam ||w_t||^2, all via G.
         aw = -(G @ alpha) / (2.0 * lam)
-        jt = float(np.max(aw + bvec) + lam * (w_t @ w_t))
+        jt = float(np.max(aw + bvec) + lam * wt_sq)
 
         gap = j_best - jt
         stats.loss_history.append(r_emp)
@@ -133,4 +175,4 @@ def bmrm(loss_and_subgrad: Callable[[np.ndarray], tuple],
 
     stats.obj_best = float(j_best)
     stats.gap = float(stats.gap_history[-1]) if stats.gap_history else np.inf
-    return BMRMResult(w=w_best, stats=stats)
+    return BMRMResult(w=np.asarray(w_best, np.float64), stats=stats)

@@ -41,49 +41,63 @@ def _next_pow2(m: int) -> int:
     return 1 if m <= 1 else 1 << (m - 1).bit_length()
 
 
-def _count_le_in_block(flat: jnp.ndarray, base: jnp.ndarray, t: jnp.ndarray,
-                       block: int) -> jnp.ndarray:
+def _count_cmp_in_block(flat: jnp.ndarray, base: jnp.ndarray, t: jnp.ndarray,
+                        block: int, strict: bool) -> jnp.ndarray:
     """Vectorized branchless binary search.
 
-    For each query q: count of elements <= t[q] inside the sorted block
-    flat[base[q] : base[q] + block]. `block` is a power of two.
+    For each query q: count of elements < t[q] (strict) or <= t[q] inside the
+    sorted block flat[base[q] : base[q] + block]. `block` is a power of two.
     Indices are clamped; callers mask out-of-range queries themselves.
     """
+    cmp = jnp.less if strict else jnp.less_equal
     mmax = flat.shape[0] - 1
     i = jnp.zeros_like(base)
     step = block // 2
     while step >= 1:
         idx = jnp.minimum(base + i + step - 1, mmax)
-        i = i + jnp.where(jnp.take(flat, idx) <= t, step, 0)
+        i = i + jnp.where(cmp(jnp.take(flat, idx), t), step, 0)
         step //= 2
     idx = jnp.minimum(base + i, mmax)
-    return i + (jnp.take(flat, idx) <= t).astype(i.dtype)
+    return i + cmp(jnp.take(flat, idx), t).astype(i.dtype)
 
 
-def _prefix_count_greater(y_seq: jnp.ndarray, prefix_len: jnp.ndarray,
-                          thresholds: jnp.ndarray,
-                          constrain=None) -> jnp.ndarray:
-    """For each query i: |{k < prefix_len[i] : y_seq[k] > thresholds[i]}|.
+def _count_le_in_block(flat: jnp.ndarray, base: jnp.ndarray, t: jnp.ndarray,
+                       block: int) -> jnp.ndarray:
+    return _count_cmp_in_block(flat, base, t, block, strict=False)
 
-    The merge-sort-tree query described in the module docstring. All inputs
-    share leading dimension m; y_seq is the y values in sorted-p order.
+
+def _tree_levels(y_pad: jnp.ndarray) -> dict:
+    """Merge-sort-tree levels: level b holds y_pad sorted inside aligned
+    blocks of 2^b, flattened. Level 0 (the raw array) is y_pad itself and is
+    not stored. Built once, queryable many times (`_prefix_query`)."""
+    mpad = y_pad.shape[0]
+    nlev = mpad.bit_length() - 1
+    levels = {}
+    for b in range(1, nlev + 1):
+        block = 1 << b
+        if block == mpad:
+            levels[b] = jnp.sort(y_pad)
+        else:
+            levels[b] = jnp.sort(y_pad.reshape(mpad // block, block),
+                                 axis=1).reshape(-1)
+    return levels
+
+
+def _prefix_query(levels: dict, y_pad: jnp.ndarray, prefix_len: jnp.ndarray,
+                  thresholds: jnp.ndarray, mode: str,
+                  constrain=None) -> jnp.ndarray:
+    """For each query i over prebuilt levels:
+        mode 'gt': |{k < prefix_len[i] : y_seq[k] > thresholds[i]}|
+        mode 'lt': |{k < prefix_len[i] : y_seq[k] < thresholds[i]}|
 
     `constrain` (optional) is applied to every query-indexed array — the
     distributed oracle passes a with_sharding_constraint that shards the
     QUERY side over the mesh while the tree levels stay replicated
     (core.distributed; the tree is 4 MB, the query work is the O(m log^2 m)
-    term).
-    """
-    m = y_seq.shape[0]
-    if m == 0:
-        return jnp.zeros((0,), jnp.int32)
+    term)."""
+    mpad = y_pad.shape[0]
+    nlev = mpad.bit_length() - 1
     cns = constrain or (lambda x: x)
-    mpad = _next_pow2(m)
-    # Padding value is irrelevant: prefix_len <= m, and every aligned block
-    # used by the decomposition lies entirely inside [0, prefix_len).
-    y_pad = jnp.pad(y_seq, (0, mpad - m), constant_values=jnp.inf)
-    nlev = mpad.bit_length() - 1  # block sizes 2^0 .. 2^nlev
-
     prefix_len = cns(prefix_len)
     thresholds = cns(thresholds)
     total = cns(jnp.zeros_like(prefix_len))
@@ -92,18 +106,32 @@ def _prefix_count_greater(y_seq: jnp.ndarray, prefix_len: jnp.ndarray,
         bit = (prefix_len >> b) & 1
         base = cns((prefix_len >> (b + 1)) << (b + 1))  # bits <= b cleared
         if block == 1:
-            idx = jnp.minimum(base, mpad - 1)
-            cnt_gt = (jnp.take(y_pad, idx) > thresholds).astype(jnp.int32)
+            v = jnp.take(y_pad, jnp.minimum(base, mpad - 1))
+            cnt = ((v > thresholds) if mode == 'gt'
+                   else (v < thresholds)).astype(jnp.int32)
+        elif mode == 'gt':
+            cnt = block - _count_le_in_block(levels[b], base, thresholds,
+                                             block)
         else:
-            if block == mpad:
-                flat = jnp.sort(y_pad)
-            else:
-                flat = jnp.sort(y_pad.reshape(mpad // block, block),
-                                axis=1).reshape(-1)
-            cnt_le = _count_le_in_block(flat, base, thresholds, block)
-            cnt_gt = block - cnt_le
-        total = cns(total + jnp.where(bit == 1, cnt_gt, 0))
+            cnt = _count_cmp_in_block(levels[b], base, thresholds, block,
+                                      strict=True)
+        total = cns(total + jnp.where(bit == 1, cnt, 0))
     return total
+
+
+def _prefix_count_greater(y_seq: jnp.ndarray, prefix_len: jnp.ndarray,
+                          thresholds: jnp.ndarray,
+                          constrain=None) -> jnp.ndarray:
+    """For each query i: |{k < prefix_len[i] : y_seq[k] > thresholds[i]}|."""
+    m = y_seq.shape[0]
+    if m == 0:
+        return jnp.zeros((0,), jnp.int32)
+    mpad = _next_pow2(m)
+    # Padding value is irrelevant: prefix_len <= m, and every aligned block
+    # used by the decomposition lies entirely inside [0, prefix_len).
+    y_pad = jnp.pad(y_seq, (0, mpad - m), constant_values=jnp.inf)
+    return _prefix_query(_tree_levels(y_pad), y_pad, prefix_len, thresholds,
+                         'gt', constrain=constrain)
 
 
 def _half_counts(p: jnp.ndarray, y: jnp.ndarray,
@@ -135,6 +163,60 @@ def counts(p: jnp.ndarray, y: jnp.ndarray):
     # Reflection: d_i = |{j : y_j < y_i and p_j > p_i - 1}| = c(-p, -y)_i.
     d = _half_counts(-p, -y)
     return c, d
+
+
+@jax.jit
+def counts_fused(p: jnp.ndarray, y: jnp.ndarray):
+    """(c, d) from ONE sort and ONE merge-sort tree — the oracle-layer fast
+    path (core.oracle), bit-identical to `counts` / `ref.counts_ref`.
+
+    `counts` runs the sweep twice (the d vector via the reflection
+    d(p, y) = c(-p, -y)), paying two argsorts and two tree builds. But d is
+    answerable from the *same* tree as c by complementing the margin:
+
+        d_i = |{k : y_k < y_i  and  p_k > p_i - 1}|
+            = |{k : y_k < y_i}| - |{k : y_k < y_i  and  p_k <= p_i - 1}|
+
+    The first term is the global strict y-rank (one sort + searchsorted);
+    the second is a count-less query over the prefix R_i = |{k : p_k <=
+    p_i - 1}| of the very tree built for c. `p_k <= p_i - 1` is the exact
+    float complement of the reference's `p_k > p_i - 1` (both compare
+    against the same rounded f32 value p_i - 1), so tie semantics match the
+    O(m^2) oracle bit-for-bit. Same O(m log^2 m) work bound, ~half the
+    constant: the tree build (the log^2 sort term) happens once.
+    """
+    p = p.astype(jnp.float32) if p.dtype == jnp.float64 else p
+    m = p.shape[0]
+    if m == 0:
+        z = jnp.zeros((0,), jnp.int32)
+        return z, z
+    order = jnp.argsort(p)
+    ps = jnp.take(p, order)
+    ys = jnp.take(y, order)
+    mpad = _next_pow2(m)
+    y_pad = jnp.pad(ys, (0, mpad - m), constant_values=jnp.inf)
+    levels = _tree_levels(y_pad)
+
+    one = jnp.asarray(1.0, ps.dtype)
+    # c: frontier p_k < p_i + 1, count y_k > y_i inside it.
+    frontier = jnp.searchsorted(ps, ps + one, side='left').astype(jnp.int32)
+    c_sorted = _prefix_query(levels, y_pad, frontier, ys, 'gt')
+    # d: prefix p_k <= p_i - 1, count y_k < y_i inside it; subtract from the
+    # global strict rank of y_i.
+    inner = jnp.searchsorted(ps, ps - one, side='right').astype(jnp.int32)
+    lt_inner = _prefix_query(levels, y_pad, inner, ys, 'lt')
+    glt = jnp.searchsorted(jnp.sort(y), ys, side='left').astype(jnp.int32)
+    d_sorted = glt - lt_inner
+
+    z = jnp.zeros((m,), jnp.int32)
+    return z.at[order].set(c_sorted), z.at[order].set(d_sorted)
+
+
+@jax.jit
+def counts_grouped_fused(p: jnp.ndarray, y: jnp.ndarray, g: jnp.ndarray):
+    """Grouped (c, d) via the single-tree pass (see `counts_grouped`)."""
+    pg, yg = _group_offsets(p, y, g)
+    return counts_fused(pg, yg)
 
 
 @jax.jit

@@ -1,0 +1,391 @@
+"""The BMRM oracle layer: one device-resident (loss, subgradient) abstraction.
+
+Every RankSVM training path — the paper's merge-sort-tree sweep, the O(m^2)
+pairwise baseline, the Pallas kernel fast path, per-query LTR grouping, and
+the pod-scale sharded oracle — is a `RankOracle`: an object that evaluates
+
+    loss_and_subgrad(w) -> (R_emp(w), a)      a = X^T (c - d) / N   (Lemma 2)
+
+plus the metadata BMRM needs (m, n, exact pair count N, device-residency).
+`core.bmrm` consumes any RankOracle; `core.ranksvm` is a thin estimator that
+selects one. New backends are one new subclass, not another estimator fork.
+
+Device-residency (DESIGN.md §4): each oracle's matvec + counts + loss +
+subgradient run as ONE jitted function — `p`, `c - d`, and the plane
+gradient `a` stay on device, eliminating the per-iteration host<->device
+round-trips of the pre-refactor estimator (`RankSVM._counts`). The single
+exception is measured, not assumed: on the CPU backend XLA's scatter-add is
+~2.5x slower than numpy's bincount loop, so the CSR transpose-matvec of the
+subgradient dispatches to the host kernel there (`csr_rmatvec='auto'`); on
+accelerator backends it stays on device. Either way the O(m log^2 m) counts
+and the forward matvec are device-side, and only w (in) and (loss, a) (out)
+cross the boundary.
+
+Tree counts use `counts.counts_fused` — the single-tree variant (one
+argsort + one merge-sort-tree build per oracle call instead of two) —
+except where a different counting engine is the point (PairwiseOracle's
+blocked pass and its `counts_auto` Pallas-kernel dispatch).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+try:
+    import scipy.sparse as _scipy_sparse
+except Exception:  # pragma: no cover - scipy is installed in this container
+    _scipy_sparse = None
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from . import counts as _counts
+from . import distributed as _dist
+
+f32 = jnp.float32
+
+
+# --------------------------------------------------------------- interface
+
+
+class RankOracle:
+    """Interface: per-iteration (loss, subgradient) for BMRM (Algorithm 1).
+
+    Attributes:
+      m: number of training examples (rows of X).
+      n: feature dimension (= dim of w and of the subgradient).
+      n_pairs: exact number of preference pairs N (host int).
+      device_resident: True when the subgradient comes out of a fused jitted
+        step — bmrm then keeps its cutting-plane bookkeeping on device.
+      name: short identifier for reports/benchmarks.
+    """
+
+    name = 'abstract'
+    device_resident = False
+    m: int
+    n: int
+    n_pairs: int
+
+    def loss_and_subgrad(self, w):
+        """R_emp(w) and a subgradient of R_emp at w (Lemmas 1-2)."""
+        raise NotImplementedError
+
+
+def _exact_pairs(y: np.ndarray, groups) -> int:
+    if groups is None:
+        return _counts.num_pairs_host(y)
+    groups = np.asarray(groups)
+    return int(sum(_counts.num_pairs_host(y[groups == u])
+                   for u in np.unique(groups)))
+
+
+# --------------------------------------------------------- feature engines
+
+
+def _is_csr_like(X) -> bool:
+    return (hasattr(X, 'data') and hasattr(X, 'indices')
+            and hasattr(X, 'indptr'))
+
+
+class _DenseFeatures:
+    """Row-major dense X, fully device-resident (both matvecs are gemv;
+    the traced math lives in `_fused_step`)."""
+
+    kind = 'dense'
+    _uniform = False
+
+    def __init__(self, X):
+        self.m, self.n = map(int, X.shape)
+        self.arrays = {'X': jnp.asarray(np.asarray(X), f32)}
+        self.device_rmatvec = True
+
+
+class _CSRFeatures:
+    """CSR X on device: gather-based forward matvec (a dense (m, s)
+    gather+reduce when rows have uniform nnz — the tf-idf layout — else a
+    sorted segment-sum), and a backend-dispatched transpose-matvec: XLA
+    scatter-add on accelerators, numpy bincount on the CPU backend where
+    the measured scatter throughput loses to the host loop.
+    """
+
+    kind = 'csr'
+
+    def __init__(self, X, csr_rmatvec: str = 'auto'):
+        if _scipy_sparse is not None and _scipy_sparse.issparse(X):
+            X = X.tocsr()
+        self._host = X
+        self.m, self.n = map(int, X.shape)
+        data = np.asarray(X.data, np.float32)
+        indices = np.asarray(X.indices, np.int32)
+        indptr = np.asarray(X.indptr, np.int64)
+        lens = np.diff(indptr)
+        self._uniform = bool(self.m > 0 and np.all(lens == lens[0])
+                             and lens[0] > 0)
+        if self._uniform:
+            s = int(lens[0])
+            self.arrays = {'data2': jnp.asarray(data.reshape(self.m, s)),
+                           'idx2': jnp.asarray(indices.reshape(self.m, s))}
+        else:
+            rows = np.repeat(np.arange(self.m, dtype=np.int32),
+                             lens.astype(np.int64))
+            self.arrays = {'data': jnp.asarray(data),
+                           'idx': jnp.asarray(indices),
+                           'rows': jnp.asarray(rows)}
+        if csr_rmatvec == 'auto':
+            csr_rmatvec = ('host' if jax.default_backend() == 'cpu'
+                           else 'device')
+        if csr_rmatvec not in ('host', 'device'):
+            raise ValueError(f'unknown csr_rmatvec {csr_rmatvec!r}')
+        self.device_rmatvec = csr_rmatvec == 'device'
+
+    def rmatvec_host(self, v: np.ndarray) -> np.ndarray:
+        X = self._host
+        if hasattr(X, 'rmatvec'):               # repro.data.sparse.CSRMatrix
+            return X.rmatvec(v)
+        return np.asarray(X.T @ v).ravel()      # scipy CSR
+
+
+def _features(X, csr_rmatvec: str = 'auto'):
+    if _is_csr_like(X) or (_scipy_sparse is not None
+                           and _scipy_sparse.issparse(X)):
+        return _CSRFeatures(X, csr_rmatvec=csr_rmatvec)
+    return _DenseFeatures(X)
+
+
+# ----------------------------------------------------- fused device oracles
+
+
+def _count_dispatch(p, y, g, engine: str, block: int):
+    """Trace-time dispatch over counting engines. g is None for ungrouped;
+    grouped counting applies the key-offset trick first."""
+    if engine == 'tree':
+        if g is None:
+            return _counts.counts_fused(p, y)
+        return _counts.counts_grouped_fused(p, y, g)
+    if g is not None:
+        p, y = _counts._group_offsets(p, y, g)
+    if engine == 'auto':
+        # late import + attribute lookup so the kernel-vs-tree switch stays
+        # patchable (tests) and the pallas import stays off the core path
+        from repro.kernels.pairwise_rank import ops as _pr_ops
+        return _pr_ops.counts_auto(p, y)
+    return _counts.counts_blocked_host(p, y, block=block)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    'engine', 'block', 'kind', 'uniform', 'n', 'device_rmatvec'))
+def _fused_step(w, arrays, y, g, inv_n, *, engine: str, block: int,
+                kind: str, uniform: bool, n: int, device_rmatvec: bool):
+    """The fused device step: matvec -> counts -> loss -> subgradient.
+
+    Module-level and keyed only on static layout/engine config, so every
+    oracle instance with the same shapes shares one compiled executable
+    (constructing a second RankSVM does not recompile). When
+    device_rmatvec is False the step returns (loss, c - d) and the caller
+    finishes the transpose-matvec on host (see _CSRFeatures).
+    """
+    m = y.shape[0]
+    if kind == 'dense':
+        p = arrays['X'] @ w
+    elif uniform:
+        p = jnp.sum(arrays['data2'] * w[arrays['idx2']], axis=1)
+    else:
+        p = jax.ops.segment_sum(arrays['data'] * w[arrays['idx']],
+                                arrays['rows'], num_segments=m,
+                                indices_are_sorted=True)
+    c, d = _count_dispatch(p, y, g, engine, block)
+    cd = (c - d).astype(f32)
+    loss = jnp.sum(cd * p + c.astype(f32)) * inv_n
+    if not device_rmatvec:
+        return loss, cd                      # host finishes the rmatvec
+    v = cd * inv_n
+    if kind == 'dense':
+        return loss, arrays['X'].T @ v
+    if uniform:
+        return loss, jax.ops.segment_sum(
+            (arrays['data2'] * v[:, None]).reshape(-1),
+            arrays['idx2'].reshape(-1), num_segments=n)
+    return loss, jax.ops.segment_sum(arrays['data'] * v[arrays['rows']],
+                                     arrays['idx'], num_segments=n)
+
+
+class _FusedOracle(RankOracle):
+    """Shared machinery around `_fused_step`. Subclasses pick the counting
+    engine ('tree' | 'blocked' | 'auto') via `_engine`."""
+
+    device_resident = True
+    _engine = 'tree'
+    _block = 0          # only meaningful for the blocked engine
+
+    def __init__(self, X, y, groups=None, csr_rmatvec: str = 'auto'):
+        y = np.asarray(y, np.float32)
+        self._feats = _features(X, csr_rmatvec=csr_rmatvec)
+        self.m, self.n = self._feats.m, self._feats.n
+        if y.shape[0] != self.m:
+            raise ValueError(f'X has {self.m} rows but y has {y.shape[0]}')
+        self.n_pairs = _exact_pairs(y, groups)
+        if self.n_pairs == 0:
+            raise ValueError('training data induces no preference pairs')
+        self._y = jnp.asarray(y)
+        self._g = (None if groups is None
+                   else jnp.asarray(np.asarray(groups, np.int32)))
+        self._inv_n = 1.0 / float(self.n_pairs)
+        self._inv_n_dev = jnp.asarray(self._inv_n, f32)
+
+    def loss_and_subgrad(self, w):
+        feats = self._feats
+        loss, out = _fused_step(
+            jnp.asarray(w, f32), feats.arrays, self._y, self._g,
+            self._inv_n_dev, engine=self._engine, block=self._block,
+            kind=feats.kind, uniform=getattr(feats, '_uniform', False),
+            n=self.n, device_rmatvec=feats.device_rmatvec)
+        if feats.device_rmatvec:
+            return loss, out
+        cd = np.asarray(out, np.float64)
+        return loss, feats.rmatvec_host(cd * self._inv_n)
+
+
+class TreeOracle(_FusedOracle):
+    """The paper's method: merge-sort-tree counts, O(ms + m log^2 m)/iter."""
+
+    name = 'tree'
+    _engine = 'tree'
+
+
+class PairwiseOracle(_FusedOracle):
+    """O(m^2) counting engines: the VMEM-blocked dense pass (PairRSVM
+    baseline) or, with dispatch='auto', `kernels.pairwise_rank.counts_auto`
+    (tiled Pallas kernel for small m on TPU, merge tree otherwise)."""
+
+    def __init__(self, X, y, groups=None, block: int = 2048,
+                 dispatch: str = 'blocked', csr_rmatvec: str = 'auto'):
+        if dispatch not in ('blocked', 'auto'):
+            raise ValueError(f'unknown dispatch {dispatch!r}')
+        self._engine = 'blocked' if dispatch == 'blocked' else 'auto'
+        self.name = 'pairs' if dispatch == 'blocked' else 'auto'
+        super().__init__(X, y, groups=groups, csr_rmatvec=csr_rmatvec)
+        self._block = min(int(block), self.m) if dispatch == 'blocked' else 0
+
+
+class GroupedOracle(_FusedOracle):
+    """Per-query LTR: within-group pairs only, still one linearithmic pass
+    via the key-offset trick (counts._group_offsets). `inner` picks the
+    counting engine applied to the offset keys."""
+
+    name = 'grouped'
+
+    def __init__(self, X, y, groups, inner: str = 'tree', block: int = 2048,
+                 csr_rmatvec: str = 'auto'):
+        if groups is None:
+            raise ValueError('GroupedOracle requires group ids')
+        if inner not in ('tree', 'pairs', 'auto'):
+            raise ValueError(f'unknown inner oracle {inner!r}')
+        self._engine = {'tree': 'tree', 'pairs': 'blocked',
+                        'auto': 'auto'}[inner]
+        self.name = f'grouped/{inner}'
+        super().__init__(X, y, groups=groups, csr_rmatvec=csr_rmatvec)
+        self._block = min(int(block), self.m) if inner == 'pairs' else 0
+
+
+# --------------------------------------------------------- sharded oracle
+
+
+def _default_mesh() -> Mesh:
+    """All local devices on the 'data' axis (counts/query parallel), model
+    axis 1 — the degenerate single-host version of launch.mesh."""
+    dev = np.array(jax.devices())
+    return Mesh(dev.reshape(dev.size, 1), ('data', 'model'))
+
+
+class ShardedOracle(RankOracle):
+    """Pod-scale oracle: wraps `core.distributed.make_oracle_step` (2-D
+    sharded bf16 X, all-gathered scores, query-sharded tree — DESIGN.md §5)
+    behind the same interface, so `RankSVM(method='sharded')` and the
+    dry-run tooling exercise one code path.
+
+    Note the matvecs run in bf16 (the deliberate pod-scale trade); the
+    counts see bf16-rounded scores, so parity with the f32 oracles is
+    approximate (~1e-2), which BMRM tolerates as an inexact oracle.
+    """
+
+    name = 'sharded'
+    device_resident = True
+
+    def __init__(self, X, y, groups=None, mesh: Mesh | None = None,
+                 variant: str = 'base'):
+        if groups is not None:
+            raise ValueError('ShardedOracle does not support groups yet; '
+                             'use GroupedOracle')
+        y = np.asarray(y, np.float32)
+        if _is_csr_like(X) and hasattr(X, 'to_dense'):
+            X = X.to_dense()
+        elif _scipy_sparse is not None and _scipy_sparse.issparse(X):
+            X = X.toarray()
+        X = np.asarray(X)
+        self.m, self.n = map(int, X.shape)
+        self.n_pairs = _exact_pairs(y, groups)
+        if self.n_pairs == 0:
+            raise ValueError('training data induces no preference pairs')
+        self._mesh = mesh if mesh is not None else _default_mesh()
+        sh = _dist.arg_shardings(self._mesh)
+        self._fn = jax.jit(_dist.make_oracle_step(self._mesh,
+                                                  variant=variant))
+        self._X = jax.device_put(jnp.asarray(X, jnp.bfloat16), sh['X'])
+        self._yd = jax.device_put(jnp.asarray(y, f32), sh['y'])
+        self._np = jax.device_put(jnp.asarray(float(self.n_pairs), f32),
+                                  sh['n_pairs'])
+        self._wsh = sh['w']
+
+    def loss_and_subgrad(self, w):
+        wd = jax.device_put(jnp.asarray(np.asarray(w), f32), self._wsh)
+        return self._fn(self._X, self._yd, wd, self._np)
+
+
+def sharded_dryrun_cell(mesh: Mesh, shape=None, variant: str = 'base'):
+    """(jitted fn, abstract args) for compile-only dry runs of the sharded
+    oracle — the launch.dryrun entry point into this layer."""
+    shape = shape if shape is not None else _dist.REUTERS_1M
+    specs = _dist.input_specs(None, shape)
+    sh = _dist.arg_shardings(mesh)
+    fn = jax.jit(_dist.make_oracle_step(mesh, variant=variant),
+                 in_shardings=(sh['X'], sh['y'], sh['w'], sh['n_pairs']),
+                 out_shardings=_dist.out_shardings(mesh))
+    return fn, (specs['X'], specs['y'], specs['w'], specs['n_pairs'])
+
+
+# ---------------------------------------------------------------- factory
+
+
+METHODS = ('tree', 'pairs', 'auto', 'sharded')
+
+
+def make_oracle(X, y, groups=None, method: str = 'tree', *,
+                pair_block: int = 2048, mesh: Mesh | None = None,
+                variant: str = 'base',
+                csr_rmatvec: str = 'auto') -> RankOracle:
+    """Build the RankOracle for (X, y[, groups]) selected by `method`.
+
+    method:
+      'tree'    — merge-sort-tree counts (the paper; O(ms + m log^2 m)/iter)
+      'pairs'   — blocked O(m^2) pairwise counts (PairRSVM baseline)
+      'auto'    — counts_auto dispatch: Pallas pairwise kernel for small m
+                  on TPU, tree otherwise
+      'sharded' — pod-scale mesh oracle (core.distributed); dense bf16 X
+    """
+    if method == 'sharded':
+        return ShardedOracle(X, y, groups=groups, mesh=mesh, variant=variant)
+    if method not in ('tree', 'pairs', 'auto'):
+        raise ValueError(f'unknown oracle method {method!r}; '
+                         f'expected one of {METHODS}')
+    if groups is not None:
+        return GroupedOracle(X, y, groups, inner=method, block=pair_block,
+                             csr_rmatvec=csr_rmatvec)
+    if method == 'tree':
+        return TreeOracle(X, y, csr_rmatvec=csr_rmatvec)
+    return PairwiseOracle(
+        X, y, block=pair_block,
+        dispatch='auto' if method == 'auto' else 'blocked',
+        csr_rmatvec=csr_rmatvec)

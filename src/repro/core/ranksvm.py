@@ -1,15 +1,23 @@
 """RankSVM estimators: TreeRSVM (the paper's method) and PairRSVM (baseline).
 
-`RankSVM(method='tree')` reproduces the paper's TreeRSVM: BMRM outer loop +
-Algorithm 3 (linearithmic counts, here the sort-based order-statistics
-structure of core.counts) for per-iteration loss/subgradient.
-`method='pairs'` is the PairRSVM baseline: identical except the counts are
-computed by an O(m^2) blocked pairwise pass. Both reach the same solution —
-the paper uses this parity as its Fig. 4 sanity check, reproduced in
+`RankSVM` is a thin selector over the BMRM oracle layer (`core.oracle`):
+`method=` picks the `RankOracle` implementation —
+
+  'tree'    TreeRSVM: merge-sort-tree counts, O(ms + m log^2 m)/iteration
+  'pairs'   PairRSVM: blocked O(m^2) pairwise counts (the paper's baseline)
+  'auto'    counts_auto dispatch: Pallas pairwise kernel for small ranking
+            problems on TPU, tree otherwise
+  'sharded' pod-scale mesh oracle (core.distributed) on dense bf16 features
+
+— and hands it to `core.bmrm.bmrm`. All count/subgradient work flows through
+the oracle's fused device-resident step; this module touches no counting
+internals. Both 'tree' and 'pairs' reach the same solution — the paper uses
+this parity as its Fig. 4 sanity check, reproduced in
 benchmarks/fig4_test_error.py.
 
-Feature matrices may be numpy arrays or scipy.sparse (CSR recommended); the
-matvecs X @ w and X.T @ v are the O(ms) terms of Theorem 2.
+Feature matrices may be numpy arrays, repro.data.sparse.CSRMatrix, or
+scipy.sparse (CSR recommended); the matvecs X @ w and X.T @ v are the O(ms)
+terms of Theorem 2.
 """
 
 from __future__ import annotations
@@ -19,30 +27,17 @@ import time
 
 import numpy as np
 
-try:
-    import scipy.sparse as sp
-except Exception:  # pragma: no cover - scipy is installed in this container
-    sp = None
-
 import jax.numpy as jnp
 
-from . import counts as _counts
 from . import rank_loss as _rank_loss
 from .bmrm import bmrm
+from .oracle import METHODS, make_oracle
 
 
 def _matvec(X, w):
     if hasattr(X, 'matvec'):            # repro.data.sparse.CSRMatrix
         return X.matvec(w)
     return np.asarray(X @ w).ravel()
-
-
-def _rmatvec(X, v):
-    if hasattr(X, 'rmatvec'):           # repro.data.sparse.CSRMatrix
-        return X.rmatvec(v)
-    if sp is not None and sp.issparse(X):
-        return np.asarray(X.T @ v).ravel()
-    return X.T @ v
 
 
 @dataclasses.dataclass
@@ -63,72 +58,41 @@ class RankSVM:
       lam: regularization weight lambda of J(w) = R_emp(w) + lam ||w||^2.
         (SVM^rank-style C converts as C = 1 / (lam * N), see paper sec. 5.1.)
       eps: BMRM termination gap (paper default 1e-3).
-      method: 'tree' (O(ms + m log m) per iteration) or 'pairs' (O(ms + m^2)).
+      method: oracle selector — 'tree' | 'pairs' | 'auto' | 'sharded'
+        (see module docstring; core.oracle.make_oracle).
       max_iter: BMRM iteration cap.
+      pair_block: VMEM/cache block for the O(m^2) pairwise pass.
+      mesh: optional jax Mesh for method='sharded' (defaults to all local
+        devices on the 'data' axis).
     """
 
     def __init__(self, lam: float = 1e-3, eps: float = 1e-3,
                  method: str = 'tree', max_iter: int = 1000,
-                 pair_block: int = 2048, verbose: bool = False):
-        if method not in ('tree', 'pairs'):
-            raise ValueError(f'unknown method {method!r}')
+                 pair_block: int = 2048, mesh=None, verbose: bool = False):
+        if method not in METHODS:
+            raise ValueError(f'unknown method {method!r}; '
+                             f'expected one of {METHODS}')
         self.lam = float(lam)
         self.eps = float(eps)
         self.method = method
         self.max_iter = int(max_iter)
         self.pair_block = int(pair_block)
+        self.mesh = mesh
         self.verbose = verbose
         self.w_: np.ndarray | None = None
         self.report_: FitReport | None = None
-
-    # -- internals ---------------------------------------------------------
-
-    def _counts(self, p: np.ndarray, y, g):
-        pj = jnp.asarray(p, jnp.float32)
-        if self.method == 'tree':
-            if g is None:
-                c, d = _counts.counts(pj, y)
-            else:
-                c, d = _counts.counts_grouped(pj, y, g)
-        else:
-            if g is None:
-                c, d = _counts.counts_blocked_host(pj, y,
-                                                   block=self.pair_block)
-            else:
-                pg, yg = _counts._group_offsets(pj, y.astype(jnp.float32), g)
-                c, d = _counts.counts_blocked_host(pg, yg,
-                                                   block=self.pair_block)
-        return np.asarray(c, np.float64), np.asarray(d, np.float64)
+        self.oracle_ = None
 
     # -- public API --------------------------------------------------------
 
     def fit(self, X, y, groups=None):
         """Learn w from features X (m, n) and real-valued utility scores y."""
-        m, n = X.shape
-        y = np.asarray(y, np.float32)
-        yj = jnp.asarray(y)
-        gj = None if groups is None else jnp.asarray(
-            np.asarray(groups, np.int32))
-
-        if groups is None:
-            n_pairs = _counts.num_pairs_host(y)
-        else:
-            groups = np.asarray(groups)
-            n_pairs = sum(_counts.num_pairs_host(y[groups == u])
-                          for u in np.unique(groups))
-        if n_pairs == 0:
-            raise ValueError('training data induces no preference pairs')
-
-        def loss_and_subgrad(w):
-            p = _matvec(X, w)
-            c, d = self._counts(p, yj, gj)
-            cd = c - d
-            loss = float(np.sum(cd * p + c) / n_pairs)
-            a = _rmatvec(X, cd / n_pairs)
-            return loss, a
+        oracle = make_oracle(X, y, groups=groups, method=self.method,
+                             pair_block=self.pair_block, mesh=self.mesh)
+        self.oracle_ = oracle
 
         t0 = time.perf_counter()
-        res = bmrm(loss_and_subgrad, dim=n, lam=self.lam, eps=self.eps,
+        res = bmrm(oracle, lam=self.lam, eps=self.eps,
                    max_iter=self.max_iter,
                    callback=(lambda t, w, j, g:
                              print(f'  bmrm it={t} J_best={j:.6f} gap={g:.2e}'))

@@ -20,8 +20,6 @@ never contributes to either count.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -29,8 +27,7 @@ from jax.experimental import pallas as pl
 LANES = 128
 
 
-def _pairwise_kernel(p_i_ref, y_i_ref, p_j_ref, y_j_ref, c_ref, d_ref,
-                     *, tj_tiles: int):
+def _pairwise_kernel(p_i_ref, y_i_ref, p_j_ref, y_j_ref, c_ref, d_ref):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -74,9 +71,8 @@ def pairwise_counts_kernel(p2: jnp.ndarray, y2: jnp.ndarray,
     """
     rows = p2.shape[0]
     grid = (rows // ti_rows, rows // tj_rows)
-    kernel = functools.partial(_pairwise_kernel, tj_tiles=grid[1])
     c2, d2 = pl.pallas_call(
-        kernel,
+        _pairwise_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((ti_rows, LANES), lambda i, j: (i, 0)),

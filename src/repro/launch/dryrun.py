@@ -31,8 +31,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import registry
 from repro.configs.base import TrainConfig, shapes_for
@@ -126,12 +124,10 @@ def model_flops(cfg, shape) -> float:
     if getattr(cfg, 'family', None) == 'ranksvm':
         # one oracle: X w and X^T v, dense bf16: 2 * 2 * m * n
         return 4.0 * shape.m * shape.n
-    from repro.models.params import count_params
     from repro.models import lm as LM
 
     defs = LM.model_defs(cfg)
     # active params: replace routed-expert weight count with top_k experts
-    from repro.models.params import _leaves
     total = active = 0
     for d in jax.tree.leaves(defs,
                              is_leaf=lambda x: hasattr(x, 'shape')
@@ -166,15 +162,14 @@ def build_cell(arch: str, shape_name: str, mesh, variant: str = 'base'):
     cfg = registry.get(arch)
 
     if getattr(cfg, 'family', None) == 'ranksvm':
+        # The sharded BMRM oracle cell goes through the oracle layer
+        # (core.oracle.sharded_dryrun_cell), the same entry point
+        # RankSVM(method='sharded') trains through.
         from repro.core import distributed as D
+        from repro.core import oracle as O
         shape = D.REUTERS_1M
-        specs = D.input_specs(cfg, shape)
-        sh = D.arg_shardings(mesh)
-        fn = jax.jit(D.make_oracle_step(mesh, variant=variant),
-                     in_shardings=(sh['X'], sh['y'], sh['w'], sh['n_pairs']),
-                     out_shardings=D.out_shardings(mesh))
-        return fn, (specs['X'], specs['y'], specs['w'], specs['n_pairs']), \
-            cfg, shape
+        fn, args = O.sharded_dryrun_cell(mesh, shape, variant=variant)
+        return fn, args, cfg, shape
 
     shape = {s.name: s for s in shapes_for(cfg)}[shape_name]
     rules = ShardingRules(mesh)

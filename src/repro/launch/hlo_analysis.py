@@ -25,7 +25,6 @@ tests/test_hlo_analysis.py.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 
 _DTYPE_BYTES = {

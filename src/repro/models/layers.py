@@ -8,7 +8,6 @@ the (S, S) score matrix; XLA maps it to MXU matmuls per block.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ Mamba, MoE on odd sub-layers).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ custom-VJP loss (core.rank_loss) — O(B log B) instead of O(B^2) pairs.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

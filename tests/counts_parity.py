@@ -1,0 +1,23 @@
+"""Shared helper: assert every counts implementation (two-tree `counts`,
+single-tree `counts_fused`) matches the O(m^2) reference bit-for-bit.
+Imported by test_counts.py and test_properties.py so the parity invariant
+is defined once."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import counts as C
+from repro.core import ref as R
+
+
+def assert_counts_match(p, y):
+    c, d = C.counts(jnp.asarray(p), jnp.asarray(y))
+    cr, dr = R.counts_ref(jnp.asarray(p), jnp.asarray(y))
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(dr))
+    # the single-tree fast path (the oracle layer's default) must agree
+    # bit-for-bit too
+    cf, df = C.counts_fused(jnp.asarray(p), jnp.asarray(y))
+    np.testing.assert_array_equal(np.asarray(cf), np.asarray(cr))
+    np.testing.assert_array_equal(np.asarray(df), np.asarray(dr))
+    return np.asarray(c), np.asarray(d)

@@ -1,75 +1,28 @@
-"""Property + oracle tests for the paper's core contribution: the
-linearithmic c/d frequency computation (core.counts vs core.ref)."""
+"""Oracle tests for the paper's core contribution: the linearithmic c/d
+frequency computation (core.counts vs core.ref). The hypothesis-based
+property sweeps live in test_properties.py (skipped when hypothesis is
+absent); the deterministic boundary/shape cases here always run."""
 
-import hypothesis
-import hypothesis.strategies as st
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from counts_parity import assert_counts_match as _assert_counts_match
 from repro.core import counts as C
 from repro.core import ref as R
 
-# bounded shape set -> bounded number of jit recompiles under hypothesis
-_SIZES = (1, 2, 3, 8, 33, 128)
 
-
-def _assert_counts_match(p, y):
-    c, d = C.counts(jnp.asarray(p), jnp.asarray(y))
-    cr, dr = R.counts_ref(jnp.asarray(p), jnp.asarray(y))
-    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
-    np.testing.assert_array_equal(np.asarray(d), np.asarray(dr))
-    return np.asarray(c), np.asarray(d)
-
-
-@st.composite
-def _py_arrays(draw, tie_heavy: bool):
-    m = draw(st.sampled_from(_SIZES))
+@pytest.mark.parametrize('m', [1, 2, 3, 8, 33, 128])
+@pytest.mark.parametrize('tie_heavy', [False, True])
+def test_counts_match_oracle_seeded(m, tie_heavy):
+    rng = np.random.default_rng(m + 1000 * tie_heavy)
     if tie_heavy:
-        # few distinct values in both p and y -> lots of boundary cases
-        pv = draw(st.lists(st.integers(-2, 2), min_size=m, max_size=m))
-        yv = draw(st.lists(st.integers(0, 2), min_size=m, max_size=m))
-        p = np.asarray(pv, np.float32) * 0.5
-        y = np.asarray(yv, np.float32)
+        p = (rng.integers(-2, 3, size=m) * 0.5).astype(np.float32)
+        y = rng.integers(0, 3, size=m).astype(np.float32)
     else:
-        fin = st.floats(-100, 100, allow_nan=False, allow_subnormal=False,
-                        width=32)
-        p = np.asarray(draw(st.lists(fin, min_size=m, max_size=m)),
-                       np.float32)
-        y = np.asarray(draw(st.lists(fin, min_size=m, max_size=m)),
-                       np.float32)
-    return p, y
-
-
-@hypothesis.given(_py_arrays(tie_heavy=False))
-@hypothesis.settings(max_examples=40, deadline=None)
-def test_counts_match_oracle_random(py):
-    _assert_counts_match(*py)
-
-
-@hypothesis.given(_py_arrays(tie_heavy=True))
-@hypothesis.settings(max_examples=40, deadline=None)
-def test_counts_match_oracle_tie_heavy(py):
-    """Ties in p AND y exercise the strict/non-strict boundary semantics
-    (the margin conditions p_j < p_i + 1 are strict, y comparisons strict)."""
-    _assert_counts_match(*py)
-
-
-@hypothesis.given(_py_arrays(tie_heavy=True))
-@hypothesis.settings(max_examples=25, deadline=None)
-def test_sum_c_equals_sum_d(py):
-    """Invariant: sum_i c_i == sum_i d_i (pair (i,j) is counted once from
-    each side — relabelling symmetry of eqs. (5)/(6)).
-
-    Holds EXACTLY only when p ± 1 is exact in fp (here: multiples of 0.5):
-    for general floats the paper's own eqs. (5)/(6) evaluate `p_i + 1` and
-    `p_j - 1` with different roundings, so the two sums can differ by the
-    pairs that land inside one ulp of the margin — a property of the
-    equations, not of our implementation (which matches the oracle
-    bit-for-bit either way; hypothesis found the counterexample)."""
-    c, d = _assert_counts_match(*py)
-    assert c.sum() == d.sum()
+        p = rng.uniform(-100, 100, size=m).astype(np.float32)
+        y = rng.uniform(-100, 100, size=m).astype(np.float32)
+    _assert_counts_match(p, y)
 
 
 def test_counts_exact_margin_boundary():
@@ -94,6 +47,8 @@ def test_counts_empty_and_singleton():
         y = np.zeros(m, np.float32)
         c, d = C.counts(jnp.asarray(p), jnp.asarray(y))
         assert c.shape == (m,) and d.shape == (m,)
+        cf, df = C.counts_fused(jnp.asarray(p), jnp.asarray(y))
+        assert cf.shape == (m,) and df.shape == (m,)
 
 
 def test_counts_large_scrambled():
@@ -105,22 +60,30 @@ def test_counts_large_scrambled():
     cb, db = C.counts_blocked_host(jnp.asarray(p), jnp.asarray(y), block=512)
     np.testing.assert_array_equal(np.asarray(c), np.asarray(cb))
     np.testing.assert_array_equal(np.asarray(d), np.asarray(db))
+    cf, df = C.counts_fused(jnp.asarray(p), jnp.asarray(y))
+    np.testing.assert_array_equal(np.asarray(cf), np.asarray(cb))
+    np.testing.assert_array_equal(np.asarray(df), np.asarray(db))
 
 
 # ------------------------------------------------------------------ groups
 
 
-@hypothesis.given(_py_arrays(tie_heavy=True), st.integers(1, 5))
-@hypothesis.settings(max_examples=30, deadline=None)
-def test_grouped_counts_match_oracle(py, n_groups):
-    p, y = py
-    rng = np.random.default_rng(len(p))
-    g = rng.integers(0, n_groups, size=len(p)).astype(np.int32)
-    cg, dg = C.counts_grouped(jnp.asarray(p), jnp.asarray(y), jnp.asarray(g))
-    cr, dr = R.grouped_counts_ref(jnp.asarray(p), jnp.asarray(y),
+def test_grouped_counts_match_oracle_seeded():
+    rng = np.random.default_rng(11)
+    for m, n_groups in [(5, 2), (33, 3), (128, 5)]:
+        p = (rng.integers(-2, 3, size=m) * 0.5).astype(np.float32)
+        y = rng.integers(0, 3, size=m).astype(np.float32)
+        g = rng.integers(0, n_groups, size=m).astype(np.int32)
+        cg, dg = C.counts_grouped(jnp.asarray(p), jnp.asarray(y),
                                   jnp.asarray(g))
-    np.testing.assert_array_equal(np.asarray(cg), np.asarray(cr))
-    np.testing.assert_array_equal(np.asarray(dg), np.asarray(dr))
+        cr, dr = R.grouped_counts_ref(jnp.asarray(p), jnp.asarray(y),
+                                      jnp.asarray(g))
+        np.testing.assert_array_equal(np.asarray(cg), np.asarray(cr))
+        np.testing.assert_array_equal(np.asarray(dg), np.asarray(dr))
+        cf, df = C.counts_grouped_fused(jnp.asarray(p), jnp.asarray(y),
+                                        jnp.asarray(g))
+        np.testing.assert_array_equal(np.asarray(cf), np.asarray(cr))
+        np.testing.assert_array_equal(np.asarray(df), np.asarray(dr))
 
 
 def test_grouped_equals_global_when_one_group():
@@ -137,15 +100,15 @@ def test_grouped_equals_global_when_one_group():
 # ---------------------------------------------------------------- num_pairs
 
 
-@hypothesis.given(_py_arrays(tie_heavy=True))
-@hypothesis.settings(max_examples=30, deadline=None)
-def test_num_pairs(py):
-    _, y = py
-    n = float(C.num_pairs(jnp.asarray(y)))
-    nr = int(R.num_pairs_ref(jnp.asarray(y)))
-    nh = C.num_pairs_host(y)
-    assert nh == nr
-    assert n == pytest.approx(nr, rel=1e-6)
+def test_num_pairs_seeded():
+    rng = np.random.default_rng(13)
+    for m in (1, 2, 33, 128):
+        y = rng.integers(0, 3, size=m).astype(np.float32)
+        n = float(C.num_pairs(jnp.asarray(y)))
+        nr = int(R.num_pairs_ref(jnp.asarray(y)))
+        nh = C.num_pairs_host(y)
+        assert nh == nr
+        assert n == pytest.approx(nr, rel=1e-6)
 
 
 def test_num_pairs_grouped():
@@ -160,16 +123,14 @@ def test_num_pairs_grouped():
 # ------------------------------------------------- Joachims r-level baseline
 
 
-@hypothesis.given(_py_arrays(tie_heavy=True))
-@hypothesis.settings(max_examples=25, deadline=None)
-def test_joachims_rlevel_matches_oracle(py):
-    """The paper's main baseline (SVM^rank's O(rm) counts) must agree with
-    the oracle — and with the tree method — on any tie pattern."""
-    import numpy as np
+def test_joachims_rlevel_matches_oracle_seeded():
     from repro.core import joachims as J
-    p, y = py
-    yl, r = J.levels_of(y)
-    c, d = J.counts_rlevel(jnp.asarray(p), jnp.asarray(yl), r)
-    cr, dr = R.counts_ref(jnp.asarray(p), jnp.asarray(y))
-    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
-    np.testing.assert_array_equal(np.asarray(d), np.asarray(dr))
+    rng = np.random.default_rng(17)
+    for m in (2, 8, 33, 128):
+        p = (rng.integers(-2, 3, size=m) * 0.5).astype(np.float32)
+        y = rng.integers(0, 3, size=m).astype(np.float32)
+        yl, r = J.levels_of(y)
+        c, d = J.counts_rlevel(jnp.asarray(p), jnp.asarray(yl), r)
+        cr, dr = R.counts_ref(jnp.asarray(p), jnp.asarray(y))
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+        np.testing.assert_array_equal(np.asarray(d), np.asarray(dr))

@@ -1,0 +1,175 @@
+"""Parity + dispatch tests for the BMRM oracle layer (core.oracle).
+
+Every RankOracle implementation must produce the same (loss, subgradient)
+as the O(m^2) ground truth in core.ref — on dense, sparse (CSR), grouped,
+and tie-heavy inputs — and `RankSVM(method='auto')` must actually dispatch
+through the kernel-vs-tree `counts_auto` switch.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import counts as C
+from repro.core import oracle as O
+from repro.core import ref as R
+from repro.core.bmrm import bmrm
+from repro.core.ranksvm import RankSVM
+from repro.data import cadata_like, grouped_queries
+from repro.data.sparse import CSRMatrix, random_tfidf
+
+
+def _ref_loss_subgrad(X_dense, y, w, groups=None):
+    """Ground truth from core.ref at f32, matching the oracles' precision."""
+    Xj = jnp.asarray(np.asarray(X_dense), jnp.float32)
+    p = Xj @ jnp.asarray(w, jnp.float32)
+    yj = jnp.asarray(np.asarray(y), jnp.float32)
+    if groups is None:
+        c, d = R.counts_ref(p, yj)
+        n = C.num_pairs_host(y)
+    else:
+        c, d = R.grouped_counts_ref(p, yj, jnp.asarray(groups, jnp.int32))
+        n = O._exact_pairs(np.asarray(y, np.float32), groups)
+    cd = (c - d).astype(jnp.float32)
+    loss = float(jnp.sum(cd * p + c.astype(jnp.float32)) / n)
+    a = np.asarray(Xj.T @ (cd / n), np.float64)
+    return loss, a
+
+
+def _assert_parity(oracle, X_dense, y, w, groups=None, rtol=1e-5):
+    loss_r, a_r = _ref_loss_subgrad(X_dense, y, w, groups=groups)
+    loss, a = oracle.loss_and_subgrad(w)
+    assert float(loss) == pytest.approx(loss_r, rel=rtol, abs=1e-6)
+    np.testing.assert_allclose(np.asarray(a, np.float64), a_r,
+                               rtol=rtol, atol=1e-6)
+
+
+def _dense_case(m=120, n=6, seed=0, tied=False):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(m, n)).astype(np.float64)
+    if tied:
+        X[m // 2:] = X[: m - m // 2]          # duplicate rows -> exact p ties
+        y = rng.integers(0, 3, size=m).astype(np.float64)
+    else:
+        y = rng.normal(size=m)
+    w = rng.normal(size=n)
+    return X, y, w
+
+
+@pytest.mark.parametrize('method', ['tree', 'pairs', 'auto'])
+@pytest.mark.parametrize('tied', [False, True])
+def test_dense_oracles_match_ref(method, tied):
+    X, y, w = _dense_case(tied=tied)
+    _assert_parity(O.make_oracle(X, y, method=method), X, y, w)
+
+
+@pytest.mark.parametrize('method', ['tree', 'pairs', 'auto'])
+def test_grouped_oracles_match_ref(method):
+    X, y, w = _dense_case(m=90, seed=3, tied=True)
+    rng = np.random.default_rng(4)
+    groups = rng.integers(0, 5, size=X.shape[0]).astype(np.int32)
+    oracle = O.make_oracle(X, y, groups=groups, method=method)
+    assert isinstance(oracle, O.GroupedOracle)
+    _assert_parity(oracle, X, y, w, groups=groups)
+
+
+@pytest.mark.parametrize('rmatvec', ['host', 'device'])
+def test_csr_tree_oracle_matches_ref(rmatvec):
+    X = random_tfidf(m=200, n=64, nnz_per_row=8, seed=5)
+    rng = np.random.default_rng(6)
+    y = rng.normal(size=200)
+    w = rng.normal(size=64)
+    oracle = O.TreeOracle(X, y, csr_rmatvec=rmatvec)
+    # rtol looser than dense: the CSR gather-matvec and the dense gemv sum
+    # p in different orders, so p (hence a) differs in the last ulp.
+    _assert_parity(oracle, X.to_dense(), y, w, rtol=1e-4)
+
+
+def test_csr_ragged_rows_fall_back_to_segment_matvec():
+    rng = np.random.default_rng(7)
+    dense = rng.normal(size=(60, 16)) * (rng.random(size=(60, 16)) < 0.3)
+    dense[0] = 0.0                            # an empty row -> ragged layout
+    X = CSRMatrix.from_dense(dense)
+    y = rng.normal(size=60)
+    w = rng.normal(size=16)
+    oracle = O.TreeOracle(X, y)
+    assert not oracle._feats._uniform
+    _assert_parity(oracle, dense, y, w, rtol=1e-4)
+
+
+def test_sharded_oracle_close_to_tree():
+    """bf16 matvecs make the sharded oracle inexact (~1e-2) by design."""
+    X, y, w = _dense_case(m=150, n=8, seed=8)
+    loss_t, a_t = O.TreeOracle(X, y).loss_and_subgrad(w)
+    loss_s, a_s = O.ShardedOracle(X, y).loss_and_subgrad(w)
+    assert float(loss_s) == pytest.approx(float(loss_t), rel=0.05, abs=0.05)
+    a_t, a_s = np.asarray(a_t, np.float64), np.asarray(a_s, np.float64)
+    cos = a_t @ a_s / (np.linalg.norm(a_t) * np.linalg.norm(a_s) + 1e-12)
+    assert cos > 0.99
+
+
+def test_oracle_metadata():
+    X, y, w = _dense_case(m=50, n=4, seed=9)
+    oracle = O.make_oracle(X, y, method='tree')
+    assert (oracle.m, oracle.n) == (50, 4)
+    assert oracle.n_pairs == C.num_pairs_host(y)
+    assert oracle.device_resident
+    assert oracle.name == 'tree'
+    assert O.make_oracle(X, y, method='auto').name == 'auto'
+    g = np.zeros(50, np.int32)
+    assert O.make_oracle(X, y, groups=g, method='pairs').name == 'grouped/pairs'
+
+
+def test_bmrm_accepts_oracle_without_dim():
+    X, y, _ = _dense_case(m=80, n=5, seed=10)
+    res = bmrm(O.TreeOracle(X, y), lam=1e-2, eps=1e-3, max_iter=100)
+    assert res.stats.converged
+    assert res.w.shape == (5,)
+
+
+def test_make_oracle_rejects_unknown_method():
+    X, y, _ = _dense_case(m=20, n=3, seed=11)
+    with pytest.raises(ValueError):
+        O.make_oracle(X, y, method='rbtree')
+    with pytest.raises(ValueError):
+        RankSVM(method='rbtree')
+
+
+def test_sharded_rejects_groups():
+    X, y, _ = _dense_case(m=20, n=3, seed=12)
+    with pytest.raises(ValueError):
+        O.make_oracle(X, y, groups=np.zeros(20, np.int32), method='sharded')
+
+
+def test_ranksvm_auto_dispatches_through_counts_auto(monkeypatch):
+    """Regression: method='auto' must reach kernels.pairwise_rank.counts_auto
+    (the Pallas-kernel-vs-tree switch), not a fork of the estimator."""
+    from repro.kernels.pairwise_rank import ops as pr_ops
+    calls = []
+    real = pr_ops.counts_auto
+
+    def spy(p, y):
+        calls.append(tuple(p.shape))
+        return real(p, y)
+
+    monkeypatch.setattr(pr_ops, 'counts_auto', spy)
+    d = cadata_like(m=80, m_test=10, seed=0)
+    svm = RankSVM(lam=1e-2, eps=1e-2, method='auto', max_iter=30)
+    svm.fit(d.X, d.y)
+    assert calls, "method='auto' did not dispatch through counts_auto"
+    assert svm.report_.iterations >= 1
+
+
+def test_ranksvm_sharded_trains():
+    d = cadata_like(m=200, m_test=100, seed=1)
+    svm = RankSVM(lam=1e-2, eps=5e-2, method='sharded', max_iter=60)
+    svm.fit(np.asarray(d.X), d.y)
+    assert svm.ranking_error(d.X_test, d.y_test) < 0.35
+
+
+def test_grouped_fit_matches_pre_refactor_behaviour():
+    X, y, groups = grouped_queries(n_queries=25, per_query=15, seed=2)
+    a = RankSVM(lam=1e-3, eps=1e-3, method='tree').fit(X, y, groups=groups)
+    b = RankSVM(lam=1e-3, eps=1e-3, method='pairs').fit(X, y, groups=groups)
+    assert a.report_.objective == pytest.approx(b.report_.objective, rel=1e-3)
+    np.testing.assert_allclose(a.w_, b.w_, atol=5e-3)

@@ -1,7 +1,6 @@
-"""Tests for the differentiable linearithmic pairwise hinge (core.rank_loss)."""
+"""Tests for the differentiable linearithmic pairwise hinge (core.rank_loss).
+Hypothesis property sweeps live in test_properties.py."""
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,42 +9,33 @@ import pytest
 from repro.core import rank_loss as RL
 from repro.core import ref as R
 
-_SIZES = (2, 3, 17, 64)
+
+def test_loss_matches_bruteforce_seeded():
+    rng = np.random.default_rng(5)
+    for m in (2, 3, 17, 64):
+        p = rng.uniform(-10, 10, size=m).astype(np.float32)
+        y = rng.integers(0, 3, size=m).astype(np.float32)
+        if len(np.unique(y)) < 2:
+            y[0] = 3.0                        # ensure >= 1 preference pair
+        loss = RL.pairwise_hinge_loss(jnp.asarray(p), jnp.asarray(y))
+        ref = R.loss_ref(jnp.asarray(p), jnp.asarray(y))
+        assert float(loss) == pytest.approx(float(ref), rel=1e-5, abs=1e-6)
 
 
-@st.composite
-def _scores_utils(draw):
-    m = draw(st.sampled_from(_SIZES))
-    # allow_subnormal=False: XLA flushes denormals to zero, numpy doesn't
-    fin = st.floats(-10, 10, allow_nan=False, allow_subnormal=False,
-                    width=32)
-    p = np.asarray(draw(st.lists(fin, min_size=m, max_size=m)), np.float32)
-    y = np.asarray(draw(st.lists(st.integers(0, 3), min_size=m, max_size=m)),
-                   np.float32)
-    hypothesis.assume(len(np.unique(y)) > 1)      # need >= 1 preference pair
-    return p, y
-
-
-@hypothesis.given(_scores_utils())
-@hypothesis.settings(max_examples=30, deadline=None)
-def test_loss_matches_bruteforce(py):
-    p, y = py
-    loss = RL.pairwise_hinge_loss(jnp.asarray(p), jnp.asarray(y))
-    ref = R.loss_ref(jnp.asarray(p), jnp.asarray(y))
-    assert float(loss) == pytest.approx(float(ref), rel=1e-5, abs=1e-6)
-
-
-@hypothesis.given(_scores_utils())
-@hypothesis.settings(max_examples=20, deadline=None)
-def test_vjp_is_lemma2_subgradient(py):
+def test_vjp_is_lemma2_subgradient_seeded():
     """The custom VJP must equal (c - d)/N (Lemma 2, wrt scores)."""
-    p, y = py
-    g = jax.grad(lambda s: RL.pairwise_hinge_loss(s, jnp.asarray(y)))(
-        jnp.asarray(p))
-    c, d = R.counts_ref(jnp.asarray(p), jnp.asarray(y))
-    n = max(int(R.num_pairs_ref(jnp.asarray(y))), 1)
-    expect = (np.asarray(c) - np.asarray(d)) / n
-    np.testing.assert_allclose(np.asarray(g), expect, rtol=1e-6)
+    rng = np.random.default_rng(6)
+    for m in (3, 17, 64):
+        p = rng.uniform(-10, 10, size=m).astype(np.float32)
+        y = rng.integers(0, 4, size=m).astype(np.float32)
+        if len(np.unique(y)) < 2:
+            y[0] = 4.0
+        g = jax.grad(lambda s: RL.pairwise_hinge_loss(s, jnp.asarray(y)))(
+            jnp.asarray(p))
+        c, d = R.counts_ref(jnp.asarray(p), jnp.asarray(y))
+        n = max(int(R.num_pairs_ref(jnp.asarray(y))), 1)
+        expect = (np.asarray(c) - np.asarray(d)) / n
+        np.testing.assert_allclose(np.asarray(g), expect, rtol=1e-6)
 
 
 def test_vjp_matches_finite_differences_off_kinks():
@@ -117,12 +107,13 @@ def _brute_rank_error(p, y, g=None):
     return tot / max(n, 1)
 
 
-@hypothesis.given(_scores_utils())
-@hypothesis.settings(max_examples=20, deadline=None)
-def test_ranking_error_matches_bruteforce(py):
-    p, y = py
-    err = RL.ranking_error(jnp.asarray(p), jnp.asarray(y))
-    assert float(err) == pytest.approx(_brute_rank_error(p, y), abs=1e-5)
+def test_ranking_error_matches_bruteforce_seeded():
+    rng = np.random.default_rng(9)
+    for m in (2, 17, 64):
+        p = rng.uniform(-10, 10, size=m).astype(np.float32)
+        y = rng.integers(0, 3, size=m).astype(np.float32)
+        err = RL.ranking_error(jnp.asarray(p), jnp.asarray(y))
+        assert float(err) == pytest.approx(_brute_rank_error(p, y), abs=1e-5)
 
 
 def test_ranking_error_with_predicted_ties():

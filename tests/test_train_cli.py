@@ -1,7 +1,5 @@
 """Smoke test for the training launcher CLI (launch/train.py)."""
 
-import jax
-import pytest
 
 from repro.launch.train import main as train_main
 

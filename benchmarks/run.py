@@ -13,7 +13,7 @@ import time
 
 from . import (fig1_iteration_cost, fig2_runtimes, fig3_memory,
                fig4_test_error, fig5_crossover, fig6_rlevels,
-               roofline_table, scaling_loglog)
+               roofline_table, scaling_loglog, solver_overhead)
 
 ALL = {
     'fig1': fig1_iteration_cost,
@@ -24,6 +24,7 @@ ALL = {
     'fig6': fig6_rlevels,
     'scaling': scaling_loglog,
     'roofline': roofline_table,
+    'solver': solver_overhead,
 }
 
 

@@ -1,0 +1,73 @@
+"""Solver-overhead benchmark: host vs device BMRM driver per-iteration cost.
+
+PR 1 fused the ORACLE into one jitted step; this measures what remained
+around it. The host driver pays several host<->device round-trips and one
+numpy bundle QP per iteration, plus an O(t n) `jnp.concatenate` rebuild of
+the plane matrix; the device driver fuses the whole iteration (oracle step
++ plane-buffer insert + incremental Gram + on-device masked FISTA QP) into
+one jitted `bundle_step` and syncs scalars every `sync_every` steps. At
+small/medium m the oracle is cheap and this dispatch overhead dominates —
+exactly the regime the paper's fast oracle is supposed to win.
+
+Reported per dataset size: iterations, per-iteration wall ms, and the
+final objective for both drivers (they must agree within the f32
+tolerance, the PR-2 acceptance bar), plus the per-iteration speedup.
+
+    PYTHONPATH=src python -m benchmarks.solver_overhead [--full]
+"""
+
+from __future__ import annotations
+
+from repro.core.bmrm import bmrm
+from repro.core.oracle import make_oracle
+from repro.data import cadata_like, reuters_like
+
+from .common import Reporter, timeit
+
+LAM, EPS, MAX_ITER = 1e-2, 1e-3, 400
+
+
+def _driver_stats(oracle, solver):
+    """(per-iteration seconds, iterations, objective, converged), warmed."""
+    def fit():
+        return bmrm(oracle, lam=LAM, eps=EPS, solver=solver,
+                    max_iter=MAX_ITER)
+
+    res = fit()                                 # compile + warm caches
+    secs = timeit(fit, repeats=3, warmup=0)
+    it = max(1, res.stats.iterations)
+    return secs / it, it, res.stats.obj_best, res.stats.converged
+
+
+def _row(rep, dataset, m, X, y):
+    orc = make_oracle(X, y, method='tree')
+    h_per, h_it, h_obj, h_conv = _driver_stats(orc, 'host')
+    d_per, d_it, d_obj, d_conv = _driver_stats(orc, 'device')
+    rep.row(dataset, m, h_it, round(1e3 * h_per, 3), d_it,
+            round(1e3 * d_per, 3), round(h_per / d_per, 2),
+            round(h_obj, 6), round(d_obj, 6),
+            format(abs(d_obj - h_obj) / max(abs(h_obj), 1e-12), '.2e'),
+            int(h_conv), int(d_conv))
+
+
+def main(full: bool = False):
+    rep = Reporter('solver_overhead',
+                   ['dataset', 'm', 'host_it', 'host_ms_per_it', 'dev_it',
+                    'dev_ms_per_it', 'host_over_dev_per_it', 'host_obj',
+                    'dev_obj', 'obj_rel_diff', 'host_conv', 'dev_conv'])
+    sizes_cad = [500, 1000, 2000, 4000, 8000] + ([16000] if full else [])
+    sizes_reu = [1000, 4000] + ([16000] if full else [8000])
+
+    cad = cadata_like(m=max(sizes_cad), m_test=10)
+    for m in sizes_cad:
+        _row(rep, 'cadata', m, cad.X[:m], cad.y[:m])
+
+    reu = reuters_like(m=max(sizes_reu), m_test=10, n=8192, nnz_per_row=32)
+    for m in sizes_reu:
+        _row(rep, 'reuters', m, reu.X.rows(m), reu.y[:m])
+    return rep
+
+
+if __name__ == '__main__':
+    import sys
+    main(full='--full' in sys.argv).save()

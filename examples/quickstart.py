@@ -28,8 +28,8 @@ def main():
     svm.fit(data.X, data.y)
     r = svm.report_
     print(f'TreeRSVM : {r.iterations} BMRM iterations in {r.seconds:.2f}s '
-          f'(oracle {1e3 * r.oracle_seconds_mean:.1f} ms/iter), '
-          f'objective {r.objective:.5f}')
+          f'(oracle {1e3 * r.oracle_seconds_mean:.1f} ms/iter, '
+          f"'{r.solver}' solver), objective {r.objective:.5f}")
 
     base = RankSVM(lam=1e-2, eps=1e-3, method='pairs')
     base.fit(data.X, data.y)

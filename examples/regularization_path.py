@@ -1,0 +1,67 @@
+"""Regularization-path sweep with warm-started bundle state.
+
+    PYTHONPATH=src python examples/regularization_path.py
+
+Model selection for RankSVM means scanning lambda — and with the
+device-resident BMRM driver the scan is much cheaper than independent
+fits: `RankSVM.path` keeps the cutting-plane buffer (the bundle's model of
+R_emp) across lambda values. Planes are lower bounds on R_emp regardless
+of lambda, so each next fit starts from an already-tight risk model and
+typically needs a fraction of the cold-start iterations. One compiled
+bundle-step program serves every lambda (lambda enters the jitted step as
+a traced scalar).
+
+Picks the best lambda by held-out pairwise ranking error (paper eq. 1).
+"""
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), '..', 'src'))
+
+import numpy as np
+
+from repro.core import RankSVM
+from repro.data import cadata_like
+
+
+def main():
+    data = cadata_like(m=4000, m_test=1500, seed=0)
+    print(f'dataset: {data.name}  m={data.m}  n={data.n}')
+    lams = [10.0 ** e for e in range(-1, -6, -1)]
+
+    svm = RankSVM(eps=1e-3, method='tree', solver='device')
+    t0 = time.perf_counter()
+    points = svm.path(data.X, data.y, lams)
+    warm_s = time.perf_counter() - t0
+    warm_iters = sum(p.report.iterations for p in points)
+
+    best = None
+    for p in points:
+        svm.w_, svm.lam = p.w, p.lam        # score each path point
+        err = svm.ranking_error(data.X_test, data.y_test)
+        marker = ''
+        if best is None or err < best[1]:
+            best, marker = (p, err), '  <- best'
+        print(f'  lam={p.lam:8.1e}  it={p.report.iterations:3d} '
+              f'obj={p.report.objective:.5f}  held-out err={err:.4f}'
+              f'{marker}')
+
+    t0 = time.perf_counter()
+    cold_iters = 0
+    for lam in lams:
+        cold = RankSVM(lam=lam, eps=1e-3, method='tree',
+                       solver='device').fit(data.X, data.y)
+        cold_iters += cold.report_.iterations
+    cold_s = time.perf_counter() - t0
+
+    print(f'warm path : {warm_iters} total BMRM iterations in {warm_s:.2f}s')
+    print(f'cold fits : {cold_iters} total BMRM iterations in {cold_s:.2f}s')
+    p, err = best
+    print(f'selected lam={p.lam:g} (held-out ranking error {err:.4f}); '
+          f'||w||={np.linalg.norm(p.w):.3f}')
+
+
+if __name__ == '__main__':
+    main()

@@ -5,28 +5,73 @@ Follows Teo et al. (2010) with the Franc & Sonnenburg (2009) best-iterate rule
 the paper adopts: w_b tracks the best J seen; the gap eps_t = J(w_b) - J_t(w_t)
 is the termination statistic (it upper-bounds J(w_b) - J(w*)).
 
-One oracle call per iteration. The oracle is either a bare callable
-`loss_and_subgrad(w) -> (R_emp(w), a)` or a `core.oracle.RankOracle`. For a
-device-resident RankOracle the cutting-plane state follows the oracle onto
-the device (DESIGN.md §4): the plane-gradient matrix A lives there, the
-Gram cross terms A @ a_t and the iterate w_t = -A^T alpha / (2 lam) are
-device matvecs, and only the tiny t x t bundle QP (`qp.solve_bundle_dual`)
-plus scalar bookkeeping run on host — per iteration nothing larger than a
-t-vector crosses the host<->device boundary.
+This module is a solver LAYER with two interchangeable drivers behind the
+single entry point `bmrm(..., solver=)`:
+
+* **host driver** (`solver='host'`) — the float64 reference path. One oracle
+  call per Python-loop turn; the plane matrix A follows the oracle onto the
+  device when it is device-resident, but the Gram bookkeeping, the bundle
+  dual QP (`qp.solve_bundle_dual`, float64 FISTA) and every scalar decision
+  run on host. Works with bare `w -> (R_emp, a)` callables.
+
+* **device driver** (`solver='device'`) — the whole iteration is ONE jitted
+  `bundle_step` (DESIGN.md §4): fused oracle step -> plane insert into a
+  preallocated (max_planes, n) buffer via `dynamic_update_slice` ->
+  incremental Gram row/col update -> fixed-iteration masked FISTA QP
+  (`qp.solve_bundle_dual_jax`) -> w_t update -> duality-gap statistic.
+  Steps are chunked `sync_every` at a time through `lax.scan`, and the
+  Python loop syncs only a handful of scalars per chunk — per `sync_every`
+  oracle calls exactly one host<->device round-trip happens, instead of the
+  host driver's several-per-iteration. Requires an oracle exposing a traced
+  `step_fn` (`core.oracle._FusedOracle`). All bundle state is float32; the
+  gap uses the DUAL value D(alpha) (not the primal J_t(w_t)), so a
+  not-fully-converged inner QP can only over-estimate the gap — never a
+  premature convergence claim.
+
+`solver='auto'` picks the device driver whenever the oracle supports it
+(`supports_device_solver`), measures as profitable for its layout/backend
+(`prefer_device_solver` — e.g. CPU CSR oracles with a host-dispatched
+transpose-matvec stay on the host driver), and `eps` is above the f32
+noise floor; else it falls back to host.
+
+The fixed-capacity `BundleState` is also the unit of warm-starting:
+`bmrm(..., state=prev.state)` re-enters the driver with the previous run's
+cutting planes, which `RankSVM.path` uses to sweep a regularization path —
+the planes under-estimate R_emp independently of lam, so they stay valid
+cuts when lam changes and only the scalar statistics reset.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 import warnings
-from typing import Callable, Union
+import weakref
+from typing import Callable, NamedTuple, Union
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
-from .qp import solve_bundle_dual
+from .qp import solve_bundle_dual, solve_bundle_dual_jax
+
+f32 = jnp.float32
+
+# Below this eps the f32 device bundle state's ~1e-6-relative noise floor
+# can stall the gap; 'auto' falls back to the float64 host driver.
+F32_EPS_FLOOR = 1e-5
+
+# Default plane capacity of the device driver's fixed buffers. BMRM on the
+# ranking losses here converges in tens of iterations, and past capacity
+# the least-active plane is overwritten (convergence is preserved, Teo et
+# al. sec. 5). Measured on the CPU backend the masked QP cost rises with K
+# even when few planes are active (the K-sized simplex projection sort is
+# the term), so the default stays close to the typical active count.
+DEFAULT_MAX_PLANES = 64
+
+SOLVERS = ('host', 'device', 'auto')
 
 
 @dataclasses.dataclass
@@ -37,14 +82,24 @@ class BMRMStats:
     gap: float
     loss_history: list
     gap_history: list
-    oracle_seconds: list  # per-iteration loss+subgradient wall time
-    qp_seconds: list
+    oracle_seconds: list  # host: per-iteration oracle wall time;
+    # device: amortized fused-step (oracle+QP) time per iteration. Either
+    # way wall-clock truth: on a cold fit the first entry (host) / first
+    # chunk's entries (device) include one-time jit trace+compile — warm
+    # the oracle (or compare second fits, as the benchmarks do) for
+    # steady-state numbers.
+    qp_seconds: list      # host driver only; fused into the step on device
+    solver: str = 'host'
 
 
 @dataclasses.dataclass
 class BMRMResult:
     w: np.ndarray
     stats: BMRMStats
+    state: 'BundleState | None' = None   # device driver: warm-startable
+
+
+# ---------------------------------------------------------------- dispatch
 
 
 def bmrm(loss_and_subgrad: Union[Callable, object],
@@ -54,7 +109,11 @@ def bmrm(loss_and_subgrad: Union[Callable, object],
          max_iter: int = 1000,
          w0: np.ndarray | None = None,
          max_planes: int | None = None,
-         callback: Callable | None = None) -> BMRMResult:
+         callback: Callable | None = None,
+         solver: str = 'auto',
+         sync_every: int = 8,
+         qp_iters: int = 128,
+         state: 'BundleState | None' = None) -> BMRMResult:
     """Minimize R_emp(w) + lam ||w||^2 by cutting planes.
 
     Args:
@@ -63,11 +122,26 @@ def bmrm(loss_and_subgrad: Union[Callable, object],
       dim: dimensionality of w; defaults to `oracle.n` for RankOracles.
       lam: regularization constant (the paper's lambda).
       eps: termination gap (paper uses 1e-3, SVM^rank's default).
-      max_iter: iteration cap.
+      max_iter: iteration cap (the device driver rounds up to a whole
+        number of `sync_every`-sized chunks).
       w0: optional warm start.
-      max_planes: optional cap on retained planes (oldest-inactive dropped) —
-        keeps the master QP bounded for very long runs (Teo et al. sec. 5).
+      max_planes: cap on retained planes. Host: optional, oldest-inactive
+        dropped past the cap (Teo et al. sec. 5). Device: the static buffer
+        capacity, defaulting to DEFAULT_MAX_PLANES; past it the
+        smallest-dual-weight plane is overwritten in place.
+      solver: 'host' | 'device' | 'auto' (see module docstring).
+      sync_every: device driver: oracle steps fused per jitted chunk; the
+        host syncs one scalar set per chunk. Higher amortizes dispatch
+        further but can overshoot convergence by up to sync_every-1 steps.
+      qp_iters: device driver: fixed FISTA iterations of the on-device
+        bundle dual solve.
+      state: device driver: warm-start bundle state from a previous
+        BMRMResult (regularization-path reuse; planes are kept, scalar
+        statistics reset).
     """
+    if solver not in SOLVERS:
+        raise ValueError(f'unknown solver {solver!r}; expected one of '
+                         f'{SOLVERS}')
     oracle = (loss_and_subgrad
               if hasattr(loss_and_subgrad, 'loss_and_subgrad') else None)
     fn = oracle.loss_and_subgrad if oracle is not None else loss_and_subgrad
@@ -75,16 +149,58 @@ def bmrm(loss_and_subgrad: Union[Callable, object],
         if oracle is None:
             raise ValueError('dim is required for bare-callable oracles')
         dim = int(oracle.n)
-    device = bool(oracle is not None
-                  and getattr(oracle, 'device_resident', False))
-    if device and eps < 1e-5:
+    device_capable = bool(oracle is not None
+                          and getattr(oracle, 'supports_device_solver',
+                                      False))
+    if solver == 'device':
+        if not device_capable:
+            raise ValueError(
+                "solver='device' needs an oracle with a traced step_fn "
+                '(core.oracle fused oracles); got '
+                f'{type(loss_and_subgrad).__name__}')
+        use_device = True
+    else:
+        use_device = (solver == 'auto' and device_capable
+                      and getattr(oracle, 'prefer_device_solver', True)
+                      and eps >= F32_EPS_FLOOR)
+    if use_device and eps < F32_EPS_FLOOR:
+        warnings.warn(f'eps={eps:g} is below the f32 noise floor of the '
+                      'device bundle state; the gap may stall above it',
+                      RuntimeWarning, stacklevel=2)
+    if use_device:
+        return _bmrm_device(oracle, dim=dim, lam=lam, eps=eps,
+                            max_iter=max_iter, w0=w0, max_planes=max_planes,
+                            callback=callback, sync_every=sync_every,
+                            qp_iters=qp_iters, state=state)
+    if state is not None:
+        raise ValueError('bundle-state warm starts require the device '
+                         "driver; pass solver='device' or w0=")
+    device_arrays = bool(oracle is not None
+                         and getattr(oracle, 'device_resident', False))
+    return _bmrm_host(fn, dim=dim, device=device_arrays, lam=lam, eps=eps,
+                      max_iter=max_iter, w0=w0, max_planes=max_planes,
+                      callback=callback)
+
+
+# ------------------------------------------------------------- host driver
+
+
+def _bmrm_host(fn, dim, device, lam, eps, max_iter, w0, max_planes,
+               callback) -> BMRMResult:
+    """Float64 reference driver: one oracle call per Python-loop turn.
+
+    `fn` and `dim` arrive resolved by the `bmrm` dispatcher; `device` says
+    whether fn is a device-resident oracle step (the plane matrix then
+    follows it onto the device).
+    """
+    if device and eps < F32_EPS_FLOOR:
         # Device oracles return f32 subgradients and the plane bookkeeping
         # stays f32 on device; the duality gap then carries an ~1e-6-relative
         # noise floor and may stall above very tight eps (bare callables keep
         # the pre-refactor float64 path and are unaffected).
         warnings.warn(f'eps={eps:g} is below the f32 noise floor of '
                       'device-resident oracles; the gap may stall above it',
-                      RuntimeWarning, stacklevel=2)
+                      RuntimeWarning, stacklevel=3)
 
     if device:
         w_prev = (jnp.zeros(dim, jnp.float32) if w0 is None
@@ -101,7 +217,8 @@ def bmrm(loss_and_subgrad: Union[Callable, object],
     # J at the starting point (evaluated inside the first loop turn).
     w_best = w_prev if device else w_prev.copy()
     j_best = np.inf
-    stats = BMRMStats(0, False, np.inf, np.inf, [], [], [], [])
+    stats = BMRMStats(0, False, np.inf, np.inf, [], [], [], [],
+                      solver='host')
 
     for t in range(1, max_iter + 1):
         t0 = time.perf_counter()
@@ -133,18 +250,21 @@ def bmrm(loss_and_subgrad: Union[Callable, object],
 
         if max_planes is not None and len(bvec) > max_planes:
             # Drop the plane with the smallest dual weight (least active).
+            # `alpha` is the previous solve's dual — length len(bvec)-1, it
+            # does not yet cover the plane appended above (which is never
+            # the drop candidate: it's untested, not inactive).
             drop = int(np.argmin(alpha)) if alpha is not None else 0
             keep = np.ones(len(bvec), bool)
             keep[drop] = False
+            if alpha is not None:
+                alpha = alpha[keep[:-1]]
+                s = alpha.sum()
+                alpha = alpha / s if s > 0 else None
             bvec, G = bvec[keep], G[np.ix_(keep, keep)]
             if device:
                 A = jnp.take(A, jnp.asarray(np.where(keep)[0]), axis=0)
             else:
                 A = A[keep]
-            if alpha is not None:
-                alpha = alpha[keep]
-                s = alpha.sum()
-                alpha = alpha / s if s > 0 else None
 
         t1 = time.perf_counter()
         warm = None
@@ -176,3 +296,167 @@ def bmrm(loss_and_subgrad: Union[Callable, object],
     stats.obj_best = float(j_best)
     stats.gap = float(stats.gap_history[-1]) if stats.gap_history else np.inf
     return BMRMResult(w=np.asarray(w_best, np.float64), stats=stats)
+
+
+# ----------------------------------------------------------- device driver
+
+
+class BundleState(NamedTuple):
+    """Fixed-capacity cutting-plane state, entirely device-resident.
+
+    K = max_planes is the static buffer capacity; `n_active` counts the
+    planes actually inserted so far (slots [0, n_active) — inserts fill
+    sequentially, and past capacity the smallest-alpha slot is overwritten
+    in place, so the active set is always a prefix).
+    """
+
+    w: jnp.ndarray         # (n,)   current iterate w_t
+    w_best: jnp.ndarray    # (n,)   best-J iterate (Franc & Sonnenburg)
+    j_best: jnp.ndarray    # ()     J(w_best)
+    A: jnp.ndarray         # (K, n) plane gradients a_i
+    b: jnp.ndarray         # (K,)   plane offsets b_i
+    G: jnp.ndarray         # (K, K) Gram A A^T (active block)
+    alpha: jnp.ndarray     # (K,)   bundle dual (zero outside active set)
+    n_active: jnp.ndarray  # ()     int32 planes in buffer
+    gap: jnp.ndarray       # ()     J(w_best) - D(alpha)
+    done: jnp.ndarray      # ()     bool, gap < eps reached
+
+
+def init_bundle_state(dim: int, max_planes: int,
+                      w0=None) -> BundleState:
+    w = (jnp.zeros(dim, f32) if w0 is None
+         else jnp.asarray(np.asarray(w0), f32))
+    K = int(max_planes)
+    return BundleState(
+        w=w, w_best=w, j_best=jnp.asarray(np.inf, f32),
+        A=jnp.zeros((K, dim), f32), b=jnp.zeros((K,), f32),
+        G=jnp.zeros((K, K), f32), alpha=jnp.zeros((K,), f32),
+        n_active=jnp.asarray(0, jnp.int32),
+        gap=jnp.asarray(np.inf, f32), done=jnp.asarray(False))
+
+
+def _bundle_step(s: BundleState, step_fn, lam, eps, qp_iters: int):
+    """ONE fully-traced BMRM iteration over the fixed-capacity state."""
+    K = s.b.shape[0]
+    r_emp, a = step_fn(s.w)
+    r_emp = r_emp.astype(f32)
+    a = a.astype(f32)
+
+    wa = s.w @ a
+    j_prev = r_emp + lam * (s.w @ s.w)
+    better = j_prev < s.j_best
+    j_best = jnp.where(better, j_prev, s.j_best)
+    w_best = jnp.where(better, s.w, s.w_best)
+
+    # Insert slot: next free, or (buffer full) the least-active plane.
+    idx = jnp.arange(K, dtype=jnp.int32)
+    full = s.n_active >= K
+    masked_alpha = jnp.where(idx < s.n_active, s.alpha, jnp.inf)
+    slot = jnp.where(full, jnp.argmin(masked_alpha).astype(jnp.int32),
+                     s.n_active)
+    A = jax.lax.dynamic_update_slice(s.A, a[None, :], (slot, 0))
+    cross = A @ a                    # rows >= n_active are zero-filled
+    G = s.G.at[slot, :].set(cross).at[:, slot].set(cross)
+    b = s.b.at[slot].set(r_emp - wa)
+    n_active = jnp.minimum(s.n_active + 1, K)
+    mask = idx < n_active
+
+    # Warm-started masked QP; the new plane enters with a small weight and
+    # the projection inside the solver renormalizes onto the simplex.
+    alpha0 = s.alpha.at[slot].set(1e-3)
+    alpha, dual = solve_bundle_dual_jax(G, b, lam, mask, alpha0=alpha0,
+                                        n_iter=qp_iters)
+    w = -(A.T @ alpha) / (2.0 * lam)
+
+    # Gap against the DUAL value: D(alpha) <= min_w J_t(w) for any feasible
+    # alpha, so an under-converged QP inflates the gap instead of faking
+    # convergence.
+    gap = j_best - dual
+    done = s.done | (gap < eps)
+    return BundleState(w=w, w_best=w_best, j_best=j_best, A=A, b=b, G=G,
+                       alpha=alpha, n_active=n_active, gap=gap,
+                       done=done), r_emp
+
+
+# Compiled chunk cache: per-oracle (the traced step_fn closes over its
+# arrays), keyed by the static config. lam/eps are traced arguments, so one
+# compilation serves a whole regularization-path sweep.
+_CHUNK_CACHE: weakref.WeakKeyDictionary = weakref.WeakKeyDictionary()
+
+
+def _device_chunk(oracle, max_planes: int, sync_every: int, qp_iters: int):
+    try:
+        per = _CHUNK_CACHE.setdefault(oracle, {})
+    except TypeError:              # non-weakrefable oracle: build uncached
+        per = {}
+    key = (max_planes, sync_every, qp_iters)
+    if key not in per:
+        step_fn = oracle.step_fn()
+
+        @jax.jit
+        def chunk(state: BundleState, lam, eps):
+            def body(s, _):
+                def run(s):
+                    s2, r = _bundle_step(s, step_fn, lam, eps, qp_iters)
+                    return s2, (r, s2.gap, jnp.asarray(True))
+
+                def skip(s):
+                    return s, (jnp.asarray(np.nan, f32), s.gap,
+                               jnp.asarray(False))
+
+                return jax.lax.cond(s.done, skip, run, s)
+
+            return jax.lax.scan(body, state, None, length=sync_every)
+
+        per[key] = chunk
+    return per[key]
+
+
+def _bmrm_device(oracle, dim, lam, eps, max_iter, w0, max_planes, callback,
+                 sync_every, qp_iters, state) -> BMRMResult:
+    """Device driver: `sync_every` fused bundle_steps per host round-trip."""
+    K = int(max_planes) if max_planes is not None else DEFAULT_MAX_PLANES
+    sync_every = max(1, int(sync_every))
+    chunk = _device_chunk(oracle, K, sync_every, qp_iters)
+
+    if state is None:
+        state = init_bundle_state(dim, K, w0)
+    else:
+        if state.A.shape != (K, dim):
+            raise ValueError(f'warm-start state has buffer '
+                             f'{tuple(state.A.shape)}, expected {(K, dim)}')
+        # Planes stay (they under-estimate R_emp for ANY lam); the scalar
+        # statistics are lam-dependent and reset.
+        state = state._replace(
+            w=state.w if w0 is None else jnp.asarray(np.asarray(w0), f32),
+            w_best=state.w, j_best=jnp.asarray(np.inf, f32),
+            gap=jnp.asarray(np.inf, f32), done=jnp.asarray(False))
+
+    lam_d = jnp.asarray(lam, f32)
+    eps_d = jnp.asarray(eps, f32)
+    stats = BMRMStats(0, False, np.inf, np.inf, [], [], [], [],
+                      solver='device')
+
+    n_chunks = max(1, math.ceil(max_iter / sync_every))
+    for _ in range(n_chunks):
+        t0 = time.perf_counter()
+        state, (losses, gaps, valids) = chunk(state, lam_d, eps_d)
+        v = np.asarray(valids)               # the one sync point per chunk
+        dt = time.perf_counter() - t0
+        steps = int(v.sum())
+        if steps:
+            stats.loss_history.extend(np.asarray(losses, np.float64)[v])
+            stats.gap_history.extend(np.asarray(gaps, np.float64)[v])
+            stats.oracle_seconds.extend([dt / steps] * steps)
+            stats.iterations += steps
+        if callback is not None:
+            callback(stats.iterations, state.w, float(state.j_best),
+                     float(state.gap))
+        if bool(state.done):
+            break
+
+    stats.converged = bool(state.done)
+    stats.obj_best = float(state.j_best)
+    stats.gap = float(state.gap)
+    return BMRMResult(w=np.asarray(state.w_best, np.float64), stats=stats,
+                      state=state)

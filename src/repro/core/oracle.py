@@ -60,11 +60,20 @@ class RankOracle:
       n_pairs: exact number of preference pairs N (host int).
       device_resident: True when the subgradient comes out of a fused jitted
         step — bmrm then keeps its cutting-plane bookkeeping on device.
+      supports_device_solver: True when `step_fn` yields a traced step that
+        bmrm's device driver can fuse into its jitted bundle_step.
+      prefer_device_solver: the bmrm solver='auto' hint — True when fusing
+        the whole iteration on device is the measured win for this oracle's
+        layout/backend. False e.g. for CSR features whose transpose-matvec
+        dispatches to the host kernel (DESIGN.md §4): the device driver
+        would force the slower on-device scatter.
       name: short identifier for reports/benchmarks.
     """
 
     name = 'abstract'
     device_resident = False
+    supports_device_solver = False
+    prefer_device_solver = False
     m: int
     n: int
     n_pairs: int
@@ -73,6 +82,14 @@ class RankOracle:
         """R_emp(w) and a subgradient of R_emp at w (Lemmas 1-2)."""
         raise NotImplementedError
 
+    def step_fn(self):
+        """A purely-traced `w -> (R_emp(w), a)` closure, composable inside
+        an outer jit (bmrm's device driver). Only oracles with
+        `supports_device_solver` provide one."""
+        raise NotImplementedError(
+            f'{type(self).__name__} has no traced step_fn; use the host '
+            'BMRM driver')
+
 
 def _exact_pairs(y: np.ndarray, groups) -> int:
     if groups is None:
@@ -80,6 +97,43 @@ def _exact_pairs(y: np.ndarray, groups) -> int:
     groups = np.asarray(groups)
     return int(sum(_counts.num_pairs_host(y[groups == u])
                    for u in np.unique(groups)))
+
+
+def _validate_groups(groups, m: int) -> np.ndarray:
+    """Validate user-supplied group ids; returns them as an int32 vector.
+
+    Group ids feed the key-offset trick (counts._group_offsets), where a NaN
+    poisons every offset key and a fractional id silently merges or splits
+    queries — both produce wrong counts with no error downstream, so the
+    oracle layer rejects them here with actionable messages.
+    """
+    g = np.asarray(groups)
+    if g.ndim != 1:
+        raise ValueError(f'groups must be 1-D (one id per example); got '
+                         f'shape {g.shape}')
+    if g.shape[0] != m:
+        raise ValueError(f'groups has {g.shape[0]} entries but y has {m} '
+                         'examples; they must align one-to-one')
+    if g.dtype == np.bool_:
+        g = g.astype(np.int32)          # two-query encoding, fine as ids
+    if (g.dtype == object or np.issubdtype(g.dtype, np.complexfloating)
+            or not np.issubdtype(g.dtype, np.number)):
+        raise ValueError(f'groups must be integer ids; got dtype {g.dtype}')
+    if np.issubdtype(g.dtype, np.floating):
+        if np.isnan(g).any():
+            raise ValueError('groups contains NaN; every example needs a '
+                             'valid integer group id')
+        if np.isinf(g).any():
+            raise ValueError('groups contains infinite values; group ids '
+                             'must be finite integers')
+        if not np.all(g == np.floor(g)):
+            raise ValueError('groups contains non-integer values; group '
+                             'ids must be (castable to) integers')
+    ii = np.iinfo(np.int32)
+    if g.size and (g.min() < ii.min or g.max() > ii.max):
+        raise ValueError('group ids exceed the int32 range; relabel them '
+                         '(e.g. np.unique(groups, return_inverse=True))')
+    return g.astype(np.int32)
 
 
 # --------------------------------------------------------- feature engines
@@ -175,17 +229,16 @@ def _count_dispatch(p, y, g, engine: str, block: int):
     return _counts.counts_blocked_host(p, y, block=block)
 
 
-@functools.partial(jax.jit, static_argnames=(
-    'engine', 'block', 'kind', 'uniform', 'n', 'device_rmatvec'))
-def _fused_step(w, arrays, y, g, inv_n, *, engine: str, block: int,
-                kind: str, uniform: bool, n: int, device_rmatvec: bool):
+def _fused_step_impl(w, arrays, y, g, inv_n, *, engine: str, block: int,
+                     kind: str, uniform: bool, n: int, device_rmatvec: bool):
     """The fused device step: matvec -> counts -> loss -> subgradient.
 
-    Module-level and keyed only on static layout/engine config, so every
-    oracle instance with the same shapes shares one compiled executable
-    (constructing a second RankSVM does not recompile). When
-    device_rmatvec is False the step returns (loss, c - d) and the caller
-    finishes the transpose-matvec on host (see _CSRFeatures).
+    Unjitted body so it composes INSIDE a larger traced program — bmrm's
+    device driver inlines it into its jitted bundle_step via
+    `_FusedOracle.step_fn`. `_fused_step` below is the jitted entry point
+    for standalone per-call use (`loss_and_subgrad`). When device_rmatvec
+    is False the step returns (loss, c - d) and the caller finishes the
+    transpose-matvec on host (see _CSRFeatures).
     """
     m = y.shape[0]
     if kind == 'dense':
@@ -212,11 +265,17 @@ def _fused_step(w, arrays, y, g, inv_n, *, engine: str, block: int,
                                      arrays['idx'], num_segments=n)
 
 
+_fused_step = functools.partial(jax.jit, static_argnames=(
+    'engine', 'block', 'kind', 'uniform', 'n',
+    'device_rmatvec'))(_fused_step_impl)
+
+
 class _FusedOracle(RankOracle):
     """Shared machinery around `_fused_step`. Subclasses pick the counting
     engine ('tree' | 'blocked' | 'auto') via `_engine`."""
 
     device_resident = True
+    supports_device_solver = True
     _engine = 'tree'
     _block = 0          # only meaningful for the blocked engine
 
@@ -226,14 +285,19 @@ class _FusedOracle(RankOracle):
         self.m, self.n = self._feats.m, self._feats.n
         if y.shape[0] != self.m:
             raise ValueError(f'X has {self.m} rows but y has {y.shape[0]}')
+        if groups is not None:
+            groups = _validate_groups(groups, self.m)
         self.n_pairs = _exact_pairs(y, groups)
         if self.n_pairs == 0:
             raise ValueError('training data induces no preference pairs')
         self._y = jnp.asarray(y)
-        self._g = (None if groups is None
-                   else jnp.asarray(np.asarray(groups, np.int32)))
+        self._g = None if groups is None else jnp.asarray(groups)
         self._inv_n = 1.0 / float(self.n_pairs)
         self._inv_n_dev = jnp.asarray(self._inv_n, f32)
+        # When the transpose-matvec is host-dispatched (CPU CSR), fusing
+        # the iteration on device would force the slower scatter path;
+        # solver='auto' keeps such oracles on the host driver.
+        self.prefer_device_solver = bool(self._feats.device_rmatvec)
 
     def loss_and_subgrad(self, w):
         feats = self._feats
@@ -246,6 +310,26 @@ class _FusedOracle(RankOracle):
             return loss, out
         cd = np.asarray(out, np.float64)
         return loss, feats.rmatvec_host(cd * self._inv_n)
+
+    def step_fn(self):
+        """Traced `w -> (loss, a)` for bmrm's device driver.
+
+        Always finishes the transpose-matvec on device (device_rmatvec
+        forced True): inside the fused bundle_step there is no host to hand
+        c - d to, so the csr_rmatvec='host' CPU micro-optimization applies
+        to the host driver only.
+        """
+        feats = self._feats
+        y, g, inv_n = self._y, self._g, self._inv_n_dev
+        cfg = dict(engine=self._engine, block=self._block, kind=feats.kind,
+                   uniform=getattr(feats, '_uniform', False), n=self.n,
+                   device_rmatvec=True)
+        arrays = feats.arrays
+
+        def fn(w):
+            return _fused_step_impl(w, arrays, y, g, inv_n, **cfg)
+
+        return fn
 
 
 class TreeOracle(_FusedOracle):

@@ -13,10 +13,21 @@ The paper solves this with CVXOPT; this container is offline so we ship our
 own solver: accelerated projected gradient (FISTA) with an exact O(t log t)
 Euclidean projection onto the simplex (Duchi et al., 2008). t stays tiny
 (tens..hundreds of planes), so this is exact-to-tolerance and costs microseconds.
+
+Two implementations of the same dual:
+
+* `solve_bundle_dual`      — host numpy/float64, adaptive stopping; the
+  reference path used by the host BMRM driver.
+* `solve_bundle_dual_jax`  — pure traced jax, fixed iteration count, active
+  planes selected by a boolean mask over a fixed-capacity buffer; designed
+  to run INSIDE the device driver's jitted `bundle_step` (DESIGN.md §4),
+  so the whole master-problem solve stays on device.
 """
 
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -70,4 +81,87 @@ def solve_bundle_dual(G: np.ndarray, b: np.ndarray, lam: float,
                 stall += 1
                 if stall >= 5:
                     break
+    return a_best, -f_best
+
+
+# ------------------------------------------------- device (traced) variants
+
+
+def project_simplex_masked(v: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Traced Euclidean projection onto {x >= 0, sum x = 1, x[~mask] = 0}.
+
+    Same Duchi et al. (2008) sort-and-threshold as `project_simplex`, over a
+    fixed-capacity vector with inactive slots excluded by pushing them to
+    -inf before the sort. Requires at least one True in `mask`.
+    """
+    k = v.shape[0]
+    vm = jnp.where(mask, v, -jnp.inf)
+    u = jnp.sort(vm)[::-1]
+    css = jnp.cumsum(jnp.where(jnp.isfinite(u), u, 0.0)) - 1.0
+    j = jnp.arange(1, k + 1)
+    cond = jnp.isfinite(u) & (u * j.astype(v.dtype) > css)
+    rho = jnp.max(jnp.where(cond, j, 1))
+    theta = jnp.take(css, rho - 1) / rho.astype(v.dtype)
+    return jnp.where(mask, jnp.maximum(v - theta, 0.0), 0.0)
+
+
+def solve_bundle_dual_jax(G: jnp.ndarray, b: jnp.ndarray, lam,
+                          mask: jnp.ndarray,
+                          alpha0: jnp.ndarray | None = None,
+                          n_iter: int = 256):
+    """Masked fixed-iteration FISTA for the bundle dual, fully traceable.
+
+    G is the (K, K) Gram buffer and b the (K,) offset buffer of the device
+    driver's fixed-capacity bundle state; `mask` selects the active planes
+    (rows/cols outside it are ignored). Runs exactly `n_iter` FISTA steps —
+    no data-dependent early exit, so one compiled program serves every BMRM
+    iteration — and returns (alpha, dual_value) with alpha zero outside
+    `mask`. The Lipschitz constant uses the Gershgorin row-sum bound (exact
+    eigen-decomposition is host-only); FISTA being non-monotone, the best
+    iterate seen is tracked and returned.
+    """
+    dt = G.dtype
+    lam = jnp.asarray(lam, dt)
+    mask_f = mask.astype(dt)
+    Gm = G * mask_f[:, None] * mask_f[None, :]
+    bm = jnp.where(mask, b, 0.0).astype(dt)
+    # lmax(Gm) by a few power iterations (Gershgorin alone is up to K times
+    # too big, which shrinks the FISTA step and starves convergence within
+    # the fixed budget). Power iteration approaches lmax from below, so pad
+    # by 10% and clamp to the always-safe Gershgorin bound; an
+    # underestimate merely slows FISTA — the caller's dual-value gap
+    # statistic stays valid for ANY feasible iterate.
+    gersh = jnp.max(jnp.sum(jnp.abs(Gm), axis=1))
+
+    def _pow(_, v):
+        u = Gm @ v
+        return u / jnp.maximum(jnp.linalg.norm(u), 1e-30)
+
+    v = jax.lax.fori_loop(0, 12, _pow, mask_f / jnp.maximum(
+        jnp.linalg.norm(mask_f), 1e-30))
+    lmax = jnp.minimum(1.1 * (v @ (Gm @ v)), gersh)
+    L = jnp.maximum(lmax / (2.0 * lam), jnp.asarray(1e-12, dt))
+
+    def grad(a):
+        return (Gm @ a) / (2.0 * lam) - bm
+
+    def fval(a):
+        return a @ Gm @ a / (4.0 * lam) - bm @ a
+
+    alpha = (project_simplex_masked(jnp.zeros_like(bm), mask)
+             if alpha0 is None else project_simplex_masked(alpha0, mask))
+
+    def body(_, carry):
+        alpha, z, tk, a_best, f_best = carry
+        alpha_new = project_simplex_masked(z - grad(z) / L, mask)
+        tk_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * tk * tk))
+        z = alpha_new + ((tk - 1.0) / tk_new) * (alpha_new - alpha)
+        f_new = fval(alpha_new)
+        better = f_new < f_best
+        a_best = jnp.where(better, alpha_new, a_best)
+        f_best = jnp.where(better, f_new, f_best)
+        return alpha_new, z, tk_new, a_best, f_best
+
+    init = (alpha, alpha, jnp.asarray(1.0, dt), alpha, fval(alpha))
+    _, _, _, a_best, f_best = jax.lax.fori_loop(0, n_iter, body, init)
     return a_best, -f_best

@@ -9,11 +9,28 @@
             problems on TPU, tree otherwise
   'sharded' pod-scale mesh oracle (core.distributed) on dense bf16 features
 
-— and hands it to `core.bmrm.bmrm`. All count/subgradient work flows through
-the oracle's fused device-resident step; this module touches no counting
-internals. Both 'tree' and 'pairs' reach the same solution — the paper uses
-this parity as its Fig. 4 sanity check, reproduced in
-benchmarks/fig4_test_error.py.
+— and hands it to `core.bmrm.bmrm`. Orthogonally, `solver=` picks the BMRM
+driver (core.bmrm):
+
+  'host'    float64 reference loop, one host round-trip set per iteration
+  'device'  the whole iteration jitted on device (fused oracle step +
+            plane-buffer insert + on-device bundle QP), scalars synced
+            every `sync_every` steps — the low-overhead path at small and
+            medium m, where host dispatch otherwise dominates
+  'auto'    device whenever the oracle supports it, measures as
+            profitable for its layout (CPU CSR oracles with a
+            host-dispatched transpose-matvec stay on host), and eps is
+            above the f32 noise floor (the default)
+
+All count/subgradient work flows through the oracle's fused device-resident
+step; this module touches no counting internals. Both 'tree' and 'pairs'
+reach the same solution — the paper uses this parity as its Fig. 4 sanity
+check, reproduced in benchmarks/fig4_test_error.py.
+
+`RankSVM.path(X, y, lams)` sweeps a regularization path, reusing the
+device driver's fixed-capacity bundle state across lambda values (cutting
+planes under-estimate R_emp independently of lambda, so they remain valid
+cuts — later fits start from an already-tight model of the risk).
 
 Feature matrices may be numpy arrays, repro.data.sparse.CSRMatrix, or
 scipy.sparse (CSR recommended); the matvecs X @ w and X.T @ v are the O(ms)
@@ -30,7 +47,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from . import rank_loss as _rank_loss
-from .bmrm import bmrm
+from .bmrm import SOLVERS, bmrm
 from .oracle import METHODS, make_oracle
 
 
@@ -49,6 +66,15 @@ class FitReport:
     seconds: float
     oracle_seconds_mean: float
     loss_history: list
+    solver: str = 'host'
+
+
+@dataclasses.dataclass
+class PathPoint:
+    """One lambda of a regularization-path sweep (`RankSVM.path`)."""
+    lam: float
+    w: np.ndarray
+    report: FitReport
 
 
 class RankSVM:
@@ -60,7 +86,13 @@ class RankSVM:
       eps: BMRM termination gap (paper default 1e-3).
       method: oracle selector — 'tree' | 'pairs' | 'auto' | 'sharded'
         (see module docstring; core.oracle.make_oracle).
+      solver: BMRM driver — 'host' | 'device' | 'auto' (core.bmrm).
       max_iter: BMRM iteration cap.
+      max_planes: cutting-plane cap; for the device driver this is the
+        static bundle-buffer capacity (default core.bmrm.DEFAULT_MAX_PLANES).
+      sync_every: device driver: fused steps per host sync.
+      qp_iters: device driver: fixed FISTA iterations of the on-device
+        bundle dual solve.
       pair_block: VMEM/cache block for the O(m^2) pairwise pass.
       mesh: optional jax Mesh for method='sharded' (defaults to all local
         devices on the 'data' axis).
@@ -68,14 +100,23 @@ class RankSVM:
 
     def __init__(self, lam: float = 1e-3, eps: float = 1e-3,
                  method: str = 'tree', max_iter: int = 1000,
-                 pair_block: int = 2048, mesh=None, verbose: bool = False):
+                 pair_block: int = 2048, mesh=None, verbose: bool = False,
+                 solver: str = 'auto', max_planes: int | None = None,
+                 sync_every: int = 8, qp_iters: int = 128):
         if method not in METHODS:
             raise ValueError(f'unknown method {method!r}; '
                              f'expected one of {METHODS}')
+        if solver not in SOLVERS:
+            raise ValueError(f'unknown solver {solver!r}; '
+                             f'expected one of {SOLVERS}')
         self.lam = float(lam)
         self.eps = float(eps)
         self.method = method
+        self.solver = solver
         self.max_iter = int(max_iter)
+        self.max_planes = max_planes
+        self.sync_every = int(sync_every)
+        self.qp_iters = int(qp_iters)
         self.pair_block = int(pair_block)
         self.mesh = mesh
         self.verbose = verbose
@@ -92,21 +133,42 @@ class RankSVM:
         self.oracle_ = oracle
 
         t0 = time.perf_counter()
-        res = bmrm(oracle, lam=self.lam, eps=self.eps,
-                   max_iter=self.max_iter,
-                   callback=(lambda t, w, j, g:
-                             print(f'  bmrm it={t} J_best={j:.6f} gap={g:.2e}'))
-                   if self.verbose else None)
+        res = self._solve(oracle, self.lam)
         dt = time.perf_counter() - t0
 
         self.w_ = res.w
-        st = res.stats
-        self.report_ = FitReport(
-            iterations=st.iterations, converged=st.converged,
-            objective=st.obj_best, gap=st.gap, seconds=dt,
-            oracle_seconds_mean=float(np.mean(st.oracle_seconds)),
-            loss_history=st.loss_history)
+        self.report_ = self._report(res, dt)
         return self
+
+    def path(self, X, y, lams, groups=None) -> list[PathPoint]:
+        """Fit a regularization path over `lams`, warm-starting each fit.
+
+        With the device solver the entire bundle state (plane buffer, Gram,
+        dual) carries over between lambda values; with the host solver the
+        previous solution w seeds the next fit. Leaves the estimator fitted
+        at the LAST lambda in `lams`. Returns one PathPoint per lambda.
+        """
+        lams = [float(lam) for lam in lams]
+        if not lams:
+            raise ValueError('path() needs at least one lambda')
+        oracle = make_oracle(X, y, groups=groups, method=self.method,
+                             pair_block=self.pair_block, mesh=self.mesh)
+        self.oracle_ = oracle
+
+        points: list[PathPoint] = []
+        state, w_prev = None, None
+        for lam in lams:
+            t0 = time.perf_counter()
+            res = self._solve(oracle, lam, state=state, w0=w_prev)
+            dt = time.perf_counter() - t0
+            state = res.state            # None on the host driver
+            w_prev = res.w
+            points.append(PathPoint(lam=lam, w=res.w,
+                                    report=self._report(res, dt)))
+        last = points[-1]
+        self.w_, self.report_ = last.w, last.report
+        self.lam = last.lam
+        return points
 
     def decision_function(self, X) -> np.ndarray:
         if self.w_ is None:
@@ -131,3 +193,25 @@ class RankSVM:
         loss, _ = _rank_loss.loss_and_subgradient(
             p, jnp.asarray(y, jnp.float32), g)
         return float(loss) + self.lam * float(self.w_ @ self.w_)
+
+    # -- internals ---------------------------------------------------------
+
+    def _solve(self, oracle, lam, state=None, w0=None):
+        return bmrm(oracle, lam=lam, eps=self.eps, max_iter=self.max_iter,
+                    solver=self.solver, max_planes=self.max_planes,
+                    sync_every=self.sync_every, qp_iters=self.qp_iters,
+                    state=state, w0=w0,
+                    callback=(lambda t, w, j, g:
+                              print(f'  bmrm it={t} J_best={j:.6f} '
+                                    f'gap={g:.2e}'))
+                    if self.verbose else None)
+
+    @staticmethod
+    def _report(res, seconds) -> FitReport:
+        st = res.stats
+        return FitReport(
+            iterations=st.iterations, converged=st.converged,
+            objective=st.obj_best, gap=st.gap, seconds=seconds,
+            oracle_seconds_mean=float(np.mean(st.oracle_seconds))
+            if st.oracle_seconds else float('nan'),
+            loss_history=st.loss_history, solver=st.solver)

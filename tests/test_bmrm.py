@@ -128,6 +128,32 @@ def test_bmrm_max_planes_still_converges():
     np.testing.assert_allclose(res.w, res_full.w, atol=1e-2)
 
 
+def test_bmrm_max_planes_drop_with_warm_dual():
+    """Regression: when the plane cap triggers, the drop mask covers the
+    just-appended plane but the warm dual alpha does not — the realignment
+    must use keep[:-1] (used to raise IndexError the first time the cap hit
+    with alpha warm-started, i.e. on every run past max_planes iterations)."""
+    rng = np.random.default_rng(7)
+    A = rng.normal(size=(40, 6))
+    yb = rng.normal(size=40)
+    lam = 0.02
+
+    def loss(w):
+        r = A @ w - yb
+        hinge = np.maximum(np.abs(r) - 0.1, 0)
+        g = A.T @ (np.sign(r) * (hinge > 0)) / len(yb)
+        return float(hinge.mean()), g
+
+    # Tight eps forces well past max_planes iterations, so the drop path
+    # runs repeatedly with a warm-started dual.
+    res = bmrm(loss, dim=6, lam=lam, eps=1e-7, max_iter=200, max_planes=8)
+    res_full = bmrm(loss, dim=6, lam=lam, eps=1e-7, max_iter=200)
+    assert res.stats.iterations > 8
+    assert res.stats.converged
+    assert res.stats.obj_best == pytest.approx(res_full.stats.obj_best,
+                                               rel=1e-3)
+
+
 # ----------------------------------------------------------------- RankSVM
 
 

@@ -141,6 +141,77 @@ def test_sharded_rejects_groups():
         O.make_oracle(X, y, groups=np.zeros(20, np.int32), method='sharded')
 
 
+# ------------------------------------------------------ group validation
+
+
+def test_groups_with_nan_rejected():
+    X, y, _ = _dense_case(m=20, n=3, seed=13)
+    g = np.zeros(20, np.float64)
+    g[7] = np.nan
+    with pytest.raises(ValueError, match='NaN'):
+        O.make_oracle(X, y, groups=g, method='tree')
+
+
+def test_groups_boolean_ids_accepted():
+    X, y, _ = _dense_case(m=30, n=3, seed=18)
+    g_b = np.arange(30) < 15                     # two-query bool encoding
+    ob = O.make_oracle(X, y, groups=g_b, method='tree')
+    oi = O.make_oracle(X, y, groups=g_b.astype(np.int32), method='tree')
+    assert ob.n_pairs == oi.n_pairs
+
+
+def test_groups_with_inf_rejected():
+    X, y, _ = _dense_case(m=20, n=3, seed=13)
+    g = np.zeros(20, np.float64)
+    g[0] = np.inf
+    with pytest.raises(ValueError, match='infinite'):
+        O.make_oracle(X, y, groups=g, method='tree')
+
+
+def test_groups_beyond_int32_rejected():
+    X, y, _ = _dense_case(m=20, n=3, seed=13)
+    g = np.zeros(20, np.int64)
+    g[-1] = 2 ** 40                     # would silently wrap in int32
+    with pytest.raises(ValueError, match='int32'):
+        O.make_oracle(X, y, groups=g, method='tree')
+
+
+def test_groups_with_fractional_ids_rejected():
+    X, y, _ = _dense_case(m=20, n=3, seed=14)
+    g = np.zeros(20, np.float64)
+    g[3] = 0.5
+    with pytest.raises(ValueError, match='non-integer'):
+        O.make_oracle(X, y, groups=g, method='tree')
+
+
+def test_groups_integral_floats_accepted():
+    X, y, _ = _dense_case(m=30, n=3, seed=15)
+    g_f = np.repeat([0.0, 1.0, 2.0], 10)        # float dtype, integral values
+    g_i = g_f.astype(np.int32)
+    w = np.random.default_rng(15).normal(size=3)
+    of = O.make_oracle(X, y, groups=g_f, method='tree')
+    oi = O.make_oracle(X, y, groups=g_i, method='tree')
+    assert of.n_pairs == oi.n_pairs
+    lf, af = of.loss_and_subgrad(w)
+    li, ai = oi.loss_and_subgrad(w)
+    assert float(lf) == pytest.approx(float(li))
+    np.testing.assert_allclose(np.asarray(af), np.asarray(ai))
+
+
+def test_groups_length_mismatch_rejected():
+    X, y, _ = _dense_case(m=20, n=3, seed=16)
+    with pytest.raises(ValueError, match='align'):
+        O.make_oracle(X, y, groups=np.zeros(19, np.int32), method='tree')
+
+
+def test_groups_wrong_shape_and_dtype_rejected():
+    X, y, _ = _dense_case(m=20, n=3, seed=17)
+    with pytest.raises(ValueError, match='1-D'):
+        O.make_oracle(X, y, groups=np.zeros((4, 5), np.int32), method='tree')
+    with pytest.raises(ValueError, match='integer ids'):
+        O.make_oracle(X, y, groups=np.asarray(['a'] * 20), method='tree')
+
+
 def test_ranksvm_auto_dispatches_through_counts_auto(monkeypatch):
     """Regression: method='auto' must reach kernels.pairwise_rank.counts_auto
     (the Pallas-kernel-vs-tree switch), not a fork of the estimator."""

@@ -1,0 +1,84 @@
+"""Sharded-path solver benchmark: host vs device BMRM driver on a real mesh.
+
+PR 3 made `ShardedOracle` a first-class citizen of the device bundle core:
+it gained a traced mesh `step_fn`, and the driver's `BundleState` carries
+sharding annotations (plane buffer column-sharded over 'model'), so the
+whole iteration — sharded oracle step, plane insert, incremental Gram,
+on-device masked FISTA QP — runs as one jitted program under the mesh.
+Before that, the sharded oracle was pinned to the host driver and paid a
+full host round-trip (w out, (loss, a) in, numpy QP) per iteration.
+
+This measures that delta on the forced-8-virtual-device CPU mesh (the same
+mesh the `test-multidevice` CI job uses): per-iteration wall time for both
+drivers on grouped (per-query LTR) problems, plus objective parity.
+
+    PYTHONPATH=src python -m benchmarks.sharded_solver [--full]
+"""
+
+import os
+
+# Force the 8 virtual devices BEFORE jax is imported, appending so a
+# user-set XLA_FLAGS doesn't silently leave us on a 1-device "mesh".
+_FLAG = '--xla_force_host_platform_device_count=8'
+if _FLAG not in os.environ.get('XLA_FLAGS', ''):
+    os.environ['XLA_FLAGS'] = (
+        os.environ.get('XLA_FLAGS', '') + ' ' + _FLAG).strip()
+
+import numpy as np
+
+from repro.core.bmrm import bmrm
+from repro.core.oracle import ShardedOracle
+from repro.launch.mesh import make_mesh
+
+from .common import Reporter, timeit
+
+LAM, EPS, MAX_ITER = 1e-2, 1e-2, 200
+
+
+def _make_case(m, n, n_groups, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(m, n))
+    wstar = rng.normal(size=n)
+    y = X @ wstar + 0.3 * rng.normal(size=m)
+    g = np.sort(rng.integers(0, n_groups, size=m)).astype(np.int32)
+    return X, y, g
+
+
+def _driver_stats(oracle, solver):
+    def fit():
+        return bmrm(oracle, lam=LAM, eps=EPS, solver=solver,
+                    max_iter=MAX_ITER)
+
+    res = fit()                                 # compile + warm caches
+    secs = timeit(fit, repeats=3, warmup=0)
+    it = max(1, res.stats.iterations)
+    return secs / it, it, res.stats.obj_best, res.stats.converged
+
+
+def main(full: bool = False):
+    import jax
+    ndev = jax.device_count()
+    mesh = make_mesh((ndev // 2, 2), ('data', 'model'))
+    rep = Reporter('sharded_solver',
+                   ['m', 'n', 'groups', 'devices', 'host_it',
+                    'host_ms_per_it', 'dev_it', 'dev_ms_per_it',
+                    'host_over_dev_per_it', 'host_obj', 'dev_obj',
+                    'obj_rel_diff'])
+    sizes = [(512, 64, 32), (2048, 128, 128), (8192, 128, 512)]
+    if full:
+        sizes.append((32768, 256, 2048))
+    for m, n, n_groups in sizes:
+        X, y, g = _make_case(m, n, n_groups)
+        oracle = ShardedOracle(X, y, groups=g, mesh=mesh)
+        h_per, h_it, h_obj, _ = _driver_stats(oracle, 'host')
+        d_per, d_it, d_obj, _ = _driver_stats(oracle, 'device')
+        rep.row(m, n, n_groups, ndev, h_it, round(1e3 * h_per, 3), d_it,
+                round(1e3 * d_per, 3), round(h_per / d_per, 2),
+                round(h_obj, 6), round(d_obj, 6),
+                format(abs(d_obj - h_obj) / max(abs(h_obj), 1e-12), '.2e'))
+    return rep
+
+
+if __name__ == '__main__':
+    import sys
+    main(full='--full' in sys.argv).save()

@@ -22,8 +22,12 @@ single entry point `bmrm(..., solver=)`:
   Steps are chunked `sync_every` at a time through `lax.scan`, and the
   Python loop syncs only a handful of scalars per chunk — per `sync_every`
   oracle calls exactly one host<->device round-trip happens, instead of the
-  host driver's several-per-iteration. Requires an oracle exposing a traced
-  `step_fn` (`core.oracle._FusedOracle`). All bundle state is float32; the
+  host driver's several-per-iteration. `sync_every='auto'` retunes the
+  chunk length between chunks from the observed gap-decay rate. Requires
+  an oracle exposing a traced `step_fn` (`core.oracle._FusedOracle` or the
+  mesh `ShardedOracle` — the latter also annotates the `BundleState` with
+  shardings via `bundle_state_shardings`, keeping the plane buffer
+  column-sharded over 'model' across chunks). All bundle state is f32; the
   gap uses the DUAL value D(alpha) (not the primal J_t(w_t)), so a
   not-fully-converged inner QP can only over-estimate the gap — never a
   premature convergence claim.
@@ -54,6 +58,7 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .qp import solve_bundle_dual, solve_bundle_dual_jax
 
@@ -62,6 +67,12 @@ f32 = jnp.float32
 # Below this eps the f32 device bundle state's ~1e-6-relative noise floor
 # can stall the gap; 'auto' falls back to the float64 host driver.
 F32_EPS_FLOOR = 1e-5
+
+# sync_every='auto' schedule: start small for fast gap feedback, then pick
+# the next chunk from the observed gap-decay rate. Chunk lengths are powers
+# of two so the jitted-chunk cache stays at <= 6 compiled programs.
+AUTO_SYNC_INIT = 4
+AUTO_SYNC_MAX = 32
 
 # Default plane capacity of the device driver's fixed buffers. BMRM on the
 # ranking losses here converges in tens of iterations, and past capacity
@@ -111,7 +122,7 @@ def bmrm(loss_and_subgrad: Union[Callable, object],
          max_planes: int | None = None,
          callback: Callable | None = None,
          solver: str = 'auto',
-         sync_every: int = 8,
+         sync_every: 'int | str' = 8,
          qp_iters: int = 128,
          state: 'BundleState | None' = None) -> BMRMResult:
     """Minimize R_emp(w) + lam ||w||^2 by cutting planes.
@@ -133,6 +144,10 @@ def bmrm(loss_and_subgrad: Union[Callable, object],
       sync_every: device driver: oracle steps fused per jitted chunk; the
         host syncs one scalar set per chunk. Higher amortizes dispatch
         further but can overshoot convergence by up to sync_every-1 steps.
+        'auto' tunes the chunk length per chunk from the observed gap-decay
+        rate: long chunks while the predicted steps-to-eps is large, short
+        ones near convergence, bounding the overshoot to about half the
+        predicted remaining work (ROADMAP sync autotuning).
       qp_iters: device driver: fixed FISTA iterations of the on-device
         bundle dual solve.
       state: device driver: warm-start bundle state from a previous
@@ -142,6 +157,9 @@ def bmrm(loss_and_subgrad: Union[Callable, object],
     if solver not in SOLVERS:
         raise ValueError(f'unknown solver {solver!r}; expected one of '
                          f'{SOLVERS}')
+    if isinstance(sync_every, str) and sync_every != 'auto':
+        raise ValueError(f"unknown sync_every {sync_every!r}; expected an "
+                         "int or 'auto'")
     oracle = (loss_and_subgrad
               if hasattr(loss_and_subgrad, 'loss_and_subgrad') else None)
     fn = oracle.loss_and_subgrad if oracle is not None else loss_and_subgrad
@@ -335,6 +353,37 @@ def init_bundle_state(dim: int, max_planes: int,
         gap=jnp.asarray(np.inf, f32), done=jnp.asarray(False))
 
 
+def bundle_state_shardings(mesh) -> BundleState:
+    """Sharding annotations for a `BundleState` living on `mesh` (the
+    sharded-oracle pod path, DESIGN.md §5).
+
+    The plane buffer A is the only O(K n) object: it is column-sharded over
+    'model' exactly like the subgradients the oracle emits, so plane insert
+    (`dynamic_update_slice`) and the master-problem matvec `A.T @ alpha`
+    run shard-local with no per-step resharding. Everything O(K) or O(K^2)
+    — offsets, Gram, dual, scalars — plus the iterates w / w_best is
+    replicated: the QP is K-sized host-scale math that every device
+    redundantly computes faster than it could communicate about it.
+    """
+    rep = NamedSharding(mesh, P())
+    return BundleState(
+        w=rep, w_best=rep, j_best=rep,
+        A=NamedSharding(mesh, P(None, 'model')), b=rep, G=rep, alpha=rep,
+        n_active=rep, gap=rep, done=rep)
+
+
+def abstract_bundle_state(dim: int, max_planes: int) -> BundleState:
+    """ShapeDtypeStruct stand-ins for one BundleState (compile-only
+    dry-runs of the full sharded bundle_step; launch.dryrun)."""
+    K = int(max_planes)
+    s = jax.ShapeDtypeStruct
+    return BundleState(
+        w=s((dim,), f32), w_best=s((dim,), f32), j_best=s((), f32),
+        A=s((K, dim), f32), b=s((K,), f32), G=s((K, K), f32),
+        alpha=s((K,), f32), n_active=s((), jnp.int32),
+        gap=s((), f32), done=s((), jnp.bool_))
+
+
 def _bundle_step(s: BundleState, step_fn, lam, eps, qp_iters: int):
     """ONE fully-traced BMRM iteration over the fixed-capacity state."""
     K = s.b.shape[0]
@@ -393,7 +442,6 @@ def _device_chunk(oracle, max_planes: int, sync_every: int, qp_iters: int):
     if key not in per:
         step_fn = oracle.step_fn()
 
-        @jax.jit
         def chunk(state: BundleState, lam, eps):
             def body(s, _):
                 def run(s):
@@ -408,16 +456,55 @@ def _device_chunk(oracle, max_planes: int, sync_every: int, qp_iters: int):
 
             return jax.lax.scan(body, state, None, length=sync_every)
 
-        per[key] = chunk
+        sh = _oracle_state_shardings(oracle)
+        if sh is None:
+            per[key] = jax.jit(chunk)
+        else:
+            # Mesh oracle: pin the bundle state's shardings on BOTH sides
+            # of the chunk so state threads through the whole sweep without
+            # per-chunk resharding (the plane buffer stays column-sharded).
+            rep = NamedSharding(sh.A.mesh, P())
+            per[key] = jax.jit(chunk, in_shardings=(sh, rep, rep),
+                               out_shardings=(sh, (rep, rep, rep)))
     return per[key]
+
+
+def _oracle_state_shardings(oracle):
+    """BundleState shardings for mesh oracles (None for single-device)."""
+    fn = getattr(oracle, 'state_shardings', None)
+    return fn() if callable(fn) else None
+
+
+def _next_sync_every(gaps: np.ndarray, eps: float, cur: int) -> int:
+    """Pick the next chunk length from the observed gap decay.
+
+    Fits a geometric decay rate to the last chunk's gap trajectory,
+    predicts the remaining steps to eps, and sizes the next chunk at about
+    half that — so the convergence overshoot (up to chunk-1 wasted fused
+    steps) stays bounded by the remaining useful work. Chunk lengths are
+    powers of two in [1, AUTO_SYNC_MAX] to bound jit-cache growth.
+    """
+    gaps = np.asarray([g for g in gaps if np.isfinite(g) and g > 0.0])
+    if len(gaps) and gaps[-1] <= eps:
+        return max(1, min(cur, AUTO_SYNC_MAX))   # about to converge
+    if len(gaps) < 2:
+        # No decay signal (also the only escape from cur == 1, whose
+        # chunks yield a single gap sample): grow to amortize dispatch.
+        return max(1, min(2 * cur, AUTO_SYNC_MAX))
+    rate = (gaps[-1] / gaps[0]) ** (1.0 / (len(gaps) - 1))
+    if not (0.0 < rate < 1.0):         # gap not (yet) decaying: no signal,
+        return min(2 * cur, AUTO_SYNC_MAX)   # amortize dispatch harder
+    n_rem = math.log(gaps[-1] / eps) / math.log(1.0 / rate)
+    target = max(1.0, n_rem / 2.0)
+    return int(min(1 << int(math.floor(math.log2(target))), AUTO_SYNC_MAX))
 
 
 def _bmrm_device(oracle, dim, lam, eps, max_iter, w0, max_planes, callback,
                  sync_every, qp_iters, state) -> BMRMResult:
     """Device driver: `sync_every` fused bundle_steps per host round-trip."""
     K = int(max_planes) if max_planes is not None else DEFAULT_MAX_PLANES
-    sync_every = max(1, int(sync_every))
-    chunk = _device_chunk(oracle, K, sync_every, qp_iters)
+    auto_sync = sync_every == 'auto'
+    cur_sync = AUTO_SYNC_INIT if auto_sync else max(1, int(sync_every))
 
     if state is None:
         state = init_bundle_state(dim, K, w0)
@@ -431,29 +518,44 @@ def _bmrm_device(oracle, dim, lam, eps, max_iter, w0, max_planes, callback,
             w=state.w if w0 is None else jnp.asarray(np.asarray(w0), f32),
             w_best=state.w, j_best=jnp.asarray(np.inf, f32),
             gap=jnp.asarray(np.inf, f32), done=jnp.asarray(False))
+    sh = _oracle_state_shardings(oracle)
+    if sh is not None:
+        # Mesh oracle: commit the state to its annotated shardings up front
+        # (replicated scalars/QP state, column-sharded plane buffer) so the
+        # first chunk already runs without resharding.
+        state = jax.device_put(state, sh)
 
     lam_d = jnp.asarray(lam, f32)
     eps_d = jnp.asarray(eps, f32)
     stats = BMRMStats(0, False, np.inf, np.inf, [], [], [], [],
                       solver='device')
 
-    n_chunks = max(1, math.ceil(max_iter / sync_every))
-    for _ in range(n_chunks):
+    # Fit-local chunk cache: bounds compiles to the distinct chunk lengths
+    # even for non-weakrefable oracles (where _CHUNK_CACHE can't help).
+    chunks: dict = {}
+    while True:                       # always >= 1 chunk (matches ceil())
+        chunk = chunks.get(cur_sync)
+        if chunk is None:
+            chunk = _device_chunk(oracle, K, cur_sync, qp_iters)
+            chunks[cur_sync] = chunk
         t0 = time.perf_counter()
         state, (losses, gaps, valids) = chunk(state, lam_d, eps_d)
         v = np.asarray(valids)               # the one sync point per chunk
         dt = time.perf_counter() - t0
         steps = int(v.sum())
+        gaps = np.asarray(gaps, np.float64)[v]
         if steps:
             stats.loss_history.extend(np.asarray(losses, np.float64)[v])
-            stats.gap_history.extend(np.asarray(gaps, np.float64)[v])
+            stats.gap_history.extend(gaps)
             stats.oracle_seconds.extend([dt / steps] * steps)
             stats.iterations += steps
         if callback is not None:
             callback(stats.iterations, state.w, float(state.j_best),
                      float(state.gap))
-        if bool(state.done):
+        if bool(state.done) or stats.iterations >= max_iter:
             break
+        if auto_sync:
+            cur_sync = _next_sync_every(gaps, eps, cur_sync)
 
     stats.converged = bool(state.done)
     stats.obj_best = float(state.j_best)

@@ -18,6 +18,17 @@ vectors p, y are tiny (4 MB at m = 1M). So:
 One oracle call therefore costs O(ms/devs) flops + two small collectives +
 one O(m) gather — the TPU-native replacement for the paper's single-machine
 red-black tree sweep.
+
+Per-query LTR at pod scale: group ids ride along exactly like y (row-sharded
+in, all-gathered for the counting phase), and the key-offset trick
+(`counts._group_offsets`) folds the per-group restriction into the SAME
+single tree pass — cross-group pairs are pushed outside the margin/preference
+conditions by construction, so the sharded cost model above is unchanged.
+
+`make_oracle_body` is the composable (unjitted) form of the step: bmrm's
+device driver inlines it into its jitted `bundle_step` via
+`ShardedOracle.step_fn`, with the bundle state carrying the matching
+sharding annotations (`core.bmrm.bundle_state_shardings`).
 """
 
 from __future__ import annotations
@@ -46,6 +57,7 @@ def input_specs(mcfg, shape: RankSVMShapeConfig):
     return {
         'X': jax.ShapeDtypeStruct((shape.m, shape.n), jnp.bfloat16),
         'y': jax.ShapeDtypeStruct((shape.m,), f32),
+        'g': jax.ShapeDtypeStruct((shape.m,), jnp.int32),
         'w': jax.ShapeDtypeStruct((shape.n,), f32),
         'n_pairs': jax.ShapeDtypeStruct((), f32),
     }
@@ -56,6 +68,7 @@ def arg_shardings(mesh):
     return {
         'X': NamedSharding(mesh, P(rows, 'model')),
         'y': NamedSharding(mesh, P(rows)),
+        'g': NamedSharding(mesh, P(rows)),       # group ids ride like y
         'w': NamedSharding(mesh, P('model')),
         'n_pairs': NamedSharding(mesh, P()),
     }
@@ -66,8 +79,14 @@ def out_shardings(mesh):
             NamedSharding(mesh, P('model')))     # subgradient (like w)
 
 
-def make_oracle_step(mesh, variant: str = 'base'):
-    """Sharded (loss, subgradient) evaluation — the paper's Algorithm 3.
+def make_oracle_body(mesh, variant: str = 'base'):
+    """Traced `(X, y, g, w, n_pairs) -> (loss, a)` — the paper's Algorithm 3
+    sharded over `mesh`, composable inside a larger jitted program (bmrm's
+    device `bundle_step` inlines it via `ShardedOracle.step_fn`).
+
+    `g` is the per-row group-id vector (row-sharded like y) or None; with
+    groups the counting phase applies the key-offset trick to the
+    all-gathered scores, so per-query LTR costs the same single tree pass.
 
     variant='base': the paper-faithful port — matvecs sharded, the counts
     computation left to the partitioner (it replicates the query work on
@@ -78,16 +97,13 @@ def make_oracle_step(mesh, variant: str = 'base'):
     tree levels. Identical outputs; O(devices) less query work per device.
     """
     rows = tuple(a for a in ('pod', 'data') if a in mesh.axis_names)
-    ndev = 1
-    for a in mesh.axis_names:
-        ndev *= mesh.shape[a]
     cns = None
     if variant == 'opt':
         def cns(x):
             return jax.lax.with_sharding_constraint(
                 x, NamedSharding(mesh, P(*((rows,) + (None,) * (x.ndim - 1)))))
 
-    def oracle(X, y, w, n_pairs):
+    def oracle(X, y, g, w, n_pairs):
         # p = X w : contraction over the column-sharded n axis -> all-reduce
         # over 'model'; result stays row-sharded.
         p = jnp.einsum('mn,n->m', X, w.astype(jnp.bfloat16),
@@ -99,15 +115,26 @@ def make_oracle_step(mesh, variant: str = 'base'):
             p, NamedSharding(mesh, P()))
         y_rep = jax.lax.with_sharding_constraint(
             y, NamedSharding(mesh, P()))
-        if cns is None:
-            c, d = _counts.counts(p_rep, y_rep)
+        if g is not None:
+            # Per-group counting = the same tree pass over offset keys
+            # (counts._group_offsets): cross-group pairs fall outside the
+            # margin/preference windows, within-group comparisons unchanged.
+            g_rep = jax.lax.with_sharding_constraint(
+                g, NamedSharding(mesh, P()))
+            pk, yk = _counts._group_offsets(p_rep, y_rep, g_rep)
         else:
-            c = _counts._half_counts(p_rep, y_rep, constrain=cns)
-            d = _counts._half_counts(-p_rep, -y_rep, constrain=cns)
+            pk, yk = p_rep, y_rep
+        if cns is None:
+            c, d = _counts.counts(pk, yk)
+        else:
+            c = _counts._half_counts(pk, yk, constrain=cns)
+            d = _counts._half_counts(-pk, -yk, constrain=cns)
         cd = (c - d).astype(f32)
         cd = jax.lax.with_sharding_constraint(
             cd, NamedSharding(mesh, P(rows)))
 
+        # Loss uses the ORIGINAL scores p: within-group offsets cancel in
+        # the hinge terms, exactly as in the single-host grouped oracle.
         loss = jnp.sum(cd * p_rep + c.astype(f32)) / n_pairs
         # a = X^T cd / N : contraction over row-sharded m -> collective over
         # 'data'/'pod'; result column-sharded like w.
@@ -116,6 +143,17 @@ def make_oracle_step(mesh, variant: str = 'base'):
         a = jax.lax.with_sharding_constraint(
             a, NamedSharding(mesh, P('model')))
         return loss, a
+
+    return oracle
+
+
+def make_oracle_step(mesh, variant: str = 'base'):
+    """Ungrouped 4-arg form of `make_oracle_body` (kept for the oracle-only
+    dry-run cells and existing callers)."""
+    body = make_oracle_body(mesh, variant=variant)
+
+    def oracle(X, y, w, n_pairs):
+        return body(X, y, None, w, n_pairs)
 
     return oracle
 

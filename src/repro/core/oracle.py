@@ -30,6 +30,7 @@ blocked pass and its `counts_auto` Pallas-kernel dispatch).
 from __future__ import annotations
 
 import functools
+import warnings
 
 import numpy as np
 
@@ -100,12 +101,16 @@ def _exact_pairs(y: np.ndarray, groups) -> int:
 
 
 def _validate_groups(groups, m: int) -> np.ndarray:
-    """Validate user-supplied group ids; returns them as an int32 vector.
+    """Validate user-supplied group ids; returns them compact-relabelled
+    onto [0, n_groups) as an int32 vector.
 
     Group ids feed the key-offset trick (counts._group_offsets), where a NaN
     poisons every offset key and a fractional id silently merges or splits
     queries — both produce wrong counts with no error downstream, so the
-    oracle layer rejects them here with actionable messages.
+    oracle layer rejects them here with actionable messages. The relabel
+    matters for the same reason: the offset-key magnitude scales with the
+    id VALUES, so hashed/sparse ids (~1e7) would push one f32 ulp of the
+    keys past the hinge margin; after it only the group COUNT matters.
     """
     g = np.asarray(groups)
     if g.ndim != 1:
@@ -129,11 +134,38 @@ def _validate_groups(groups, m: int) -> np.ndarray:
         if not np.all(g == np.floor(g)):
             raise ValueError('groups contains non-integer values; group '
                              'ids must be (castable to) integers')
-    ii = np.iinfo(np.int32)
-    if g.size and (g.min() < ii.min or g.max() > ii.max):
-        raise ValueError('group ids exceed the int32 range; relabel them '
+    gi = g.astype(np.int64)
+    if g.size and not np.array_equal(gi.astype(g.dtype), g):
+        raise ValueError('group ids overflow int64; relabel them first '
                          '(e.g. np.unique(groups, return_inverse=True))')
-    return g.astype(np.int32)
+    return np.unique(gi, return_inverse=True)[1].astype(np.int32)
+
+
+def _warn_group_key_scale(groups: np.ndarray, y: np.ndarray, tol: float,
+                          stacklevel: int = 4) -> None:
+    """Warn when the f32 key-offset quantization of grouped counting may
+    exceed `tol` margin units (hinge margin = 1).
+
+    The offset keys scale as n_groups * (score range + y range + margins);
+    the score range is unknown until training, so the y-based estimate is
+    a lower bound. `tol` is each oracle's own noise level: ~1e-3 for the
+    f32 fused oracles (the counts.py ~1e4-envelope note), ~1e-2 for the
+    bf16 sharded oracle.
+    """
+    if not groups.size:        # m = 0: leave the clean no-pairs error to
+        return                 # the n_pairs check downstream
+    n_groups = int(groups.max()) + 1
+    key_scale = n_groups * (float(y.max() - y.min()) + 3.5)
+    ulp = key_scale * 2.0 ** -23
+    if ulp > tol:
+        warnings.warn(
+            f'{n_groups} groups with y-range {float(y.max() - y.min()):.3g}'
+            ' push the f32 key-offset keys of grouped counting to a scale '
+            f'where one ulp (~{ulp:.1e} margin units) exceeds this '
+            f'oracle\'s ~{tol:g} tolerance — counts/subgradients will be '
+            'quietly inaccurate. Shrink the y range or split the fit into '
+            'fewer-query shards (counts._group_offsets, DESIGN.md §5).',
+            RuntimeWarning, stacklevel=stacklevel)
 
 
 # --------------------------------------------------------- feature engines
@@ -286,7 +318,10 @@ class _FusedOracle(RankOracle):
         if y.shape[0] != self.m:
             raise ValueError(f'X has {self.m} rows but y has {y.shape[0]}')
         if groups is not None:
-            groups = _validate_groups(groups, self.m)
+            groups = _validate_groups(groups, self.m)   # compact-relabels
+            # ~1e-3 tolerance: counts.py's ~1e4 key-scale envelope for the
+            # f32 oracles.
+            _warn_group_key_scale(groups, y, tol=1e-3, stacklevel=4)
         self.n_pairs = _exact_pairs(y, groups)
         if self.n_pairs == 0:
             raise ValueError('training data induces no preference pairs')
@@ -385,10 +420,18 @@ def _default_mesh() -> Mesh:
 
 
 class ShardedOracle(RankOracle):
-    """Pod-scale oracle: wraps `core.distributed.make_oracle_step` (2-D
+    """Pod-scale oracle: wraps `core.distributed.make_oracle_body` (2-D
     sharded bf16 X, all-gathered scores, query-sharded tree — DESIGN.md §5)
     behind the same interface, so `RankSVM(method='sharded')` and the
-    dry-run tooling exercise one code path.
+    dry-run tooling exercise one code path. Group ids are accepted like any
+    other oracle: they shard row-wise with y, and the counting phase folds
+    them in via the key-offset trick — per-query LTR at pod scale.
+
+    A first-class citizen of the device bundle driver: `step_fn` is the
+    traced mesh step (same contract as `_FusedOracle.step_fn`), and
+    `state_shardings` hands bmrm the `BundleState` annotations (replicated
+    QP state, plane buffer column-sharded over 'model') so the whole fused
+    `bundle_step` runs under the mesh without per-step resharding.
 
     Note the matvecs run in bf16 (the deliberate pod-scale trade); the
     counts see bf16-rounded scores, so parity with the f32 oracles is
@@ -397,47 +440,152 @@ class ShardedOracle(RankOracle):
 
     name = 'sharded'
     device_resident = True
+    supports_device_solver = True
+    prefer_device_solver = True
 
     def __init__(self, X, y, groups=None, mesh: Mesh | None = None,
                  variant: str = 'base'):
-        if groups is not None:
-            raise ValueError('ShardedOracle does not support groups yet; '
-                             'use GroupedOracle')
         y = np.asarray(y, np.float32)
-        if _is_csr_like(X) and hasattr(X, 'to_dense'):
-            X = X.to_dense()
-        elif _scipy_sparse is not None and _scipy_sparse.issparse(X):
-            X = X.toarray()
+        sparse_in = (_is_csr_like(X) and hasattr(X, 'to_dense')) or (
+            _scipy_sparse is not None and _scipy_sparse.issparse(X))
+        if sparse_in:
+            m_, n_ = map(int, X.shape)
+            itemsize = getattr(getattr(X, 'data', None), 'dtype',
+                               np.dtype(np.float64)).itemsize
+            warnings.warn(
+                f'ShardedOracle stores X dense: densifying the sparse '
+                f'{m_} x {n_} input materializes '
+                f'{m_ * n_ * itemsize / 2**30:.2f} GiB at its '
+                f'{itemsize}-byte dtype on host (plus a '
+                f'{m_ * n_ * 2 / 2**30:.2f} GiB bf16 device copy) — at '
+                'the 1M-row scales this oracle targets that is an OOM '
+                'trap. Densify/shard upstream, or keep sparse features '
+                'on the tree oracle (DESIGN.md §5).',
+                RuntimeWarning, stacklevel=3)
+            X = (X.to_dense() if hasattr(X, 'to_dense') else X.toarray())
         X = np.asarray(X)
         self.m, self.n = map(int, X.shape)
+        if y.shape[0] != self.m:
+            raise ValueError(f'X has {self.m} rows but y has {y.shape[0]}')
+        if groups is not None:
+            groups = _validate_groups(groups, self.m)   # compact-relabels
+            # ~1e-2 tolerance: the bf16 matvecs already round the scores.
+            _warn_group_key_scale(groups, y, tol=1e-2, stacklevel=3)
         self.n_pairs = _exact_pairs(y, groups)
         if self.n_pairs == 0:
             raise ValueError('training data induces no preference pairs')
         self._mesh = mesh if mesh is not None else _default_mesh()
+        rows = [a for a in ('pod', 'data') if a in self._mesh.axis_names]
+        rsize = int(np.prod([self._mesh.shape[a] for a in rows]))
+        msize = int(self._mesh.shape.get('model', 1))
+        if self.n % msize:
+            raise ValueError(
+                f"mesh 'model' axis of size {msize} does not divide the "
+                f'feature dim n={self.n}; pick a mesh whose model axis '
+                'divides n (or pad the features upstream)')
+        # Row padding to the mesh row multiple: padded rows are all-zero
+        # features in their OWN group with tied y, so they induce no pairs,
+        # zero counts, and zero loss/subgradient contribution — results are
+        # exactly those of the unpadded problem.
+        pad = (-self.m) % rsize
+        if pad:
+            X = np.concatenate([X, np.zeros((pad, self.n), X.dtype)])
+            y = np.concatenate([y, np.zeros(pad, np.float32)])
+            base = groups if groups is not None else np.zeros(self.m,
+                                                              np.int32)
+            pad_id = int(base.max()) + 1 if self.m else 0
+            groups = np.concatenate([base,
+                                     np.full(pad, pad_id, np.int32)])
         sh = _dist.arg_shardings(self._mesh)
-        self._fn = jax.jit(_dist.make_oracle_step(self._mesh,
-                                                  variant=variant))
+        self._body = _dist.make_oracle_body(self._mesh, variant=variant)
+        self._fn = jax.jit(self._body)
         self._X = jax.device_put(jnp.asarray(X, jnp.bfloat16), sh['X'])
         self._yd = jax.device_put(jnp.asarray(y, f32), sh['y'])
+        self._g = (None if groups is None
+                   else jax.device_put(jnp.asarray(groups), sh['g']))
         self._np = jax.device_put(jnp.asarray(float(self.n_pairs), f32),
                                   sh['n_pairs'])
         self._wsh = sh['w']
 
     def loss_and_subgrad(self, w):
         wd = jax.device_put(jnp.asarray(np.asarray(w), f32), self._wsh)
-        return self._fn(self._X, self._yd, wd, self._np)
+        return self._fn(self._X, self._yd, self._g, wd, self._np)
+
+    def step_fn(self):
+        """Traced `w -> (loss, a)` over the mesh-sharded arrays, for bmrm's
+        device driver (the sharded analogue of `_FusedOracle.step_fn`)."""
+        X, y, g, n_pairs = self._X, self._yd, self._g, self._np
+        body = self._body
+
+        def fn(w):
+            return body(X, y, g, w, n_pairs)
+
+        return fn
+
+    def state_shardings(self):
+        """BundleState annotations for bmrm's device driver on this mesh."""
+        from .bmrm import bundle_state_shardings
+        return bundle_state_shardings(self._mesh)
 
 
-def sharded_dryrun_cell(mesh: Mesh, shape=None, variant: str = 'base'):
+def sharded_dryrun_cell(mesh: Mesh, shape=None, variant: str = 'base',
+                        kind: str = 'bundle', max_planes: int = 64,
+                        qp_iters: int = 128, grouped: bool = True):
     """(jitted fn, abstract args) for compile-only dry runs of the sharded
-    oracle — the launch.dryrun entry point into this layer."""
+    path — the launch.dryrun entry point into this layer.
+
+    kind='bundle' (default) lowers the FULL device-driver iteration: one
+    `core.bmrm._bundle_step` with the mesh oracle inlined — fused oracle
+    step, plane insert into the column-sharded buffer, incremental Gram,
+    and the on-device masked FISTA QP — under `bundle_state_shardings`.
+    By default the GROUPED program is lowered (`grouped=False` for the
+    ungrouped variant): per-query LTR is the production pod path, and the
+    grouped program is a strict superset (all-gathered int32 g + the
+    key-offset math), so it is the one compile-only verification must
+    cover. kind='oracle' lowers just the ungrouped (loss, subgradient)
+    evaluation (the pre-PR-3 cell, kept for A/B roofline comparisons).
+    """
+    from .bmrm import (_bundle_step, abstract_bundle_state,
+                       bundle_state_shardings)
+    from jax.sharding import NamedSharding, PartitionSpec
     shape = shape if shape is not None else _dist.REUTERS_1M
     specs = _dist.input_specs(None, shape)
     sh = _dist.arg_shardings(mesh)
-    fn = jax.jit(_dist.make_oracle_step(mesh, variant=variant),
-                 in_shardings=(sh['X'], sh['y'], sh['w'], sh['n_pairs']),
-                 out_shardings=_dist.out_shardings(mesh))
-    return fn, (specs['X'], specs['y'], specs['w'], specs['n_pairs'])
+    if kind == 'oracle':
+        fn = jax.jit(_dist.make_oracle_step(mesh, variant=variant),
+                     in_shardings=(sh['X'], sh['y'], sh['w'], sh['n_pairs']),
+                     out_shardings=_dist.out_shardings(mesh))
+        return fn, (specs['X'], specs['y'], specs['w'], specs['n_pairs'])
+    if kind != 'bundle':
+        raise ValueError(f'unknown dry-run kind {kind!r}')
+    body = _dist.make_oracle_body(mesh, variant=variant)
+
+    ssh = bundle_state_shardings(mesh)
+    rep = NamedSharding(mesh, PartitionSpec())
+    scalar = jax.ShapeDtypeStruct((), f32)
+    state_spec = abstract_bundle_state(shape.n, max_planes)
+    if grouped:
+        def step(state, X, y, g, n_pairs, lam, eps):
+            return _bundle_step(state, lambda w: body(X, y, g, w, n_pairs),
+                                lam, eps, qp_iters)
+
+        fn = jax.jit(step,
+                     in_shardings=(ssh, sh['X'], sh['y'], sh['g'],
+                                   sh['n_pairs'], rep, rep),
+                     out_shardings=(ssh, rep))
+        return fn, (state_spec, specs['X'], specs['y'], specs['g'],
+                    specs['n_pairs'], scalar, scalar)
+
+    def step(state, X, y, n_pairs, lam, eps):
+        return _bundle_step(state, lambda w: body(X, y, None, w, n_pairs),
+                            lam, eps, qp_iters)
+
+    fn = jax.jit(step,
+                 in_shardings=(ssh, sh['X'], sh['y'], sh['n_pairs'],
+                               rep, rep),
+                 out_shardings=(ssh, rep))
+    return fn, (state_spec, specs['X'], specs['y'], specs['n_pairs'],
+                scalar, scalar)
 
 
 # ---------------------------------------------------------------- factory
@@ -457,7 +605,8 @@ def make_oracle(X, y, groups=None, method: str = 'tree', *,
       'pairs'   — blocked O(m^2) pairwise counts (PairRSVM baseline)
       'auto'    — counts_auto dispatch: Pallas pairwise kernel for small m
                   on TPU, tree otherwise
-      'sharded' — pod-scale mesh oracle (core.distributed); dense bf16 X
+      'sharded' — pod-scale mesh oracle (core.distributed); dense bf16 X;
+                  groups supported via the same key-offset trick
     """
     if method == 'sharded':
         return ShardedOracle(X, y, groups=groups, mesh=mesh, variant=variant)

@@ -28,6 +28,19 @@ import jax.numpy as jnp
 from . import counts as _counts
 
 
+def _compact_ids(g: jnp.ndarray) -> jnp.ndarray:
+    """Relabel group ids onto [0, n_groups), traceably (static size).
+
+    The key-offset tricks downstream (counts._group_offsets and
+    num_pairs_grouped) scale their f32 offset keys with the id VALUES, so
+    hashed/sparse ids (e.g. ~1e7) would push one ulp of the keys past the
+    hinge margin and quietly corrupt every grouped count. After this only
+    the number of distinct groups matters.
+    """
+    return jnp.unique(g, return_inverse=True,
+                      size=g.shape[0])[1].reshape(g.shape).astype(jnp.int32)
+
+
 def _loss_from_counts(p, c, d, n):
     cf = c.astype(jnp.float32)
     df = d.astype(jnp.float32)
@@ -41,6 +54,7 @@ def _forward(scores, utilities, group_ids):
         c, d = _counts.counts(p, utilities)
         n = jnp.maximum(_counts.num_pairs(utilities), 1.0)
     else:
+        group_ids = _compact_ids(group_ids)
         c, d = _counts.counts_grouped(p, utilities, group_ids)
         n = jnp.maximum(_counts.num_pairs_grouped(utilities, group_ids), 1.0)
     return _loss_from_counts(p, c, d, n), (c, d, n)
@@ -102,6 +116,7 @@ def ranking_error(scores, utilities, group_ids=None) -> jnp.ndarray:
     p = scores.astype(jnp.float32)
     y = utilities.astype(jnp.float32)
     if group_ids is not None:
+        group_ids = _compact_ids(group_ids)
         p, y = _counts._group_offsets(p, y, group_ids)
         n = jnp.maximum(_counts.num_pairs_grouped(utilities, group_ids), 1.0)
     else:

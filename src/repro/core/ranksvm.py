@@ -7,7 +7,10 @@
   'pairs'   PairRSVM: blocked O(m^2) pairwise counts (the paper's baseline)
   'auto'    counts_auto dispatch: Pallas pairwise kernel for small ranking
             problems on TPU, tree otherwise
-  'sharded' pod-scale mesh oracle (core.distributed) on dense bf16 features
+  'sharded' pod-scale mesh oracle (core.distributed) on dense bf16
+            features; accepts `groups=` like every other method, and under
+            solver='auto' trains on the device bundle driver with the
+            bundle state sharded over the mesh (per-query LTR at pod scale)
 
 — and hands it to `core.bmrm.bmrm`. Orthogonally, `solver=` picks the BMRM
 driver (core.bmrm):
@@ -90,7 +93,8 @@ class RankSVM:
       max_iter: BMRM iteration cap.
       max_planes: cutting-plane cap; for the device driver this is the
         static bundle-buffer capacity (default core.bmrm.DEFAULT_MAX_PLANES).
-      sync_every: device driver: fused steps per host sync.
+      sync_every: device driver: fused steps per host sync; 'auto' retunes
+        the chunk length from the observed gap-decay rate (core.bmrm).
       qp_iters: device driver: fixed FISTA iterations of the on-device
         bundle dual solve.
       pair_block: VMEM/cache block for the O(m^2) pairwise pass.
@@ -102,7 +106,7 @@ class RankSVM:
                  method: str = 'tree', max_iter: int = 1000,
                  pair_block: int = 2048, mesh=None, verbose: bool = False,
                  solver: str = 'auto', max_planes: int | None = None,
-                 sync_every: int = 8, qp_iters: int = 128):
+                 sync_every: 'int | str' = 8, qp_iters: int = 128):
         if method not in METHODS:
             raise ValueError(f'unknown method {method!r}; '
                              f'expected one of {METHODS}')
@@ -115,7 +119,11 @@ class RankSVM:
         self.solver = solver
         self.max_iter = int(max_iter)
         self.max_planes = max_planes
-        self.sync_every = int(sync_every)
+        if isinstance(sync_every, str) and sync_every != 'auto':
+            raise ValueError(f"unknown sync_every {sync_every!r}; expected "
+                             "an int or 'auto'")
+        self.sync_every = (sync_every if sync_every == 'auto'
+                           else int(sync_every))
         self.qp_iters = int(qp_iters)
         self.pair_block = int(pair_block)
         self.mesh = mesh

@@ -162,9 +162,13 @@ def build_cell(arch: str, shape_name: str, mesh, variant: str = 'base'):
     cfg = registry.get(arch)
 
     if getattr(cfg, 'family', None) == 'ranksvm':
-        # The sharded BMRM oracle cell goes through the oracle layer
+        # The sharded BMRM cell goes through the oracle layer
         # (core.oracle.sharded_dryrun_cell), the same entry point
-        # RankSVM(method='sharded') trains through.
+        # RankSVM(method='sharded') trains through. Since PR 3 it lowers
+        # the FULL device-driver bundle_step (oracle + plane insert +
+        # on-device QP) over a sharding-annotated BundleState, not just
+        # the oracle evaluation — in its GROUPED form, the per-query LTR
+        # program production pods actually run.
         from repro.core import distributed as D
         from repro.core import oracle as O
         shape = D.REUTERS_1M

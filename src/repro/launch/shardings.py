@@ -71,6 +71,13 @@ def metric_shardings(rules: ShardingRules):
     return {'loss': _repl(mesh), 'gnorm': _repl(mesh), 'lr': _repl(mesh)}
 
 
+# The ranksvm-linear cells do NOT route through this module: their arg and
+# bundle-state sharding tables live with the math that needs them
+# (core.distributed.arg_shardings, core.bmrm.bundle_state_shardings) and
+# core.oracle.sharded_dryrun_cell applies both — see launch/dryrun.py's
+# ranksvm branch and DESIGN.md §5.
+
+
 # NOTE: batch-1 long-context SP falls out of ShardingRules.spec's
 # divisibility + axis-dedupe fallback: cache_batch can't take 'data' when
 # batch == 1, so cache_seq (listed next in CACHE_AXES) claims it instead.

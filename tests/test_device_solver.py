@@ -162,6 +162,57 @@ def test_init_bundle_state_shapes():
     assert int(st.n_active) == 0 and not bool(st.done)
 
 
+def test_sync_every_auto_converges_no_slower_than_static():
+    """sync_every='auto' sizes chunks from the observed gap decay; its
+    overshoot is bounded by the final chunk length, so total iterations
+    to the same eps must not exceed the static default's by more than
+    one maximal chunk (ROADMAP sync autotuning). On this problem the
+    counts are equal; the slack keeps the test honest about what the
+    tuner guarantees (overshoot ≤ chunk−1, not a per-trajectory win)."""
+    from repro.core.bmrm import AUTO_SYNC_MAX
+    d = cadata_like(m=300, m_test=10, seed=21)
+    oracle = O.make_oracle(d.X, d.y, method='tree')
+    static = bmrm(oracle, lam=1e-2, eps=1e-3, solver='device', max_iter=400)
+    auto = bmrm(oracle, lam=1e-2, eps=1e-3, solver='device', max_iter=400,
+                sync_every='auto')
+    assert auto.stats.converged and static.stats.converged
+    assert (auto.stats.iterations
+            <= static.stats.iterations + AUTO_SYNC_MAX - 1)
+    assert auto.stats.obj_best == pytest.approx(static.stats.obj_best,
+                                                rel=1e-3)
+
+
+def test_next_sync_every_recovers_from_one_step_chunks():
+    """A 1-step chunk yields a single gap sample; the tuner must be able
+    to grow back out of cur=1 instead of paying a host round-trip per
+    iteration forever (code-review finding)."""
+    from repro.core.bmrm import AUTO_SYNC_MAX, _next_sync_every
+    assert _next_sync_every(np.asarray([0.5]), eps=1e-3, cur=1) == 2
+    assert _next_sync_every(np.asarray([]), eps=1e-3, cur=4) == 8
+    # converged-looking gap: keep the (small) current chunk
+    assert _next_sync_every(np.asarray([5e-4]), eps=1e-3, cur=1) == 1
+    # growth stays capped
+    assert _next_sync_every(np.asarray([0.5]), eps=1e-3,
+                            cur=AUTO_SYNC_MAX) == AUTO_SYNC_MAX
+
+
+def test_sync_every_rejects_unknown_string():
+    d = cadata_like(m=60, m_test=10, seed=22)
+    oracle = O.make_oracle(d.X, d.y, method='tree')
+    with pytest.raises(ValueError, match='sync_every'):
+        bmrm(oracle, solver='device', sync_every='adaptive')
+    with pytest.raises(ValueError, match='sync_every'):
+        RankSVM(sync_every='adaptive')
+
+
+def test_ranksvm_accepts_sync_every_auto():
+    d = cadata_like(m=150, m_test=10, seed=23)
+    svm = RankSVM(lam=1e-2, eps=1e-2, method='tree', solver='device',
+                  sync_every='auto').fit(d.X, d.y)
+    assert svm.report_.converged
+    assert svm.report_.solver == 'device'
+
+
 def test_device_iterations_run_in_sync_chunks():
     d = cadata_like(m=200, m_test=10, seed=10)
     oracle = O.make_oracle(d.X, d.y, method='tree')

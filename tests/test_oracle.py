@@ -135,10 +135,15 @@ def test_make_oracle_rejects_unknown_method():
         RankSVM(method='rbtree')
 
 
-def test_sharded_rejects_groups():
+def test_sharded_accepts_groups():
+    """PR 3: the sharded oracle is group-aware (key-offset trick on the
+    all-gathered scores); deeper parity lives in test_sharded_solver.py."""
     X, y, _ = _dense_case(m=20, n=3, seed=12)
-    with pytest.raises(ValueError):
-        O.make_oracle(X, y, groups=np.zeros(20, np.int32), method='sharded')
+    g = np.repeat([0, 1], 10).astype(np.int32)
+    oracle = O.make_oracle(X, y, groups=g, method='sharded')
+    assert isinstance(oracle, O.ShardedOracle)
+    assert oracle.n_pairs == O._exact_pairs(np.asarray(y, np.float32), g)
+    assert oracle.supports_device_solver
 
 
 # ------------------------------------------------------ group validation
@@ -168,12 +173,21 @@ def test_groups_with_inf_rejected():
         O.make_oracle(X, y, groups=g, method='tree')
 
 
-def test_groups_beyond_int32_rejected():
+def test_groups_beyond_int32_relabelled():
+    """64-bit hashed ids are fine: the validator compact-relabels them, so
+    only the group COUNT reaches the counting keys (no int32 wrap)."""
     X, y, _ = _dense_case(m=20, n=3, seed=13)
     g = np.zeros(20, np.int64)
-    g[-1] = 2 ** 40                     # would silently wrap in int32
-    with pytest.raises(ValueError, match='int32'):
-        O.make_oracle(X, y, groups=g, method='tree')
+    g[-1] = 2 ** 40
+    w = np.random.default_rng(13).normal(size=3)
+    big = O.make_oracle(X, y, groups=g, method='tree')
+    small = O.make_oracle(X, y, groups=(g > 0).astype(np.int32),
+                          method='tree')
+    assert big.n_pairs == small.n_pairs
+    lb, ab = big.loss_and_subgrad(w)
+    ls, as_ = small.loss_and_subgrad(w)
+    assert float(lb) == float(ls)
+    np.testing.assert_array_equal(np.asarray(ab), np.asarray(as_))
 
 
 def test_groups_with_fractional_ids_rejected():

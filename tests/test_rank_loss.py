@@ -127,3 +127,37 @@ def test_ranking_error_perfect_and_inverted():
     y = np.arange(10).astype(np.float32)
     assert float(RL.ranking_error(jnp.asarray(y), jnp.asarray(y))) == 0.0
     assert float(RL.ranking_error(jnp.asarray(-y), jnp.asarray(y))) == 1.0
+
+
+def test_grouped_entry_points_invariant_to_id_values():
+    """Hashed/sparse group ids must behave exactly like compact ids: the
+    f32 key-offset magnitude may only depend on the NUMBER of groups
+    (regression for the metric-path precision bug found in PR 3)."""
+    rng = np.random.default_rng(11)
+    m = 96
+    p = rng.uniform(-5, 5, size=m).astype(np.float32)
+    y = rng.integers(0, 4, size=m).astype(np.float32)
+    g = np.sort(rng.integers(0, 8, size=m)).astype(np.int32)
+    hashed = (g.astype(np.int64) * 104729 + 10**7).astype(np.int32)
+    for fn in (RL.pairwise_hinge_loss, RL.ranking_error):
+        a = fn(jnp.asarray(p), jnp.asarray(y), jnp.asarray(g))
+        b = fn(jnp.asarray(p), jnp.asarray(y), jnp.asarray(hashed))
+        assert float(a) == float(b)
+    la, sa = RL.loss_and_subgradient(jnp.asarray(p), jnp.asarray(y),
+                                     jnp.asarray(g))
+    lb, sb = RL.loss_and_subgradient(jnp.asarray(p), jnp.asarray(y),
+                                     jnp.asarray(hashed))
+    assert float(la) == float(lb)
+    np.testing.assert_array_equal(np.asarray(sa), np.asarray(sb))
+
+
+def test_grouped_loss_still_traceable_with_compact_relabel():
+    rng = np.random.default_rng(12)
+    p = rng.uniform(-5, 5, size=32).astype(np.float32)
+    y = rng.integers(0, 3, size=32).astype(np.float32)
+    g = np.repeat(np.arange(4), 8).astype(np.int32)
+    jitted = jax.jit(RL.pairwise_hinge_loss)
+    assert float(jitted(jnp.asarray(p), jnp.asarray(y),
+                        jnp.asarray(g))) == pytest.approx(
+        float(RL.pairwise_hinge_loss(jnp.asarray(p), jnp.asarray(y),
+                                     jnp.asarray(g))))

@@ -13,7 +13,8 @@ import time
 
 from . import (fig1_iteration_cost, fig2_runtimes, fig3_memory,
                fig4_test_error, fig5_crossover, fig6_rlevels,
-               roofline_table, scaling_loglog, solver_overhead)
+               roofline_table, scaling_loglog, solver_overhead,
+               streaming_oracle)
 
 ALL = {
     'fig1': fig1_iteration_cost,
@@ -25,6 +26,7 @@ ALL = {
     'scaling': scaling_loglog,
     'roofline': roofline_table,
     'solver': solver_overhead,
+    'streaming': streaming_oracle,
 }
 
 

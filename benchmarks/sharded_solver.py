@@ -12,6 +12,12 @@ This measures that delta on the forced-8-virtual-device CPU mesh (the same
 mesh the `test-multidevice` CI job uses): per-iteration wall time for both
 drivers on grouped (per-query LTR) problems, plus objective parity.
 
+It also measures the sharded-path lambda sweep (the remaining ROADMAP
+bench item): a warm `path()`-style sweep — the SAME sharded `BundleState`
+threaded across lambda values through the device driver, planes kept,
+scalars reset — against cold per-lambda fits, total iterations and wall
+time over the sweep (`path_*` columns).
+
     PYTHONPATH=src python -m benchmarks.sharded_solver [--full]
 """
 
@@ -33,6 +39,7 @@ from repro.launch.mesh import make_mesh
 from .common import Reporter, timeit
 
 LAM, EPS, MAX_ITER = 1e-2, 1e-2, 200
+PATH_LAMS = (1e-1, 1e-2, 1e-3)
 
 
 def _make_case(m, n, n_groups, seed=0):
@@ -55,6 +62,26 @@ def _driver_stats(oracle, solver):
     return secs / it, it, res.stats.obj_best, res.stats.converged
 
 
+def _path_stats(oracle, warm: bool):
+    """One lambda sweep on the device driver: warm threads the bundle
+    state (and iterate) across lambda like `RankSVM.path`; cold refits
+    each lambda from scratch. Returns (total seconds, total iterations,
+    per-lambda objectives)."""
+    import time
+    state, w_prev = None, None
+    objs = []
+    iters = 0
+    t0 = time.perf_counter()
+    for lam in PATH_LAMS:
+        res = bmrm(oracle, lam=lam, eps=EPS, solver='device',
+                   max_iter=MAX_ITER, state=state, w0=w_prev)
+        if warm:
+            state, w_prev = res.state, res.w
+        iters += res.stats.iterations
+        objs.append(res.stats.obj_best)
+    return time.perf_counter() - t0, iters, objs
+
+
 def main(full: bool = False):
     import jax
     ndev = jax.device_count()
@@ -63,7 +90,8 @@ def main(full: bool = False):
                    ['m', 'n', 'groups', 'devices', 'host_it',
                     'host_ms_per_it', 'dev_it', 'dev_ms_per_it',
                     'host_over_dev_per_it', 'host_obj', 'dev_obj',
-                    'obj_rel_diff'])
+                    'obj_rel_diff', 'path_cold_it', 'path_warm_it',
+                    'path_cold_s', 'path_warm_s', 'path_cold_over_warm'])
     sizes = [(512, 64, 32), (2048, 128, 128), (8192, 128, 512)]
     if full:
         sizes.append((32768, 256, 2048))
@@ -72,10 +100,17 @@ def main(full: bool = False):
         oracle = ShardedOracle(X, y, groups=g, mesh=mesh)
         h_per, h_it, h_obj, _ = _driver_stats(oracle, 'host')
         d_per, d_it, d_obj, _ = _driver_stats(oracle, 'device')
+        # lambda sweep: the _driver_stats fits above already compiled the
+        # device chunk for this oracle/config, so both sweeps run warm-
+        # cache; 'warm' vs 'cold' differ only in bundle-state reuse.
+        c_s, c_it, _ = _path_stats(oracle, warm=False)
+        w_s, w_it, _ = _path_stats(oracle, warm=True)
         rep.row(m, n, n_groups, ndev, h_it, round(1e3 * h_per, 3), d_it,
                 round(1e3 * d_per, 3), round(h_per / d_per, 2),
                 round(h_obj, 6), round(d_obj, 6),
-                format(abs(d_obj - h_obj) / max(abs(h_obj), 1e-12), '.2e'))
+                format(abs(d_obj - h_obj) / max(abs(h_obj), 1e-12), '.2e'),
+                c_it, w_it, round(c_s, 3), round(w_s, 3),
+                round(c_s / w_s, 2))
     return rep
 
 

@@ -3,10 +3,10 @@
 #  - ref:       O(m^2) oracles
 #  - rank_loss: differentiable pairwise hinge with Lemma-2 custom VJP
 #  - qp/bmrm:   bundle-method optimizer (Algorithm 1)
-#  - oracle:    the BMRM oracle layer (tree/pairs/auto/grouped/sharded)
+#  - oracle:    the BMRM oracle layer (tree/pairs/auto/grouped/sharded/stream)
 #  - ranksvm:   TreeRSVM / PairRSVM estimators (thin oracle selectors)
 from . import counts, joachims, oracle, ref, rank_loss, qp, bmrm, ranksvm  # noqa: F401
 from .oracle import (GroupedOracle, PairwiseOracle, RankOracle,  # noqa: F401
-                     ShardedOracle, TreeOracle, make_oracle)
+                     ShardedOracle, StreamingOracle, TreeOracle, make_oracle)
 from .rank_loss import pairwise_hinge_loss, ranking_error  # noqa: F401
 from .ranksvm import RankSVM  # noqa: F401

@@ -24,10 +24,14 @@ single entry point `bmrm(..., solver=)`:
   oracle calls exactly one host<->device round-trip happens, instead of the
   host driver's several-per-iteration. `sync_every='auto'` retunes the
   chunk length between chunks from the observed gap-decay rate. Requires
-  an oracle exposing a traced `step_fn` (`core.oracle._FusedOracle` or the
-  mesh `ShardedOracle` — the latter also annotates the `BundleState` with
+  an oracle exposing a traced `step_fn` (`core.oracle._FusedOracle`, the
+  mesh `ShardedOracle` — which also annotates the `BundleState` with
   shardings via `bundle_state_shardings`, keeping the plane buffer
-  column-sharded over 'model' across chunks). All bundle state is f32; the
+  column-sharded over 'model' across chunks — or the out-of-core
+  `StreamingOracle`, whose step_fn pulls feature row blocks through
+  `jax.pure_callback` inside the traced scan: the chunking amortizes the
+  driver's dispatch the same way, and only O(block·n) of features is ever
+  device-resident). All bundle state is f32; the
   gap uses the DUAL value D(alpha) (not the primal J_t(w_t)), so a
   not-fully-converged inner QP can only over-estimate the gap — never a
   premature convergence claim.

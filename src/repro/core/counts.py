@@ -219,6 +219,33 @@ def counts_grouped_fused(p: jnp.ndarray, y: jnp.ndarray, g: jnp.ndarray):
     return counts_fused(pg, yg)
 
 
+def counts_dispatch(p, y, g, engine: str = 'tree', block: int = 2048):
+    """Trace-time dispatch over counting engines — THE counting core every
+    oracle shares (fused `_FusedOracle` and chunked `StreamingOracle`
+    alike; previously forked inside the oracle layer).
+
+    g is None for ungrouped counting; grouped counting applies the
+    key-offset trick (`_group_offsets`) before the chosen engine runs.
+    engine: 'tree' (merge-sort tree, the paper), 'blocked' (O(m^2)
+    pairwise, O(m*block) memory), 'auto' (`kernels.pairwise_rank
+    .counts_auto`: Pallas kernel for small m on TPU, tree otherwise).
+    """
+    if engine == 'tree':
+        if g is None:
+            return counts_fused(p, y)
+        return counts_grouped_fused(p, y, g)
+    if g is not None:
+        p, y = _group_offsets(p, y, g)
+    if engine == 'auto':
+        # late import + attribute lookup so the kernel-vs-tree switch stays
+        # patchable (tests) and the pallas import stays off the core path
+        from repro.kernels.pairwise_rank import ops as _pr_ops
+        return _pr_ops.counts_auto(p, y)
+    if engine != 'blocked':
+        raise ValueError(f'unknown counting engine {engine!r}')
+    return counts_blocked_host(p, y, block=block)
+
+
 @jax.jit
 def num_pairs(y: jnp.ndarray) -> jnp.ndarray:
     """N = |{(i, j) : y_i < y_j}| in O(m log m), returned as float32.

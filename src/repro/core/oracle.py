@@ -1,8 +1,9 @@
 """The BMRM oracle layer: one device-resident (loss, subgradient) abstraction.
 
 Every RankSVM training path — the paper's merge-sort-tree sweep, the O(m^2)
-pairwise baseline, the Pallas kernel fast path, per-query LTR grouping, and
-the pod-scale sharded oracle — is a `RankOracle`: an object that evaluates
+pairwise baseline, the Pallas kernel fast path, per-query LTR grouping, the
+pod-scale sharded oracle, and the out-of-core streaming oracle over row-block
+feature sources — is a `RankOracle`: an object that evaluates
 
     loss_and_subgrad(w) -> (R_emp(w), a)      a = X^T (c - d) / N   (Lemma 2)
 
@@ -45,6 +46,8 @@ from jax.sharding import Mesh
 
 from . import counts as _counts
 from . import distributed as _dist
+from ..data import rowblocks as _rowblocks
+from ..data.rowblocks import _validate_block_rows as _validate_block
 
 f32 = jnp.float32
 
@@ -244,21 +247,25 @@ def _features(X, csr_rmatvec: str = 'auto'):
 # ----------------------------------------------------- fused device oracles
 
 
-def _count_dispatch(p, y, g, engine: str, block: int):
-    """Trace-time dispatch over counting engines. g is None for ungrouped;
-    grouped counting applies the key-offset trick first."""
-    if engine == 'tree':
-        if g is None:
-            return _counts.counts_fused(p, y)
-        return _counts.counts_grouped_fused(p, y, g)
-    if g is not None:
-        p, y = _counts._group_offsets(p, y, g)
-    if engine == 'auto':
-        # late import + attribute lookup so the kernel-vs-tree switch stays
-        # patchable (tests) and the pallas import stays off the core path
-        from repro.kernels.pairwise_rank import ops as _pr_ops
-        return _pr_ops.counts_auto(p, y)
-    return _counts.counts_blocked_host(p, y, block=block)
+# Engine dispatch lives with the counting engines now — counts.counts_
+# dispatch — so fused and streaming oracles share ONE counting core.
+
+
+def _loss_and_coeffs(p, y, g, inv_n, *, engine: str = 'tree',
+                     block: int = 0):
+    """The shared counting core: scores -> (R_emp, pair-count coefficients).
+
+    Every oracle — fused (`_fused_step_impl`) and streaming
+    (`StreamingOracle`, which arrives here with a chunk-accumulated score
+    vector) — reduces to this O(m)-resident computation: one counting pass
+    (engine-dispatched; grouped via the key-offset trick) followed by the
+    Lemma 1/2 loss formula. Returns (loss, c - d as f32); the subgradient
+    is X^T ((c - d) / N), finished by whichever matvec the caller owns.
+    """
+    c, d = _counts.counts_dispatch(p, y, g, engine=engine, block=block)
+    cd = (c - d).astype(f32)
+    loss = jnp.sum(cd * p + c.astype(f32)) * inv_n
+    return loss, cd
 
 
 def _fused_step_impl(w, arrays, y, g, inv_n, *, engine: str, block: int,
@@ -281,9 +288,7 @@ def _fused_step_impl(w, arrays, y, g, inv_n, *, engine: str, block: int,
         p = jax.ops.segment_sum(arrays['data'] * w[arrays['idx']],
                                 arrays['rows'], num_segments=m,
                                 indices_are_sorted=True)
-    c, d = _count_dispatch(p, y, g, engine, block)
-    cd = (c - d).astype(f32)
-    loss = jnp.sum(cd * p + c.astype(f32)) * inv_n
+    loss, cd = _loss_and_coeffs(p, y, g, inv_n, engine=engine, block=block)
     if not device_rmatvec:
         return loss, cd                      # host finishes the rmatvec
     v = cd * inv_n
@@ -383,10 +388,11 @@ class PairwiseOracle(_FusedOracle):
                  dispatch: str = 'blocked', csr_rmatvec: str = 'auto'):
         if dispatch not in ('blocked', 'auto'):
             raise ValueError(f'unknown dispatch {dispatch!r}')
+        block = _validate_block(block, 'PairwiseOracle block')
         self._engine = 'blocked' if dispatch == 'blocked' else 'auto'
         self.name = 'pairs' if dispatch == 'blocked' else 'auto'
         super().__init__(X, y, groups=groups, csr_rmatvec=csr_rmatvec)
-        self._block = min(int(block), self.m) if dispatch == 'blocked' else 0
+        self._block = min(block, self.m) if dispatch == 'blocked' else 0
 
 
 class GroupedOracle(_FusedOracle):
@@ -402,11 +408,197 @@ class GroupedOracle(_FusedOracle):
             raise ValueError('GroupedOracle requires group ids')
         if inner not in ('tree', 'pairs', 'auto'):
             raise ValueError(f'unknown inner oracle {inner!r}')
+        block = _validate_block(block, 'GroupedOracle block')
         self._engine = {'tree': 'tree', 'pairs': 'blocked',
                         'auto': 'auto'}[inner]
         self.name = f'grouped/{inner}'
         super().__init__(X, y, groups=groups, csr_rmatvec=csr_rmatvec)
-        self._block = min(int(block), self.m) if inner == 'pairs' else 0
+        self._block = min(block, self.m) if inner == 'pairs' else 0
+
+
+# ------------------------------------------------------- streaming oracle
+
+
+# Jitted entry of the shared counting core for the streaming host path:
+# the full score vector arrives chunk-accumulated from host, one O(m)
+# device computation produces loss + coefficients.
+_stream_counts = jax.jit(functools.partial(_loss_and_coeffs, engine='tree',
+                                           block=0))
+
+DEFAULT_STREAM_BLOCK = 8192
+
+
+def _fetch_padded(src, B: int, m: int, n: int, i) -> np.ndarray:
+    """Block i of `src` as a dense f32 (B, n) slab, zero-row padded at the
+    ragged tail (pad rows score 0 and receive v = 0, so they never
+    contribute; the score slice drops them before counting). Module-level
+    on purpose: `StreamingOracle.step_fn` closes over (src, B, m, n)
+    rather than a bound method, so the bmrm chunk cache's weak keying of
+    the oracle keeps working (a captured bound method would pin the
+    oracle alive through its own cache entry)."""
+    i = int(i)
+    lo = i * B
+    hi = min(lo + B, m)
+    blk = np.asarray(src.block(lo, hi), np.float32)
+    if hi - lo < B:
+        blk = np.concatenate([blk, np.zeros((B - (hi - lo), n),
+                                            np.float32)])
+    return blk
+
+
+def _auto_stream_block(m: int, row_bytes: int, memory_budget) -> int:
+    """Rows per block from a GiB budget: reserve the O(m) per-example
+    vectors (~6 f32 scalars each: p, y, c, d, c-d, v), spend at most half
+    the remainder on the one resident block — the other half stays
+    headroom for the counting pass's O(m log m) temporaries. `row_bytes`
+    is the source's layout-native per-row cost (dense f32 slab, or
+    O(nnz_row) for CSR — `RowBlockSource.row_bytes`)."""
+    if memory_budget is None:
+        return max(1, min(DEFAULT_STREAM_BLOCK, max(m, 1)))
+    budget = float(memory_budget) * 2**30
+    overhead = 6 * 4 * m
+    if budget <= overhead:
+        warnings.warn(
+            f'memory_budget={memory_budget:g} GiB cannot even hold the '
+            f'mandatory O(m) score/coefficient vectors '
+            f'(~{overhead / 2**30:.3g} GiB at m={m}); streaming will run '
+            'with 1-row blocks, which is almost certainly not what you '
+            'want — raise the budget or pass stream_block explicitly.',
+            RuntimeWarning, stacklevel=3)
+        return 1
+    b = int((budget - overhead) * 0.5 // max(row_bytes, 1))
+    return max(1, min(b, max(m, 1)))
+
+
+class StreamingOracle(RankOracle):
+    """Out-of-core oracle: two chunked passes over a `RowBlockSource`.
+
+    The paper's subgradient only needs O(m) scalars resident — the score
+    vector and the pair-count coefficients — so features never have to be.
+    Each oracle call is:
+
+      pass 1  σ = X w,   accumulated block-wise (one (block, n) slab live)
+      counts  ONE global O(m log^2 m) tree / grouped pass on the full
+              score vector (`_loss_and_coeffs`, the same counting core the
+              fused oracles use)
+      pass 2  a = Σ_blocks X_blockᵀ v_block,  v = (c - d) / N
+
+    Peak memory is O(block·n + m) regardless of m — features can live in
+    RAM, in CSR, or in an `np.memmap` on disk (`data.rowblocks`), lifting
+    the fused oracles' device-memory ceiling on m.
+
+    Two evaluation surfaces, same math:
+      * `loss_and_subgrad` — host-chunk passes (float64 numpy per-block
+        matvecs, layout-native for CSR), counts on device.
+      * `step_fn` — the device-driver contract: the SAME two passes as
+        `lax.scan` loops whose bodies pull one padded slab from the host
+        source via `jax.pure_callback`, so `bmrm(solver='device')` and
+        `RankSVM.path()` compose unchanged (one jitted bundle_step,
+        sync_every-chunked; the f32 slab is the only feature storage that
+        ever exists device-side).
+    """
+
+    name = 'stream'
+    device_resident = False
+    supports_device_solver = True
+    prefer_device_solver = True
+
+    def __init__(self, X, y, groups=None, block_rows: int | None = None,
+                 memory_budget: float | None = None):
+        y = np.asarray(y, np.float32)
+        self._src = _rowblocks.as_row_block_source(X)
+        self.m, self.n = self._src.m, self._src.n
+        if y.shape[0] != self.m:
+            raise ValueError(f'X has {self.m} rows but y has {y.shape[0]}')
+        if groups is not None:
+            groups = _validate_groups(groups, self.m)   # compact-relabels
+            # same ~1e-3 f32 key-scale tolerance as the fused oracles: the
+            # streaming counts run on f32 scores through the same core.
+            _warn_group_key_scale(groups, y, tol=1e-3, stacklevel=3)
+        self.n_pairs = _exact_pairs(y, groups)
+        if self.n_pairs == 0:
+            raise ValueError('training data induces no preference pairs')
+        if block_rows is None:
+            block_rows = _auto_stream_block(self.m, self._src.row_bytes(),
+                                            memory_budget)
+        block_rows = _validate_block(block_rows, 'StreamingOracle '
+                                     'block_rows')
+        self._B = min(block_rows, self.m)
+        self._nblk = self._src.n_blocks(self._B)
+        self._y = jnp.asarray(y)
+        self._g = None if groups is None else jnp.asarray(groups)
+        self._inv_n = 1.0 / float(self.n_pairs)
+        self._inv_n_dev = jnp.asarray(self._inv_n, f32)
+        self.name = f'stream/{self._src.kind}'
+        # The traced step densifies one (block, n) slab per fetch; for CSR
+        # sources the host-chunk passes instead run layout-native on the
+        # sparse row slices (O(nnz_block), no densification), so
+        # solver='auto' keeps them on the host driver — the streaming
+        # analogue of the fused oracles' csr_rmatvec exception. Dense and
+        # memmap sources stream the same bytes either way and take the
+        # fused-chunk dispatch win.
+        self.prefer_device_solver = self._src.kind != 'csr'
+
+    @property
+    def block_rows(self) -> int:
+        return self._B
+
+    def block_resident_bytes(self) -> int:
+        """Peak feature bytes resident at any point of a pass, at the
+        source's layout-native per-row cost (dense f32 slab; O(nnz_row)
+        for CSR, whose solver='auto' path keeps blocks sparse) — the
+        O(block) term of the memory model; the O(m) score/coefficient
+        vectors come on top. Forcing solver='device' on a CSR source
+        densifies each slab to block_rows * n * 4 bytes instead."""
+        return self._B * self._src.row_bytes()
+
+    def loss_and_subgrad(self, w):
+        w64 = np.asarray(w, np.float64)
+        p = np.empty(self.m, np.float32)
+        for lo, hi in self._src.ranges(self._B):
+            p[lo:hi] = self._src.matvec_block(lo, hi, w64)
+        loss, cd = _stream_counts(jnp.asarray(p), self._y, self._g,
+                                  self._inv_n_dev)
+        v = np.asarray(cd, np.float64) * self._inv_n
+        a = np.zeros(self.n, np.float64)
+        for lo, hi in self._src.ranges(self._B):
+            a += self._src.rmatvec_block(lo, hi, v[lo:hi])
+        return loss, a
+
+    def step_fn(self):
+        """Traced `w -> (loss, a)` with the block fetches inside the trace
+        (`jax.pure_callback` per scan step), for bmrm's device driver.
+        Everything the closure needs is bound to locals — never `self` —
+        so the driver's weak-keyed chunk cache can release the oracle
+        (same discipline as `_FusedOracle.step_fn`)."""
+        B, n, m, nblk = self._B, self.n, self.m, self._nblk
+        y, g, inv_n = self._y, self._g, self._inv_n_dev
+        fetch = functools.partial(_fetch_padded, self._src, B, m, n)
+        slab = jax.ShapeDtypeStruct((B, n), f32)
+        pad = nblk * B - m
+
+        def fn(w):
+            def score_blk(carry, i):
+                blk = jax.pure_callback(fetch, slab, i)
+                return carry, blk @ w
+
+            _, ps = jax.lax.scan(score_blk, jnp.zeros((), f32),
+                                 jnp.arange(nblk))
+            p = ps.reshape(-1)[:m] if pad else ps.reshape(-1)
+            loss, cd = _loss_and_coeffs(p, y, g, inv_n)
+            v = cd * inv_n
+            vb = (jnp.pad(v, (0, pad)) if pad else v).reshape(nblk, B)
+
+            def grad_blk(acc, xs):
+                i, vi = xs
+                blk = jax.pure_callback(fetch, slab, i)
+                return acc + blk.T @ vi, None
+
+            a, _ = jax.lax.scan(grad_blk, jnp.zeros(n, f32),
+                                (jnp.arange(nblk), vb))
+            return loss, a
+
+        return fn
 
 
 # --------------------------------------------------------- sharded oracle
@@ -591,28 +783,63 @@ def sharded_dryrun_cell(mesh: Mesh, shape=None, variant: str = 'base',
 # ---------------------------------------------------------------- factory
 
 
-METHODS = ('tree', 'pairs', 'auto', 'sharded')
+METHODS = ('tree', 'pairs', 'auto', 'sharded', 'stream')
 
 
 def make_oracle(X, y, groups=None, method: str = 'tree', *,
                 pair_block: int = 2048, mesh: Mesh | None = None,
-                variant: str = 'base',
-                csr_rmatvec: str = 'auto') -> RankOracle:
+                variant: str = 'base', csr_rmatvec: str = 'auto',
+                memory_budget: float | None = None,
+                stream_block: int | None = None) -> RankOracle:
     """Build the RankOracle for (X, y[, groups]) selected by `method`.
 
-    method:
-      'tree'    — merge-sort-tree counts (the paper; O(ms + m log^2 m)/iter)
-      'pairs'   — blocked O(m^2) pairwise counts (PairRSVM baseline)
-      'auto'    — counts_auto dispatch: Pallas pairwise kernel for small m
-                  on TPU, tree otherwise
-      'sharded' — pod-scale mesh oracle (core.distributed); dense bf16 X;
-                  groups supported via the same key-offset trick
+    Dispatch table (features-resident column is the memory model;
+    `groups=` routes the first three through GroupedOracle with the same
+    engine, and works natively on 'sharded' and 'stream'):
+
+      method     oracle            features resident        counts engine
+      'tree'     TreeOracle        full X on device (f32)   merge-sort tree
+      'pairs'    PairwiseOracle    full X on device (f32)   blocked O(m^2)
+      'auto'     PairwiseOracle    full X on device (f32)   counts_auto
+                 or StreamingOracle — see budget rule below
+      'sharded'  ShardedOracle     X sharded over mesh      tree on the
+                                   (bf16, dense)            gathered scores
+      'stream'   StreamingOracle   ONE (block, n) f32 slab  tree, one global
+                                   + O(m) vectors           pass
+
+    method='auto' resolves fused-vs-streaming by projected resident
+    memory (`data.rowblocks.projected_resident_gib` — what a fused oracle
+    would pin for this X): it streams when that projection exceeds
+    `memory_budget` GiB, and always when X is an `np.memmap` or a
+    `RowBlockSource` (layouts with no sensible fused form); otherwise it
+    keeps the fused counts_auto oracle. With no budget and in-memory X
+    the dispatch is unchanged from before. method='stream' forces the
+    streaming oracle for any X.
+
+    `stream_block` (rows per block) defaults to a budget-derived size
+    (`_auto_stream_block`: the block gets at most half the budget left
+    after the O(m) vectors, at the source's layout-native per-row cost —
+    dense f32 slab, or O(nnz_row) for CSR); `pair_block` is the
+    VMEM/cache block of the O(m^2) engine. Both are validated as
+    positive whole row counts.
     """
-    if method == 'sharded':
-        return ShardedOracle(X, y, groups=groups, mesh=mesh, variant=variant)
-    if method not in ('tree', 'pairs', 'auto'):
+    if method not in METHODS:
         raise ValueError(f'unknown oracle method {method!r}; '
                          f'expected one of {METHODS}')
+    stream_only = isinstance(X, (_rowblocks.RowBlockSource, np.memmap))
+    if method == 'auto' and not stream_only and memory_budget is not None:
+        if _rowblocks.projected_resident_gib(X) > float(memory_budget):
+            method = 'stream'
+    if method == 'stream' or (method == 'auto' and stream_only):
+        return StreamingOracle(X, y, groups=groups, block_rows=stream_block,
+                               memory_budget=memory_budget)
+    if isinstance(X, _rowblocks.RowBlockSource):
+        raise ValueError(
+            f"method={method!r} needs materialized features, but X is a "
+            f'{type(X).__name__} row-block source; train it with '
+            "method='stream' (or 'auto', which streams such sources)")
+    if method == 'sharded':
+        return ShardedOracle(X, y, groups=groups, mesh=mesh, variant=variant)
     if groups is not None:
         return GroupedOracle(X, y, groups, inner=method, block=pair_block,
                              csr_rmatvec=csr_rmatvec)

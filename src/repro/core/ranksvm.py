@@ -6,11 +6,18 @@
   'tree'    TreeRSVM: merge-sort-tree counts, O(ms + m log^2 m)/iteration
   'pairs'   PairRSVM: blocked O(m^2) pairwise counts (the paper's baseline)
   'auto'    counts_auto dispatch: Pallas pairwise kernel for small ranking
-            problems on TPU, tree otherwise
+            problems on TPU, tree otherwise; with `memory_budget=` set (or
+            an np.memmap / RowBlockSource X) it falls over to the
+            streaming oracle when the projected fused residency exceeds
+            the budget
   'sharded' pod-scale mesh oracle (core.distributed) on dense bf16
             features; accepts `groups=` like every other method, and under
             solver='auto' trains on the device bundle driver with the
             bundle state sharded over the mesh (per-query LTR at pod scale)
+  'stream'  out-of-core streaming oracle (core.oracle.StreamingOracle):
+            two chunked passes over a row-block feature source
+            (data.rowblocks — dense, CSR, or np.memmap-backed), peak
+            memory O(block*n + m) regardless of m
 
 — and hands it to `core.bmrm.bmrm`. Orthogonally, `solver=` picks the BMRM
 driver (core.bmrm):
@@ -50,6 +57,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from . import rank_loss as _rank_loss
+from ..data.rowblocks import _validate_block_rows as _validate_block
 from .bmrm import SOLVERS, bmrm
 from .oracle import METHODS, make_oracle
 
@@ -100,13 +108,20 @@ class RankSVM:
       pair_block: VMEM/cache block for the O(m^2) pairwise pass.
       mesh: optional jax Mesh for method='sharded' (defaults to all local
         devices on the 'data' axis).
+      memory_budget: GiB of feature residency the fused oracles may use;
+        method='auto' streams instead when the projected fused residency
+        exceeds it (core.oracle.make_oracle's dispatch heuristic).
+      stream_block: rows per block of the streaming oracle (default:
+        budget-derived; core.oracle._auto_stream_block).
     """
 
     def __init__(self, lam: float = 1e-3, eps: float = 1e-3,
                  method: str = 'tree', max_iter: int = 1000,
                  pair_block: int = 2048, mesh=None, verbose: bool = False,
                  solver: str = 'auto', max_planes: int | None = None,
-                 sync_every: 'int | str' = 8, qp_iters: int = 128):
+                 sync_every: 'int | str' = 8, qp_iters: int = 128,
+                 memory_budget: float | None = None,
+                 stream_block: int | None = None):
         if method not in METHODS:
             raise ValueError(f'unknown method {method!r}; '
                              f'expected one of {METHODS}')
@@ -125,7 +140,12 @@ class RankSVM:
         self.sync_every = (sync_every if sync_every == 'auto'
                            else int(sync_every))
         self.qp_iters = int(qp_iters)
-        self.pair_block = int(pair_block)
+        self.pair_block = _validate_block(pair_block, 'pair_block')
+        self.memory_budget = (None if memory_budget is None
+                              else float(memory_budget))
+        self.stream_block = (None if stream_block is None
+                             else _validate_block(stream_block,
+                                                  'stream_block'))
         self.mesh = mesh
         self.verbose = verbose
         self.w_: np.ndarray | None = None
@@ -136,8 +156,7 @@ class RankSVM:
 
     def fit(self, X, y, groups=None):
         """Learn w from features X (m, n) and real-valued utility scores y."""
-        oracle = make_oracle(X, y, groups=groups, method=self.method,
-                             pair_block=self.pair_block, mesh=self.mesh)
+        oracle = self._make_oracle(X, y, groups)
         self.oracle_ = oracle
 
         t0 = time.perf_counter()
@@ -159,8 +178,7 @@ class RankSVM:
         lams = [float(lam) for lam in lams]
         if not lams:
             raise ValueError('path() needs at least one lambda')
-        oracle = make_oracle(X, y, groups=groups, method=self.method,
-                             pair_block=self.pair_block, mesh=self.mesh)
+        oracle = self._make_oracle(X, y, groups)
         self.oracle_ = oracle
 
         points: list[PathPoint] = []
@@ -203,6 +221,12 @@ class RankSVM:
         return float(loss) + self.lam * float(self.w_ @ self.w_)
 
     # -- internals ---------------------------------------------------------
+
+    def _make_oracle(self, X, y, groups):
+        return make_oracle(X, y, groups=groups, method=self.method,
+                           pair_block=self.pair_block, mesh=self.mesh,
+                           memory_budget=self.memory_budget,
+                           stream_block=self.stream_block)
 
     def _solve(self, oracle, lam, state=None, w0=None):
         return bmrm(oracle, lam=lam, eps=self.eps, max_iter=self.max_iter,

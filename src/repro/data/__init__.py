@@ -1,3 +1,6 @@
+from .rowblocks import (CSRBlockSource, DenseBlockSource,  # noqa: F401
+                        MemmapBlockSource, RowBlock, RowBlockSource,
+                        as_row_block_source, projected_resident_gib)
 from .sparse import CSRMatrix, random_tfidf  # noqa: F401
 from .synthetic import (RankingData, cadata_like, grouped_queries,  # noqa: F401
                         ordinal_like, reuters_like)

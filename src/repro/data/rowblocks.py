@@ -1,0 +1,332 @@
+"""Row-block feature sources: out-of-core access to the (m, n) data matrix.
+
+The paper's O(m·s + m·log m) subgradient needs only O(m) scalars resident
+— the score vector and the pair-count coefficients — yet a fused oracle
+pins the whole feature matrix on device, so the largest trainable m is set
+by accelerator memory, not by the algorithm. `RowBlockSource` is the
+abstraction that breaks that coupling: fixed-size row blocks of X (plus
+the matching y/group slices) are produced on demand, and the streaming
+oracle (`core.oracle.StreamingOracle`) consumes them in two chunked passes
+with peak memory O(block·n + m) regardless of m.
+
+Three implementations cover the storage layouts the oracles accept:
+
+  `DenseBlockSource`   in-RAM row-major ndarray (blocks are views)
+  `CSRBlockSource`     `repro.data.sparse.CSRMatrix` or scipy CSR
+                       (blocks densify one slice at a time, O(block·n))
+  `MemmapBlockSource`  `np.memmap` over a file on disk — the genuinely
+                       out-of-core case: only the touched blocks are paged
+                       in, so m is bounded by disk, not RAM
+
+`as_row_block_source` dispatches on the input type; `projected_resident_gib`
+is the memory model behind `make_oracle`'s fused-vs-streaming budget
+heuristic (what WOULD a fused oracle pin resident for this X?).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+try:
+    import scipy.sparse as _scipy_sparse
+except Exception:  # pragma: no cover - scipy is installed in this container
+    _scipy_sparse = None
+
+from .sparse import CSRMatrix
+
+
+def _validate_block_rows(block_rows, what: str = 'block_rows') -> int:
+    """Reject non-positive / fractional / boolean block sizes loudly.
+
+    A silent int() cast would turn block=0 into an infinite block loop and
+    block=2.5 into an off-by-some partition; every block-sized knob in the
+    oracle layer funnels through here instead.
+    """
+    ok = isinstance(block_rows, (int, np.integer)) and not isinstance(
+        block_rows, bool)
+    if not ok and isinstance(block_rows, (float, np.floating)):
+        if not float(block_rows).is_integer():
+            raise ValueError(f'{what} must be a whole number of rows; got '
+                             f'the fractional value {block_rows!r}')
+        ok = True
+    if not ok:
+        raise ValueError(f'{what} must be a positive integer; got '
+                         f'{block_rows!r} of type '
+                         f'{type(block_rows).__name__}')
+    block_rows = int(block_rows)
+    if block_rows <= 0:
+        raise ValueError(f'{what} must be a positive integer; got '
+                         f'{block_rows}')
+    return block_rows
+
+
+class RowBlock(NamedTuple):
+    """One fixed-size slab of rows plus the aligned per-row slices."""
+
+    lo: int
+    hi: int
+    X: np.ndarray          # (hi - lo, n) dense float32
+    aligned: tuple         # slices of the aligned arrays, same row range
+
+
+class RowBlockSource:
+    """Interface: fixed-size row-block access to an (m, n) feature matrix.
+
+    Subclasses implement `block(lo, hi)` (a dense float32 slab) and may
+    override the two per-block matvecs with layout-native kernels; the
+    base-class defaults go through the dense slab. `ranges` partitions
+    [0, m) into `block_rows`-sized spans (final block ragged), and
+    `iter_blocks` yields the slabs together with the matching slices of
+    any row-aligned arrays (y, groups) — the unit of work the streaming
+    oracle consumes.
+    """
+
+    kind = 'abstract'
+    m: int
+    n: int
+
+    def block(self, lo: int, hi: int) -> np.ndarray:
+        """Dense float32 rows [lo, hi) of X, shape (hi - lo, n)."""
+        raise NotImplementedError
+
+    def matvec_block(self, lo: int, hi: int, w) -> np.ndarray:
+        """X[lo:hi] @ w in float64, shape (hi - lo,)."""
+        return self.block(lo, hi).astype(np.float64) @ np.asarray(
+            w, np.float64)
+
+    def rmatvec_block(self, lo: int, hi: int, v) -> np.ndarray:
+        """X[lo:hi].T @ v in float64, shape (n,)."""
+        return self.block(lo, hi).astype(np.float64).T @ np.asarray(
+            v, np.float64)
+
+    def _check_range(self, lo: int, hi: int) -> tuple[int, int]:
+        lo, hi = int(lo), int(hi)
+        if not 0 <= lo <= hi <= self.m:
+            raise ValueError(f'row block [{lo}, {hi}) out of range for '
+                             f'{self.m} rows')
+        return lo, hi
+
+    def ranges(self, block_rows: int):
+        """(lo, hi) spans of `block_rows` rows covering [0, m); the final
+        span is ragged when block_rows does not divide m."""
+        block_rows = _validate_block_rows(block_rows)
+        for lo in range(0, self.m, block_rows):
+            yield lo, min(lo + block_rows, self.m)
+
+    def iter_blocks(self, block_rows: int, *aligned) -> 'iter':
+        """Yield `RowBlock`s: dense row slabs plus the matching slices of
+        each row-aligned array (y, groups, sample weights, ...) — the
+        convenience surface for external block consumers (custom losses,
+        export pipelines). `StreamingOracle` itself drives the leaner
+        `ranges()` + per-block matvecs and never materializes slabs it
+        does not need."""
+        arrays = []
+        for a in aligned:
+            a = np.asarray(a)
+            if a.shape[:1] != (self.m,):
+                raise ValueError(
+                    f'aligned array has leading dim {a.shape[:1]} but the '
+                    f'source has {self.m} rows; they must align one-to-one')
+            arrays.append(a)
+        for lo, hi in self.ranges(block_rows):
+            yield RowBlock(lo, hi, self.block(lo, hi),
+                           tuple(a[lo:hi] for a in arrays))
+
+    def n_blocks(self, block_rows: int) -> int:
+        block_rows = _validate_block_rows(block_rows)
+        return -(-self.m // block_rows)
+
+    def row_bytes(self) -> int:
+        """Estimated resident bytes per row during a block pass — the
+        input to budget-derived block sizing. Default: the dense f32 slab
+        (4·n). Sparse sources override with their layout-native cost."""
+        return 4 * self.n
+
+
+class DenseBlockSource(RowBlockSource):
+    """Row-major in-RAM ndarray; blocks are cheap row views."""
+
+    kind = 'dense'
+
+    def __init__(self, X):
+        X = np.asarray(X)
+        if X.ndim != 2:
+            raise ValueError(f'dense feature matrix must be 2-D; got shape '
+                             f'{X.shape}')
+        self._X = X
+        self.m, self.n = map(int, X.shape)
+
+    def block(self, lo: int, hi: int) -> np.ndarray:
+        lo, hi = self._check_range(lo, hi)
+        return np.asarray(self._X[lo:hi], np.float32)
+
+    def matvec_block(self, lo: int, hi: int, w) -> np.ndarray:
+        lo, hi = self._check_range(lo, hi)
+        return np.asarray(
+            self._X[lo:hi] @ np.asarray(w, np.float64)).ravel()
+
+    def rmatvec_block(self, lo: int, hi: int, v) -> np.ndarray:
+        lo, hi = self._check_range(lo, hi)
+        return np.asarray(
+            self._X[lo:hi].T @ np.asarray(v, np.float64)).ravel()
+
+
+class MemmapBlockSource(RowBlockSource):
+    """np.memmap-backed rows — the genuinely out-of-core layout.
+
+    Accepts an existing `np.memmap` (row-major, 2-D) or opens one from
+    `path` + `shape` + `dtype`. Each block access maps ONLY its own
+    file window (one short-lived np.memmap at the block's byte offset),
+    copies the rows out, and drops the mapping — a long-lived map would
+    accumulate every touched page in the process RSS over a pass, which
+    is exactly the O(m·n) residency this source exists to avoid. Peak
+    address-space cost is therefore one (block, n) window regardless of
+    how many passes run (measured: `benchmarks/streaming_oracle.py`).
+    """
+
+    kind = 'memmap'
+
+    def __init__(self, X=None, *, path=None, shape=None,
+                 dtype=np.float32, offset: int = 0):
+        if X is None:
+            if path is None or shape is None:
+                raise ValueError('MemmapBlockSource needs an np.memmap or '
+                                 'path= and shape=')
+        else:
+            if not isinstance(X, np.memmap):
+                raise ValueError('MemmapBlockSource needs an np.memmap; '
+                                 f'got {type(X).__name__} (use '
+                                 'DenseBlockSource for in-RAM arrays)')
+            if X.ndim != 2:
+                raise ValueError(f'memmap features must be 2-D; got shape '
+                                 f'{X.shape}')
+            if not X.flags['C_CONTIGUOUS']:
+                raise ValueError('memmap features must be row-major '
+                                 '(C-contiguous) for row-block windows')
+            # A sliced view (mm[lo:hi]) inherits the BASE map's `.offset`,
+            # so reconstructing windows from X.offset alone would read the
+            # wrong rows. Walk to the top array and add the view's byte
+            # displacement from it to get the true file offset of row 0.
+            base = X
+            while isinstance(base.base, np.ndarray):
+                base = base.base
+            delta = X.ctypes.data - base.ctypes.data
+            path, shape = base.filename, X.shape
+            dtype, offset = X.dtype, int(base.offset) + delta
+        self._path = path
+        self._dtype = np.dtype(dtype)
+        self._offset = int(offset)
+        self.m, self.n = map(int, shape)
+        # Anonymous / in-memory maps can't be reopened per window; hold
+        # the object and slice it (tests, BytesIO-backed maps).
+        self._held = X if path is None else None
+
+    def _window(self, lo: int, hi: int) -> np.ndarray:
+        """Rows [lo, hi) copied out of a window-sized mapping."""
+        if hi == lo:
+            return np.zeros((0, self.n), self._dtype)
+        if self._held is not None:
+            return np.array(self._held[lo:hi])
+        off = self._offset + lo * self.n * self._dtype.itemsize
+        mm = np.memmap(self._path, mode='r', dtype=self._dtype,
+                       shape=(hi - lo, self.n), offset=off)
+        out = np.array(mm)           # copy; the mapping dies with mm
+        del mm
+        return out
+
+    def block(self, lo: int, hi: int) -> np.ndarray:
+        lo, hi = self._check_range(lo, hi)
+        return np.asarray(self._window(lo, hi), np.float32)
+
+    def matvec_block(self, lo: int, hi: int, w) -> np.ndarray:
+        lo, hi = self._check_range(lo, hi)
+        return self._window(lo, hi).astype(np.float64) @ np.asarray(
+            w, np.float64)
+
+    def rmatvec_block(self, lo: int, hi: int, v) -> np.ndarray:
+        lo, hi = self._check_range(lo, hi)
+        return self._window(lo, hi).astype(np.float64).T @ np.asarray(
+            v, np.float64)
+
+
+class CSRBlockSource(RowBlockSource):
+    """CSR-backed blocks: per-block products run on the sparse slice in
+    O(nnz_block); only `block()` (the dense slab for the traced streaming
+    pass) materializes O(block·n)."""
+
+    kind = 'csr'
+
+    def __init__(self, X):
+        if _scipy_sparse is not None and _scipy_sparse.issparse(X):
+            X = X.tocsr()
+            X = CSRMatrix(np.asarray(X.data), np.asarray(X.indices),
+                          np.asarray(X.indptr), X.shape)
+        if not isinstance(X, CSRMatrix):
+            raise ValueError('CSRBlockSource needs a repro CSRMatrix or a '
+                             f'scipy sparse matrix; got {type(X).__name__}')
+        self._X = X
+        self.m, self.n = map(int, X.shape)
+
+    def block(self, lo: int, hi: int) -> np.ndarray:
+        lo, hi = self._check_range(lo, hi)
+        return self._X.row_slice(lo, hi).to_dense().astype(np.float32)
+
+    def matvec_block(self, lo: int, hi: int, w) -> np.ndarray:
+        lo, hi = self._check_range(lo, hi)
+        return self._X.row_slice(lo, hi).matvec(np.asarray(w, np.float64))
+
+    def rmatvec_block(self, lo: int, hi: int, v) -> np.ndarray:
+        lo, hi = self._check_range(lo, hi)
+        return self._X.row_slice(lo, hi).rmatvec(np.asarray(v, np.float64))
+
+    def row_bytes(self) -> int:
+        """O(nnz_row) for the sparse per-block products (f64 data +
+        int32 indices per nonzero) — the cost of the HOST passes, which
+        is where solver='auto' runs CSR streaming. Forcing
+        solver='device' instead densifies a (block, n) slab per fetch,
+        beyond this estimate."""
+        avg_nnz = self._X.nnz / max(1, self.m)
+        return max(1, int(12 * avg_nnz))
+
+
+def _is_csr_like(X) -> bool:
+    return (hasattr(X, 'data') and hasattr(X, 'indices')
+            and hasattr(X, 'indptr'))
+
+
+def as_row_block_source(X) -> RowBlockSource:
+    """Wrap X in the RowBlockSource matching its storage layout."""
+    if isinstance(X, RowBlockSource):
+        return X
+    if isinstance(X, np.memmap):
+        return MemmapBlockSource(X)
+    if isinstance(X, CSRMatrix) or _is_csr_like(X) or (
+            _scipy_sparse is not None and _scipy_sparse.issparse(X)):
+        return CSRBlockSource(X)
+    return DenseBlockSource(X)
+
+
+def projected_resident_gib(X) -> float:
+    """GiB a FUSED oracle would pin device-resident for this X.
+
+    The memory model behind `make_oracle`'s fused-vs-streaming dispatch:
+    dense (and memmap, which a fused oracle would materialize) costs
+    m·n f32; CSR costs its data+indices (+ the row vector when ragged).
+    The O(m) score/label vectors are charged to both paths and omitted.
+    """
+    if isinstance(X, CSRBlockSource):
+        X = X._X
+    elif isinstance(X, RowBlockSource):
+        return X.m * X.n * 4 / 2**30
+    if isinstance(X, CSRMatrix) or _is_csr_like(X) or (
+            _scipy_sparse is not None and _scipy_sparse.issparse(X)):
+        indptr = np.asarray(X.indptr)
+        nnz = int(indptr[-1])
+        lens = np.diff(indptr)
+        uniform = bool(lens.size and np.all(lens == lens[0]) and lens[0] > 0)
+        per_nnz = 8 if uniform else 12   # data+idx (+row ids when ragged)
+        return nnz * per_nnz / 2**30
+    m, n = map(int, np.shape(X)[:2])
+    return m * n * 4 / 2**30

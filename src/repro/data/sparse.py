@@ -60,11 +60,24 @@ class CSRMatrix:
 
     def rows(self, m: int) -> 'CSRMatrix':
         """First-m-rows view (copy); used by growing-m scaling benchmarks."""
+        m = int(m)
+        if not 0 <= m <= self.shape[0]:
+            raise ValueError(f'rows({m}) out of range for a matrix with '
+                             f'{self.shape[0]} rows')
         end = int(self.indptr[m])
         return CSRMatrix(self.data[:end], self.indices[:end],
                          self.indptr[:m + 1], (m, self.shape[1]))
 
     def row_slice(self, lo: int, hi: int) -> 'CSRMatrix':
+        """Rows [lo, hi) as a new CSRMatrix; [lo, lo) is a valid empty
+        slice. Out-of-range bounds raise instead of producing a matrix
+        whose indptr silently disagrees with its shape — the streaming
+        row-block source leans on this contract for its final ragged
+        block."""
+        lo, hi = int(lo), int(hi)
+        if not 0 <= lo <= hi <= self.shape[0]:
+            raise ValueError(f'row_slice({lo}, {hi}) out of range for a '
+                             f'matrix with {self.shape[0]} rows')
         s, e = int(self.indptr[lo]), int(self.indptr[hi])
         return CSRMatrix(self.data[s:e], self.indices[s:e],
                          self.indptr[lo:hi + 1] - self.indptr[lo],

@@ -36,6 +36,49 @@ def test_csr_row_slicing():
     np.testing.assert_allclose(csr.row_slice(3, 7).to_dense(), X[3:7])
 
 
+def test_csr_row_slice_empty():
+    """[lo, lo) is a valid empty slice with working products — the
+    streaming source hits this for m divisible by the block size."""
+    rng = np.random.default_rng(2)
+    X = rng.normal(size=(8, 5))
+    csr = CSRMatrix.from_dense(X)
+    empty = csr.row_slice(3, 3)
+    assert empty.shape == (0, 5)
+    assert empty.nnz == 0
+    assert empty.to_dense().shape == (0, 5)
+    np.testing.assert_allclose(empty.rmatvec(np.zeros(0)), np.zeros(5))
+    assert empty.matvec(np.ones(5)).shape == (0,)
+    assert csr.rows(0).shape == (0, 5)
+
+
+def test_csr_row_slice_final_ragged_block():
+    """Iterating fixed-size blocks leaves a ragged tail; the slice of the
+    last partial block must carry exactly the remaining rows."""
+    rng = np.random.default_rng(3)
+    X = rng.normal(size=(53, 6)) * (rng.random(size=(53, 6)) < 0.4)
+    csr = CSRMatrix.from_dense(X)
+    pieces = [csr.row_slice(lo, min(lo + 16, 53)) for lo in range(0, 53, 16)]
+    assert [p.shape[0] for p in pieces] == [16, 16, 16, 5]
+    np.testing.assert_allclose(
+        np.concatenate([p.to_dense() for p in pieces]), X, atol=1e-12)
+    tail = pieces[-1]
+    np.testing.assert_allclose(tail.matvec(np.ones(6)), X[48:].sum(axis=1))
+
+
+def test_csr_row_slice_out_of_range_rejected():
+    csr = CSRMatrix.from_dense(np.eye(4))
+    with pytest.raises(ValueError, match='out of range'):
+        csr.row_slice(0, 5)                  # hi past the end
+    with pytest.raises(ValueError, match='out of range'):
+        csr.row_slice(-1, 2)
+    with pytest.raises(ValueError, match='out of range'):
+        csr.row_slice(3, 2)                  # lo > hi
+    with pytest.raises(ValueError, match='out of range'):
+        csr.rows(5)
+    with pytest.raises(ValueError, match='out of range'):
+        csr.rows(-1)
+
+
 def test_reuters_like_has_distinct_scores():
     """The property driving the paper's headline case: r ~= m."""
     d = reuters_like(m=1000, m_test=100, n=2048, nnz_per_row=16)

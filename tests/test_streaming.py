@@ -1,0 +1,418 @@
+"""Out-of-core oracle layer tests: row-block sources, StreamingOracle
+parity with the fused oracles, the memory-budgeted dispatch heuristic, and
+the device-driver composition of the streaming step_fn.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import oracle as O
+from repro.core.bmrm import bmrm
+from repro.core.ranksvm import RankSVM
+from repro.data import (CSRBlockSource, DenseBlockSource, MemmapBlockSource,
+                        as_row_block_source, projected_resident_gib,
+                        random_tfidf)
+from repro.data.rowblocks import _validate_block_rows
+from repro.data.sparse import CSRMatrix
+
+
+def _case(m=230, n=12, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(m, n))
+    y = rng.normal(size=m)
+    w = rng.normal(size=n)
+    return X, y, w
+
+
+def _memmap_of(X, tmp_path, name='X.f32'):
+    path = tmp_path / name
+    mm = np.memmap(path, mode='w+', dtype=np.float32, shape=X.shape)
+    mm[:] = X
+    mm.flush()
+    return np.memmap(path, mode='r', dtype=np.float32, shape=X.shape)
+
+
+# ------------------------------------------------------ row-block sources
+
+
+def test_source_dispatch_on_layout(tmp_path):
+    X, y, _ = _case()
+    assert isinstance(as_row_block_source(X), DenseBlockSource)
+    assert isinstance(as_row_block_source(CSRMatrix.from_dense(X)),
+                      CSRBlockSource)
+    assert isinstance(as_row_block_source(_memmap_of(X, tmp_path)),
+                      MemmapBlockSource)
+    src = DenseBlockSource(X)
+    assert as_row_block_source(src) is src
+
+
+@pytest.mark.parametrize('kind', ['dense', 'csr', 'memmap'])
+def test_sources_reassemble_matrix(kind, tmp_path):
+    """Blocks (including the final ragged one) concatenate back to X, and
+    the per-block matvecs match the dense products."""
+    rng = np.random.default_rng(1)
+    X = rng.normal(size=(53, 7))          # 53 = 3*16 + ragged 5
+    if kind == 'csr':
+        X[rng.random(X.shape) < 0.5] = 0.0
+        src = CSRBlockSource(CSRMatrix.from_dense(X))
+    elif kind == 'memmap':
+        src = MemmapBlockSource(_memmap_of(X, tmp_path))
+    else:
+        src = DenseBlockSource(X)
+    assert (src.m, src.n) == (53, 7)
+    assert src.n_blocks(16) == 4
+    blocks = [src.block(lo, hi) for lo, hi in src.ranges(16)]
+    assert [b.shape[0] for b in blocks] == [16, 16, 16, 5]
+    np.testing.assert_allclose(np.concatenate(blocks), X, atol=1e-6)
+    w = rng.normal(size=7)
+    v = rng.normal(size=16)
+    np.testing.assert_allclose(src.matvec_block(16, 32, w), X[16:32] @ w,
+                               atol=1e-5)
+    np.testing.assert_allclose(src.rmatvec_block(0, 16, v), X[:16].T @ v,
+                               atol=1e-5)
+
+
+def test_memmap_sliced_view_reads_correct_rows(tmp_path):
+    """Regression: a row-sliced memmap view (e.g. a train split mm[k:])
+    inherits the BASE map's byte offset, so window reconstruction must
+    add the view's displacement — without it, blocks silently came from
+    the start of the file."""
+    rng = np.random.default_rng(20)
+    X = rng.normal(size=(10, 2)).astype(np.float32)
+    mm = _memmap_of(X, tmp_path)
+    src = MemmapBlockSource(mm[4:])
+    assert src.m == 6
+    np.testing.assert_allclose(src.block(0, 3), X[4:7], atol=1e-7)
+    np.testing.assert_allclose(src.block(2, 6), X[6:10], atol=1e-7)
+    w = rng.normal(size=2)
+    np.testing.assert_allclose(src.matvec_block(1, 4, w),
+                               X[5:8].astype(np.float64) @ w, atol=1e-6)
+    # a view of a view composes too
+    src2 = MemmapBlockSource(mm[2:][3:])
+    np.testing.assert_allclose(src2.block(0, 2), X[5:7], atol=1e-7)
+    # and an offset-opened map with a further slice
+    off = np.memmap(tmp_path / 'X.f32', mode='r', dtype=np.float32,
+                    shape=(8, 2), offset=2 * 2 * 4)
+    src3 = MemmapBlockSource(off[1:])
+    np.testing.assert_allclose(src3.block(0, 5), X[3:8], atol=1e-7)
+
+
+def test_iter_blocks_yields_aligned_slices():
+    X, y, _ = _case(m=50, n=4)
+    g = np.arange(50, dtype=np.int32)
+    out = list(DenseBlockSource(X).iter_blocks(20, y, g))
+    assert [(b.lo, b.hi) for b in out] == [(0, 20), (20, 40), (40, 50)]
+    for b in out:
+        np.testing.assert_allclose(b.X, X[b.lo:b.hi], atol=1e-6)
+        np.testing.assert_array_equal(b.aligned[0], y[b.lo:b.hi])
+        np.testing.assert_array_equal(b.aligned[1], g[b.lo:b.hi])
+
+
+def test_iter_blocks_rejects_misaligned_arrays():
+    X, y, _ = _case(m=50, n=4)
+    with pytest.raises(ValueError, match='align'):
+        list(DenseBlockSource(X).iter_blocks(20, y[:-1]))
+
+
+def test_source_block_range_checks():
+    X, _, _ = _case(m=30, n=3)
+    src = DenseBlockSource(X)
+    assert src.block(10, 10).shape == (0, 3)      # empty slice is valid
+    with pytest.raises(ValueError, match='out of range'):
+        src.block(0, 31)
+    with pytest.raises(ValueError, match='out of range'):
+        src.block(-1, 5)
+
+
+def test_projected_resident_gib_memory_model(tmp_path):
+    X = np.zeros((1024, 256))
+    assert projected_resident_gib(X) == pytest.approx(
+        1024 * 256 * 4 / 2**30)
+    mm = _memmap_of(X, tmp_path)
+    assert projected_resident_gib(mm) == pytest.approx(
+        1024 * 256 * 4 / 2**30)
+    Xc = random_tfidf(m=256, n=512, nnz_per_row=8, seed=0)
+    assert projected_resident_gib(Xc) == pytest.approx(
+        Xc.nnz * 8 / 2**30)
+
+
+# --------------------------------------------- streaming oracle parity
+
+
+def _assert_close(a, b, tol=1e-6):
+    np.testing.assert_allclose(np.asarray(a, np.float64),
+                               np.asarray(b, np.float64),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize('block_rows', [64, 230, 1000])
+def test_streaming_matches_tree_dense(block_rows):
+    """Acceptance: streaming loss/subgradient match TreeOracle to 1e-6 on
+    dense inputs, for dividing, exact, and oversized block sizes."""
+    X, y, w = _case()
+    lt, at = O.TreeOracle(X, y).loss_and_subgrad(w)
+    st = O.StreamingOracle(X, y, block_rows=block_rows)
+    ls, as_ = st.loss_and_subgrad(w)
+    assert float(ls) == pytest.approx(float(lt), rel=1e-6, abs=1e-6)
+    _assert_close(as_, at)
+
+
+def test_streaming_matches_tree_csr():
+    X = random_tfidf(m=180, n=48, nnz_per_row=8, seed=3)
+    rng = np.random.default_rng(4)
+    y = rng.normal(size=180)
+    w = rng.normal(size=48)
+    lt, at = O.TreeOracle(X, y).loss_and_subgrad(w)
+    ls, as_ = O.StreamingOracle(X, y, block_rows=33).loss_and_subgrad(w)
+    assert float(ls) == pytest.approx(float(lt), rel=1e-6, abs=1e-6)
+    _assert_close(as_, at)
+
+
+def test_streaming_matches_grouped():
+    X, y, w = _case(m=150, seed=5)
+    g = np.random.default_rng(6).integers(0, 8, size=150).astype(np.int32)
+    lg, ag = O.GroupedOracle(X, y, g).loss_and_subgrad(w)
+    so = O.StreamingOracle(X, y, groups=g, block_rows=41)
+    ls, as_ = so.loss_and_subgrad(w)
+    assert so.n_pairs == O.GroupedOracle(X, y, g).n_pairs
+    assert float(ls) == pytest.approx(float(lg), rel=1e-6, abs=1e-6)
+    _assert_close(as_, ag)
+
+
+def test_streaming_matches_tree_memmap(tmp_path):
+    X, y, w = _case(m=140, n=9, seed=7)
+    src = MemmapBlockSource(_memmap_of(X.astype(np.float32), tmp_path))
+    lt, at = O.TreeOracle(X.astype(np.float32), y).loss_and_subgrad(w)
+    so = O.StreamingOracle(src, y, block_rows=32)
+    assert so.name == 'stream/memmap'
+    ls, as_ = so.loss_and_subgrad(w)
+    assert float(ls) == pytest.approx(float(lt), rel=1e-6, abs=1e-6)
+    _assert_close(as_, at)
+
+
+def test_streaming_step_fn_matches_host_eval():
+    """The traced pure_callback step computes the same (loss, a) as the
+    host-chunk passes."""
+    import jax
+    X, y, w = _case(m=100, n=6, seed=8)
+    so = O.StreamingOracle(X, y, block_rows=17)    # ragged: 6 blocks
+    lh, ah = so.loss_and_subgrad(w)
+    ld, ad = jax.jit(so.step_fn())(np.asarray(w, np.float32))
+    assert float(ld) == pytest.approx(float(lh), rel=1e-5, abs=1e-6)
+    _assert_close(ad, ah, tol=1e-5)
+
+
+def test_streaming_metadata_and_pairs():
+    X, y, _ = _case(m=60, n=5, seed=9)
+    so = O.StreamingOracle(X, y, block_rows=16)
+    assert (so.m, so.n) == (60, 5)
+    assert so.supports_device_solver and so.prefer_device_solver
+    assert not so.device_resident
+    # CSR sources stay on the host driver under solver='auto': the traced
+    # step would densify a slab per block, the host passes stay sparse
+    sc = O.StreamingOracle(random_tfidf(m=60, n=30, nnz_per_row=4, seed=1),
+                           np.random.default_rng(2).normal(size=60))
+    assert sc.supports_device_solver and not sc.prefer_device_solver
+    assert so.block_resident_bytes() == 16 * 5 * 4
+    from repro.core import counts as C
+    assert so.n_pairs == C.num_pairs_host(y)
+
+
+# --------------------------------------------- device-driver composition
+
+
+def test_streaming_device_solver_parity():
+    """bmrm(solver='device') runs the streaming step_fn inside the jitted
+    bundle chunk and reaches the host driver's objective."""
+    X, y, _ = _case(m=120, n=8, seed=10)
+    so = O.StreamingOracle(X, y, block_rows=32)
+    rd = bmrm(so, lam=1e-2, eps=1e-3, solver='device', max_iter=150)
+    rh = bmrm(so, lam=1e-2, eps=1e-3, solver='host', max_iter=150)
+    assert rd.stats.converged and rh.stats.converged
+    assert rd.stats.obj_best == pytest.approx(rh.stats.obj_best, rel=1e-3)
+
+
+def test_streaming_path_warm_start():
+    """RankSVM.path composes unchanged: the bundle state threads across
+    lambda with the streaming oracle on the device driver."""
+    X, y, _ = _case(m=100, n=6, seed=11)
+    svm = RankSVM(method='stream', solver='device', eps=1e-2,
+                  stream_block=32, max_iter=100)
+    pts = svm.path(X, y, lams=[1e-1, 1e-2, 1e-3])
+    assert len(pts) == 3
+    assert all(p.report.converged for p in pts)
+    # warm-started later fits reuse planes: strictly fewer iterations than
+    # an equally-cold fit of the last lambda (if state threading silently
+    # broke, warm would equal cold and this must fail)
+    cold = RankSVM(method='stream', solver='device', eps=1e-2,
+                   stream_block=32, max_iter=100, lam=1e-3).fit(X, y)
+    assert pts[-1].report.iterations < cold.report_.iterations
+
+
+# ------------------------------------------------- dispatch heuristic
+
+
+def test_auto_budget_picks_streaming():
+    X, y, _ = _case()
+    tiny = O.make_oracle(X, y, method='auto', memory_budget=1e-9)
+    big = O.make_oracle(X, y, method='auto', memory_budget=10.0)
+    assert isinstance(tiny, O.StreamingOracle)
+    assert isinstance(big, O.PairwiseOracle)
+    none = O.make_oracle(X, y, method='auto')      # no budget: unchanged
+    assert isinstance(none, O.PairwiseOracle)
+
+
+def test_auto_streams_memmap_and_sources(tmp_path):
+    X, y, _ = _case()
+    mm = _memmap_of(X, tmp_path)
+    assert isinstance(O.make_oracle(mm, y, method='auto'),
+                      O.StreamingOracle)
+    src = as_row_block_source(X)
+    assert isinstance(O.make_oracle(src, y, method='auto'),
+                      O.StreamingOracle)
+    with pytest.raises(ValueError, match='row-block source'):
+        O.make_oracle(src, y, method='tree')
+
+
+def test_budget_derives_block_rows():
+    X, y, _ = _case(m=200, n=10)
+    o = O.make_oracle(X, y, method='stream', memory_budget=1e-5)
+    # half of (budget - 6*4*m) over 4*n rows — small but positive
+    assert 1 <= o.block_rows < 200
+    default = O.make_oracle(X, y, method='stream')
+    assert default.block_rows == 200          # DEFAULT_STREAM_BLOCK capped at m
+    explicit = O.make_oracle(X, y, method='stream', stream_block=64)
+    assert explicit.block_rows == 64
+
+
+def test_budget_sizing_is_layout_native():
+    """CSR sources size blocks by O(nnz_row), not the dense slab: with a
+    wide sparse matrix the same budget buys far more rows per block."""
+    m, n = 200, 4096
+    Xc = random_tfidf(m=m, n=n, nnz_per_row=8, seed=21)
+    y = np.random.default_rng(22).normal(size=m)
+    budget = 1e-4                                 # GiB
+    oc = O.StreamingOracle(Xc, y, memory_budget=budget)
+    od = O.StreamingOracle(Xc.to_dense(), y, memory_budget=budget)
+    assert od.block_rows < oc.block_rows          # dense slab >> 12*nnz_row
+    src = as_row_block_source(Xc)
+    assert src.row_bytes() == 12 * 8              # f64 data + int32 idx
+    assert as_row_block_source(Xc.to_dense()).row_bytes() == 4 * n
+
+
+def test_degenerate_budget_warns():
+    """A budget that cannot even hold the O(m) vectors warns and degrades
+    to 1-row blocks instead of silently hanging-by-a-thousand-fetches."""
+    X, y, _ = _case(m=200, n=10)
+    with pytest.warns(RuntimeWarning, match='mandatory O\\(m\\)'):
+        o = O.StreamingOracle(X, y, memory_budget=1e-9)
+    assert o.block_rows == 1
+    # an explicit stream_block sidesteps the auto sizing entirely
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter('error')
+        o2 = O.StreamingOracle(X, y, block_rows=64, memory_budget=1e-9)
+    assert o2.block_rows == 64
+
+
+def test_ranksvm_memory_capped_smoke():
+    """The CI fast-job smoke: a memory_budget below the projected fused
+    residency (but above the O(m) vector overhead, so block sizing runs
+    its REPRESENTATIVE path, not the degenerate 1-row fallback) forces
+    the streaming path through RankSVM(method='auto') and training still
+    converges on the device driver."""
+    import warnings as _w
+    rng = np.random.default_rng(12)
+    m, n = 2000, 16
+    X = rng.normal(size=(m, n))
+    y = X @ rng.normal(size=n) + 0.1 * rng.normal(size=m)
+    budget = 6e-5                # GiB: overhead ~4.5e-5 < budget < ~1.2e-4
+    assert 6 * 4 * m / 2**30 < budget < projected_resident_gib(X)
+    with _w.catch_warnings():
+        _w.simplefilter('error')             # no degenerate-budget warning
+        svm = RankSVM(method='auto', memory_budget=budget, lam=1e-2,
+                      eps=1e-2, max_iter=100)
+        svm.fit(X, y)
+    assert isinstance(svm.oracle_, O.StreamingOracle)
+    assert 1 < svm.oracle_.block_rows < m    # budget-derived, non-trivial
+    assert svm.report_.converged
+    assert svm.oracle_.block_resident_bytes() < budget * 2**30
+    # and the fit is actually good
+    assert svm.ranking_error(X, y) < 0.1
+
+
+def test_streaming_oracle_is_collectable_after_device_fit():
+    """Regression: step_fn must close over locals, not bound methods — a
+    captured bound method would let bmrm's weak-keyed chunk cache pin the
+    oracle (and its feature source) alive forever."""
+    import gc
+    import weakref
+    X, y, _ = _case(m=60, n=5, seed=14)
+    so = O.StreamingOracle(X, y, block_rows=16)
+    bmrm(so, lam=1e-2, eps=1e-2, solver='device', max_iter=30)
+    ref = weakref.ref(so)
+    del so
+    gc.collect()
+    assert ref() is None
+
+
+# ------------------------------------------------- block validation
+
+
+@pytest.mark.parametrize('bad', [0, -3, 2.5, True, 'x', None])
+def test_validate_block_rows_rejects(bad):
+    with pytest.raises(ValueError, match='block'):
+        _validate_block_rows(bad, 'block')
+
+
+def test_oracle_block_params_validated():
+    X, y, _ = _case(m=40, n=4)
+    g = np.zeros(40, np.int32)
+    with pytest.raises(ValueError, match='positive'):
+        O.PairwiseOracle(X, y, block=0)
+    with pytest.raises(ValueError, match='fractional'):
+        O.PairwiseOracle(X, y, block=7.5)
+    with pytest.raises(ValueError, match='positive'):
+        O.GroupedOracle(X, y, g, inner='pairs', block=-2)
+    with pytest.raises(ValueError, match='positive'):
+        O.StreamingOracle(X, y, block_rows=0)
+    with pytest.raises(ValueError, match='positive'):
+        RankSVM(pair_block=0)
+    with pytest.raises(ValueError, match='fractional'):
+        RankSVM(stream_block=3.5)
+    # whole-valued floats are accepted (np ints too)
+    assert O.StreamingOracle(X, y, block_rows=np.int64(8)).block_rows == 8
+
+
+# ------------------------------------------------------- large-m (slow)
+
+
+@pytest.mark.slow
+def test_streaming_beyond_fused_budget(tmp_path):
+    """End-to-end fit at an m whose projected fused residency exceeds the
+    test budget: the auto dispatch streams, peak feature residency is one
+    block, and training converges (the acceptance-criteria scenario at
+    test scale)."""
+    rng = np.random.default_rng(13)
+    m, n = 120_000, 64
+    path = tmp_path / 'big.f32'
+    wstar = rng.normal(size=n)
+    mm = np.memmap(path, mode='w+', dtype=np.float32, shape=(m, n))
+    y = np.empty(m, np.float64)
+    for lo in range(0, m, 20_000):                # build it block-wise too
+        hi = lo + 20_000
+        blk = rng.normal(size=(hi - lo, n)).astype(np.float32)
+        mm[lo:hi] = blk
+        y[lo:hi] = blk @ wstar + 0.3 * rng.normal(size=hi - lo)
+    mm.flush()
+    X = np.memmap(path, mode='r', dtype=np.float32, shape=(m, n))
+
+    budget = 0.01                                  # GiB; fused needs ~0.029
+    assert projected_resident_gib(X) > budget
+    svm = RankSVM(method='auto', memory_budget=budget, lam=1e-3, eps=1e-2,
+                  max_iter=60)
+    svm.fit(X, y)
+    assert isinstance(svm.oracle_, O.StreamingOracle)
+    assert svm.oracle_.block_resident_bytes() <= budget * 2**30
+    assert svm.report_.converged
+    assert svm.ranking_error(np.asarray(X[:4000]), y[:4000]) < 0.05

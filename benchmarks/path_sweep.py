@@ -1,0 +1,110 @@
+"""Regularization-path sweep benchmark: batched (vmap) vs sequential-warm
+vs independent cold fits.
+
+The PR-5 tentpole claim to verify: since lambda enters the jitted
+`bundle_step` as a traced scalar, `bmrm_path(mode='vmap')` trains all K
+lambdas of a path as ONE batched device program (a (K, ...)-leading
+`BundleState`, per-lambda done masks). The trade against the sequential
+warm-started sweep is structural:
+
+  * vmap buys device parallelism across lambdas (one batched matvec/sort
+    instead of K small ones) and pays K-fold state memory plus lockstep
+    iteration count — every lambda steps until the SLOWEST converges
+    (converged slices are frozen no-ops, but their slots still compute).
+  * sequential-warm buys plane reuse (later lambdas start from a tight
+    risk model, ~3x fewer iterations on this container, PR 2) and pays one
+    host sync chain per lambda.
+
+So vmap should win where the per-step device program is dispatch/latency
+bound (small m, parallel-friendly backend) and lose where warm-start
+iteration savings dominate (large K over a wide lambda range, serial CPU
+backend). The CSV records whichever way it lands (EXPERIMENTS §Path
+sweep).
+
+Reported per (m, K): wall seconds for the three strategies (compile
+excluded: caches warmed by a first run), total BMRM iterations, and the
+max vmap-vs-sequential relative objective difference. On this wide grid
+(K up to 16, lambdas down to 1e-4) that diff reaches ~2e-3 — both
+sweeps terminate at gap < eps = 1e-3, so their objectives may legally
+sit anywhere inside each other's eps-envelope; the per-lambda 1e-3
+acceptance bar is asserted on its own grids in tests/test_path_sweep.py.
+
+    PYTHONPATH=src python -m benchmarks.path_sweep [--full]
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.bmrm import bmrm, bmrm_path
+from repro.core.oracle import make_oracle
+from repro.data import cadata_like
+
+from .common import Reporter, timeit
+
+EPS, MAX_ITER = 1e-3, 400
+
+
+def _lam_grid(k: int) -> list:
+    """K lambdas log-spaced over the model-selection range [1e-4, 1e-1]."""
+    return list(np.logspace(-1, -4, k))
+
+
+def _sweep_stats(oracle, lams, mode):
+    res = bmrm_path(oracle, lams, mode=mode, eps=EPS, max_iter=MAX_ITER)
+    its = sum(r.stats.iterations for r in res)
+    objs = [r.stats.obj_best for r in res]
+    conv = all(r.stats.converged for r in res)
+    return its, objs, conv
+
+
+def _row(rep, m, X, y, k):
+    lams = _lam_grid(k)
+    oracle = make_oracle(X, y, method='tree')
+
+    def cold():
+        return [bmrm(oracle, lam=lam, eps=EPS, solver='device',
+                     max_iter=MAX_ITER) for lam in lams]
+
+    def seq():
+        return bmrm_path(oracle, lams, mode='sequential', eps=EPS,
+                         max_iter=MAX_ITER)
+
+    def vmap():
+        return bmrm_path(oracle, lams, mode='vmap', eps=EPS,
+                         max_iter=MAX_ITER)
+
+    for fn in (cold, seq, vmap):       # compile + warm every chunk length
+        fn()
+    cold_s = timeit(cold, repeats=3, warmup=0)
+    seq_s = timeit(seq, repeats=3, warmup=0)
+    vmap_s = timeit(vmap, repeats=3, warmup=0)
+
+    cold_res = cold()
+    cold_it = sum(r.stats.iterations for r in cold_res)
+    seq_it, seq_obj, seq_conv = _sweep_stats(oracle, lams, 'sequential')
+    vmap_it, vmap_obj, vmap_conv = _sweep_stats(oracle, lams, 'vmap')
+    rel = max(abs(a - b) / max(abs(b), 1e-12)
+              for a, b in zip(vmap_obj, seq_obj))
+    rep.row(m, k, round(cold_s, 4), round(seq_s, 4), round(vmap_s, 4),
+            round(cold_s / vmap_s, 2), round(seq_s / vmap_s, 2),
+            cold_it, seq_it, vmap_it, format(rel, '.2e'),
+            int(seq_conv), int(vmap_conv))
+
+
+def main(full: bool = False):
+    rep = Reporter('path_sweep',
+                   ['m', 'K', 'cold_s', 'seq_s', 'vmap_s', 'cold_over_vmap',
+                    'seq_over_vmap', 'cold_it', 'seq_it', 'vmap_it',
+                    'vmap_seq_obj_rel_diff', 'seq_conv', 'vmap_conv'])
+    sizes = [500, 2000] + ([8000] if full else [])
+    cad = cadata_like(m=max(sizes), m_test=10)
+    for m in sizes:
+        for k in (4, 8, 16):
+            _row(rep, m, cad.X[:m], cad.y[:m], k)
+    return rep
+
+
+if __name__ == '__main__':
+    import sys
+    main(full='--full' in sys.argv).save()

@@ -1,15 +1,18 @@
-"""Regularization-path sweep with warm-started bundle state.
+"""Regularization-path sweep: sequential warm-started vs batched vmap.
 
     PYTHONPATH=src python examples/regularization_path.py
 
-Model selection for RankSVM means scanning lambda — and with the
-device-resident BMRM driver the scan is much cheaper than independent
-fits: `RankSVM.path` keeps the cutting-plane buffer (the bundle's model of
-R_emp) across lambda values. Planes are lower bounds on R_emp regardless
-of lambda, so each next fit starts from an already-tight risk model and
-typically needs a fraction of the cold-start iterations. One compiled
-bundle-step program serves every lambda (lambda enters the jitted step as
-a traced scalar).
+Model selection for RankSVM means scanning lambda. `RankSVM.path` offers
+two executions of the scan (DESIGN.md §7): mode='sequential' keeps the
+cutting-plane buffer (the bundle's model of R_emp) across lambda values —
+planes are lower bounds on R_emp regardless of lambda, so each next fit
+starts from an already-tight risk model and typically needs a fraction of
+the cold-start iterations — and mode='vmap' batches ALL lambdas into one
+device program over a (K, ...)-leading bundle state. Either way one
+compiled bundle-step program serves every lambda (lambda enters the
+jitted step as a traced scalar). On a serial CPU backend sequential wins
+(EXPERIMENTS §Path sweep); on parallel accelerator backends the batched
+program is the one that keeps the device busy.
 
 Picks the best lambda by held-out pairwise ranking error (paper eq. 1).
 """
@@ -33,9 +36,14 @@ def main():
 
     svm = RankSVM(eps=1e-3, method='tree', solver='device')
     t0 = time.perf_counter()
-    points = svm.path(data.X, data.y, lams)
+    points = svm.path(data.X, data.y, lams, mode='sequential')
     warm_s = time.perf_counter() - t0
     warm_iters = sum(p.report.iterations for p in points)
+
+    t0 = time.perf_counter()
+    vmap_points = svm.path(data.X, data.y, lams, mode='vmap')
+    vmap_s = time.perf_counter() - t0
+    vmap_iters = sum(p.report.iterations for p in vmap_points)
 
     best = None
     for p in points:
@@ -57,6 +65,8 @@ def main():
     cold_s = time.perf_counter() - t0
 
     print(f'warm path : {warm_iters} total BMRM iterations in {warm_s:.2f}s')
+    print(f'vmap path : {vmap_iters} total BMRM iterations in {vmap_s:.2f}s'
+          ' (one batched program; includes its compile)')
     print(f'cold fits : {cold_iters} total BMRM iterations in {cold_s:.2f}s')
     p, err = best
     print(f'selected lam={p.lam:g} (held-out ranking error {err:.4f}); '

@@ -44,9 +44,26 @@ noise floor; else it falls back to host.
 
 The fixed-capacity `BundleState` is also the unit of warm-starting:
 `bmrm(..., state=prev.state)` re-enters the driver with the previous run's
-cutting planes, which `RankSVM.path` uses to sweep a regularization path —
+cutting planes, which the sequential regularization-path sweep uses —
 the planes under-estimate R_emp independently of lam, so they stay valid
 cuts when lam changes and only the scalar statistics reset.
+
+**Batched path sweep** (`bmrm_path`, DESIGN.md §7): since lam enters the
+jitted `bundle_step` only as a traced scalar, a whole regularization path
+can run as ONE device program — `bmrm_path(oracle, lams, mode='vmap')`
+carries a (K, ...)-leading `BundleState` (one slice per lambda) through
+the same chunked `lax.scan`, vmapping the fused oracle step and the
+masked FISTA QP over the lambda axis. Each lambda keeps its own
+convergence gap and done flag; a converged lambda's state is frozen by a
+per-lambda done mask (its slice stops changing — a no-op, not a barrier)
+and the chunk loop exits when every lambda is done. `mode='sequential'`
+is the warm-started loop described above; `mode='auto'` picks vmap for
+oracles that support it (`supports_path_vmap`) on accelerator backends
+when the projected K-scaled state fits `memory_budget` — the serial CPU
+backend measures 2-8x slower batched (EXPERIMENTS §Path sweep) and
+stays sequential, and an over-budget projection falls back to
+sequential with a loud warning (the K·n plane-buffer memory trade is
+real: `path_state_gib`).
 """
 
 from __future__ import annotations
@@ -105,6 +122,11 @@ class BMRMStats:
     # steady-state numbers.
     qp_seconds: list      # host driver only; fused into the step on device
     solver: str = 'host'
+    seconds: float = float('nan')  # wall-clock of the fit; filled by
+    # `bmrm_path` (for mode='vmap' each lambda gets its share of the one
+    # joint program: every batched step's wall splits evenly over the
+    # lambdas active in it, so seconds == sum(oracle_seconds) and the
+    # per-lambda values sum to ~the sweep's wall-clock)
 
 
 @dataclasses.dataclass
@@ -131,12 +153,19 @@ def bmrm(loss_and_subgrad: Union[Callable, object],
          state: 'BundleState | None' = None) -> BMRMResult:
     """Minimize R_emp(w) + lam ||w||^2 by cutting planes.
 
+    One lambda per call; `bmrm_path` sweeps a whole regularization path
+    (sequentially warm-started or as one batched vmapped program).
+
     Args:
       loss_and_subgrad: w -> (R_emp(w), subgradient of R_emp at w), or a
         RankOracle (anything exposing `.loss_and_subgrad` and `.n`).
       dim: dimensionality of w; defaults to `oracle.n` for RankOracles.
-      lam: regularization constant (the paper's lambda).
-      eps: termination gap (paper uses 1e-3, SVM^rank's default).
+      lam: regularization constant (the paper's lambda), default 1e-3.
+      eps: termination gap (default 1e-3, the paper's/SVM^rank's).
+        Below F32_EPS_FLOOR = 1e-5 the f32 device bundle state's
+        ~1e-6-relative noise floor can stall the gap: solver='auto'
+        falls back to the float64 host driver there, and an explicit
+        solver='device' warns.
       max_iter: iteration cap (the device driver rounds up to a whole
         number of `sync_every`-sized chunks).
       w0: optional warm start.
@@ -357,7 +386,7 @@ def init_bundle_state(dim: int, max_planes: int,
         gap=jnp.asarray(np.inf, f32), done=jnp.asarray(False))
 
 
-def bundle_state_shardings(mesh) -> BundleState:
+def bundle_state_shardings(mesh, batched: bool = False) -> BundleState:
     """Sharding annotations for a `BundleState` living on `mesh` (the
     sharded-oracle pod path, DESIGN.md §5).
 
@@ -368,11 +397,19 @@ def bundle_state_shardings(mesh) -> BundleState:
     — offsets, Gram, dual, scalars — plus the iterates w / w_best is
     replicated: the QP is K-sized host-scale math that every device
     redundantly computes faster than it could communicate about it.
+
+    With `batched=True` the annotations describe the (n_lams, ...)-leading
+    state of the batched path sweep (`bmrm_path(mode='vmap')`, DESIGN.md
+    §7): the lambda axis is replicated (each device carries every lambda's
+    slice of its feature shard), so only the plane buffer's spec changes —
+    P(None, None, 'model') — and `PartitionSpec()` annotations stay valid
+    for the extra leading axis as-is.
     """
     rep = NamedSharding(mesh, P())
+    a_spec = P(None, None, 'model') if batched else P(None, 'model')
     return BundleState(
         w=rep, w_best=rep, j_best=rep,
-        A=NamedSharding(mesh, P(None, 'model')), b=rep, G=rep, alpha=rep,
+        A=NamedSharding(mesh, a_spec), b=rep, G=rep, alpha=rep,
         n_active=rep, gap=rep, done=rep)
 
 
@@ -473,10 +510,15 @@ def _device_chunk(oracle, max_planes: int, sync_every: int, qp_iters: int):
     return per[key]
 
 
-def _oracle_state_shardings(oracle):
-    """BundleState shardings for mesh oracles (None for single-device)."""
+def _oracle_state_shardings(oracle, batched: bool = False):
+    """BundleState shardings for mesh oracles (None for single-device).
+
+    `batched=True` asks for the (n_lams, ...)-leading annotations of the
+    vmapped path sweep (see `bundle_state_shardings`)."""
     fn = getattr(oracle, 'state_shardings', None)
-    return fn() if callable(fn) else None
+    if not callable(fn):
+        return None
+    return fn(batched=True) if batched else fn()
 
 
 def _next_sync_every(gaps: np.ndarray, eps: float, cur: int) -> int:
@@ -566,3 +608,353 @@ def _bmrm_device(oracle, dim, lam, eps, max_iter, w0, max_planes, callback,
     stats.gap = float(state.gap)
     return BMRMResult(w=np.asarray(state.w_best, np.float64), stats=stats,
                       state=state)
+
+
+# ------------------------------------------------------ batched path sweep
+
+
+PATH_MODES = ('vmap', 'sequential', 'auto')
+
+
+def _validate_path_mode(mode: str) -> str:
+    """The one mode check both `bmrm_path` and `RankSVM.path` run —
+    the estimator calls it BEFORE building its (possibly expensive)
+    oracle, so a typo'd mode fails in microseconds, not after a sharded
+    bf16 densify/transfer."""
+    if mode not in PATH_MODES:
+        raise ValueError(f'unknown path mode {mode!r}; expected one of '
+                         f'{PATH_MODES}')
+    return mode
+
+
+def _validate_lams(lams) -> list:
+    """Regularization-path lambdas as a validated list of floats.
+
+    Any order (including unsorted or duplicated values) is accepted — the
+    vmap driver treats lambdas independently, and the sequential driver's
+    warm-started planes are valid cuts for ANY lambda — but every value
+    must be a finite positive float: lambda divides the master-problem
+    update w = -A'alpha / (2 lam), so 0/inf/NaN would silently poison the
+    whole sweep.
+    """
+    try:
+        lams = [float(lam) for lam in np.asarray(lams).ravel()]
+    except (TypeError, ValueError) as e:
+        raise ValueError(f'path lambdas must be real numbers; got {lams!r}'
+                         ) from e
+    if not lams:
+        raise ValueError('a regularization path needs at least one lambda')
+    tiny = float(np.finfo(np.float32).tiny)      # smallest NORMAL f32
+    bad = [lam for lam in lams if not math.isfinite(lam) or lam <= 0.0
+           or not tiny <= float(np.float32(lam)) < math.inf]
+    if bad:
+        raise ValueError(
+            f'path lambdas must be finite, > 0, and a normal float32 (in '
+            f'[{tiny:.3g}, ~3.4e38]) — the device drivers compute in f32 '
+            f'— got {bad}: lambda scales 1/(2 lam) in the master problem, '
+            'so a value that is zero/non-finite, overflows the f32 cast, '
+            'or lands subnormal (reciprocal overflows; TPUs flush '
+            'subnormals to zero) poisons every iterate')
+    return lams
+
+
+def path_state_gib(n_lams: int, dim: int, max_planes: int | None = None,
+                   m: int = 0) -> float:
+    """Projected resident GiB of the batched (vmap) path sweep.
+
+    The memory model behind `bmrm_path(mode='auto')`'s vmap-vs-sequential
+    guard (the batched analogue of `data.rowblocks.projected_resident_gib`):
+    each of the K = `n_lams` lambdas carries its own f32 `BundleState` —
+    the (max_planes, dim) plane buffer dominates — plus roughly the fused
+    oracle step's O(m) per-example working set (score vector, count
+    coefficients and their sort temporaries, ~8 f32 values per example).
+    Shared, lambda-independent residency (the feature matrix itself) is
+    NOT included: it is identical across path modes. Estimates assume the
+    single-device layout; on a mesh the plane buffer is column-sharded so
+    the per-device number is smaller.
+    """
+    planes = int(max_planes) if max_planes is not None else DEFAULT_MAX_PLANES
+    per_lam = 4.0 * (planes * dim         # plane buffer A
+                     + 2 * dim            # w, w_best
+                     + planes * planes    # Gram
+                     + 3 * planes + 8     # b, alpha, masks, scalars
+                     + 8 * m)             # oracle-step per-example work set
+    return int(n_lams) * per_lam / 2**30
+
+
+def init_path_state(dim: int, max_planes: int, n_lams: int,
+                    w0=None) -> BundleState:
+    """A (n_lams, ...)-leading `BundleState`: slice k along the first axis
+    of every leaf is lambda k's independent bundle state (all start cold
+    from the shared w0)."""
+    s = init_bundle_state(dim, max_planes, w0)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (int(n_lams),) + x.shape), s)
+
+
+def _bundle_step_masked(s: BundleState, step_fn, lam, eps, qp_iters: int):
+    """One per-lambda bundle step with the done-mask freeze: a converged
+    lambda's state passes through unchanged (no new plane, no QP result,
+    no statistics drift), so under vmap it is a no-op — never a barrier
+    for the still-running lambdas. Returns (state, loss-or-NaN, active)."""
+    s2, r = _bundle_step(s, step_fn, lam, eps, qp_iters)
+    frozen = jax.tree_util.tree_map(
+        lambda new, old: jnp.where(s.done, old, new), s2, s)
+    return (frozen, jnp.where(s.done, jnp.asarray(np.nan, f32), r),
+            jnp.logical_not(s.done))
+
+
+def _path_chunk(oracle, n_lams: int, max_planes: int, sync_every: int,
+                qp_iters: int):
+    """Compiled `sync_every`-step chunk of the BATCHED path sweep: the
+    vmapped analogue of `_device_chunk`, carrying the (n_lams, ...) state.
+    Cached per oracle alongside the scalar chunks (disjoint keys)."""
+    try:
+        per = _CHUNK_CACHE.setdefault(oracle, {})
+    except TypeError:              # non-weakrefable oracle: build uncached
+        per = {}
+    key = ('path', n_lams, max_planes, sync_every, qp_iters)
+    if key not in per:
+        step_fn = oracle.step_fn()
+
+        def chunk(state: BundleState, lams, eps):
+            def body(s, _):
+                def run(s):
+                    s2, r, act = jax.vmap(
+                        lambda sk, lamk: _bundle_step_masked(
+                            sk, step_fn, lamk, eps, qp_iters))(s, lams)
+                    return s2, (r, s2.gap, act)
+
+                def skip(s):
+                    return s, (jnp.full((n_lams,), np.nan, f32), s.gap,
+                               jnp.zeros((n_lams,), bool))
+
+                # Scalar predicate (ALL lambdas done) -> a real cond: the
+                # per-lambda freeze happens inside the vmapped step.
+                return jax.lax.cond(jnp.all(s.done), skip, run, s)
+
+            return jax.lax.scan(body, state, None, length=sync_every)
+
+        sh = _oracle_state_shardings(oracle, batched=True)
+        if sh is None:
+            per[key] = jax.jit(chunk)
+        else:
+            rep = NamedSharding(sh.A.mesh, P())
+            per[key] = jax.jit(chunk, in_shardings=(sh, rep, rep),
+                               out_shardings=(sh, (rep, rep, rep)))
+    return per[key]
+
+
+def _bmrm_path_vmap(oracle, lams, dim, eps, max_iter, w0, max_planes,
+                    sync_every, qp_iters, callback) -> 'list[BMRMResult]':
+    """The batched path driver: ONE device program sweeps every lambda.
+
+    The (K, ...)-leading `BundleState` runs through the same chunked
+    `lax.scan` as `_bmrm_device`, with `_bundle_step` and the masked FISTA
+    QP vmapped over the lambda axis. Per-lambda done flags freeze converged
+    slices; the host loop exits when all K are done (or the shared step
+    count hits max_iter — lambdas advance in lockstep, so the cap is per
+    lambda and global at once).
+    """
+    K = int(max_planes) if max_planes is not None else DEFAULT_MAX_PLANES
+    n_lams = len(lams)
+    auto_sync = sync_every == 'auto'
+    cur_sync = AUTO_SYNC_INIT if auto_sync else max(1, int(sync_every))
+
+    state = init_path_state(dim, K, n_lams, w0)
+    sh = _oracle_state_shardings(oracle, batched=True)
+    if sh is not None:
+        state = jax.device_put(state, sh)
+    lams_d = jnp.asarray(lams, f32)
+    eps_d = jnp.asarray(eps, f32)
+
+    iters = np.zeros(n_lams, np.int64)
+    loss_hist = [[] for _ in range(n_lams)]
+    gap_hist = [[] for _ in range(n_lams)]
+    secs = [[] for _ in range(n_lams)]
+    steps_total = 0
+    chunks: dict = {}
+    while True:
+        chunk = chunks.get(cur_sync)
+        if chunk is None:
+            chunk = _path_chunk(oracle, n_lams, K, cur_sync, qp_iters)
+            chunks[cur_sync] = chunk
+        t0 = time.perf_counter()
+        state, (losses, gaps, acts) = chunk(state, lams_d, eps_d)
+        acts = np.asarray(acts)                     # (sync, K) — the sync
+        dt = time.perf_counter() - t0
+        losses = np.asarray(losses, np.float64)
+        gaps_np = np.asarray(gaps, np.float64)
+        ran = acts.any(axis=1)                      # batched steps that ran
+        steps = int(ran.sum())
+        steps_total += steps
+        # Per-lambda time attribution: each batched step's wall is split
+        # evenly over the lambdas ACTIVE in it, so per-lambda seconds sum
+        # to ~the program's wall across the sweep (stats.seconds below is
+        # exactly sum(oracle_seconds), keeping FitReport arithmetic
+        # consistent: seconds == iterations * oracle_seconds_mean).
+        n_active = acts.sum(axis=1)
+        step_wall = dt / max(steps, 1)
+        for k in range(n_lams):
+            on = acts[:, k]
+            nk = int(on.sum())
+            if nk:
+                iters[k] += nk
+                loss_hist[k].extend(losses[on, k])
+                gap_hist[k].extend(gaps_np[on, k])
+                secs[k].extend(step_wall / n_active[on])
+        if callback is not None:
+            callback(steps_total, state.w, np.asarray(state.j_best),
+                     np.asarray(state.gap))
+        if bool(np.all(np.asarray(state.done))) or steps_total >= max_iter:
+            break
+        if auto_sync:
+            # Tune on the slowest lambda: ALL-done is the exit condition,
+            # so the max active gap governs the remaining work.
+            act_gaps = np.where(acts[ran], gaps_np[ran], -np.inf)
+            cur_sync = _next_sync_every(act_gaps.max(axis=1), eps, cur_sync)
+
+    done = np.asarray(state.done)
+    j_best = np.asarray(state.j_best, np.float64)
+    gap = np.asarray(state.gap, np.float64)
+    w_best = np.asarray(state.w_best, np.float64)
+    results = []
+    for k in range(n_lams):
+        stats = BMRMStats(
+            iterations=int(iters[k]), converged=bool(done[k]),
+            obj_best=float(j_best[k]), gap=float(gap[k]),
+            loss_history=loss_hist[k], gap_history=gap_hist[k],
+            oracle_seconds=secs[k], qp_seconds=[], solver='vmap',
+            seconds=float(np.sum(secs[k])))
+        state_k = jax.tree_util.tree_map(lambda x, k=k: x[k], state)
+        results.append(BMRMResult(w=w_best[k], stats=stats, state=state_k))
+    return results
+
+
+def bmrm_path(oracle, lams, *, mode: str = 'auto', eps: float = 1e-3,
+              max_iter: int = 1000, w0: np.ndarray | None = None,
+              max_planes: int | None = None, solver: str = 'auto',
+              sync_every: 'int | str' = 8, qp_iters: int = 128,
+              memory_budget: float | None = None,
+              callback: Callable | None = None) -> 'list[BMRMResult]':
+    """Sweep a regularization path over `lams`; one BMRMResult per lambda.
+
+    Args:
+      oracle: a RankOracle (`core.oracle.make_oracle`). Bare callables are
+        not accepted here — use `bmrm` per lambda.
+      lams: lambda values, any order; each must be finite and > 0
+        (`_validate_lams`). Duplicates are allowed.
+      mode: 'vmap' | 'sequential' | 'auto' —
+        * 'vmap': ONE batched device program trains all K lambdas
+          simultaneously over a (K, ...)-leading `BundleState` (DESIGN.md
+          §7). Requires an oracle whose traced step batches
+          (`supports_path_vmap`: the fused and sharded oracles; the
+          streaming oracle's pure_callback fetches do not vmap).
+        * 'sequential': one fit per lambda in order, warm-starting each
+          from the previous (bundle state on the device driver, w0 on the
+          host driver).
+        * 'auto' (default): vmap when the oracle supports it, the
+          configured `solver` allows the device driver, eps is at or above
+          the f32 floor, the backend is not the serial CPU (where the
+          batched sweep measures 2-8x slower than sequential-warm,
+          EXPERIMENTS §Path sweep), AND the projected batched state fits
+          `memory_budget` (`path_state_gib`); else sequential. The
+          memory fallback warns loudly.
+      eps: termination gap per lambda, as in `bmrm` (f32 floor included).
+      max_iter: as in `bmrm`; in vmap mode lambdas advance in lockstep,
+        so this caps each lambda's (equal) step count.
+      w0: optional shared warm-start iterate, as in `bmrm` (vmap mode:
+        every lambda's slice starts from it).
+      max_planes: per-lambda bundle capacity, as in `bmrm`; the vmap
+        state scales as n_lams * max_planes * n floats.
+      solver: as in `bmrm` for the sequential fits; for mode resolution
+        'host' forces sequential (the batched driver is device-only).
+      sync_every: fused steps per host sync, as in `bmrm` ('auto' tunes
+        on the slowest active lambda's gap decay in vmap mode).
+      qp_iters: fixed FISTA iterations of the on-device QP, as in `bmrm`.
+      memory_budget: GiB the batched sweep may add in per-lambda state
+        (same unit as `RankSVM(memory_budget=)`). Exceeding it falls back
+        to sequential with a RuntimeWarning — even under mode='vmap', on
+        the grounds that an explicit budget outranks an explicit mode
+        (pass memory_budget=None to force vmap regardless).
+      callback: per-sync callback. Sequential: forwarded to each `bmrm`
+        call unchanged. vmap: called as callback(total_steps, W, J, G)
+        with (K, ...)-shaped batched values.
+    """
+    _validate_path_mode(mode)
+    if solver not in SOLVERS:
+        # Validate up front: the vmap branch never reaches bmrm()'s own
+        # check, and a typo'd solver must not silently resolve to vmap.
+        raise ValueError(f'unknown solver {solver!r}; expected one of '
+                         f'{SOLVERS}')
+    if not hasattr(oracle, 'loss_and_subgrad'):
+        raise ValueError('bmrm_path needs a RankOracle (make_oracle); for '
+                         'bare callables run bmrm once per lambda')
+    lams = _validate_lams(lams)
+    dim = int(oracle.n)
+    batchable = bool(getattr(oracle, 'supports_path_vmap', False))
+
+    if mode == 'vmap':
+        if not batchable:
+            raise ValueError(
+                f"mode='vmap' needs an oracle whose traced step batches "
+                f'over lambda (supports_path_vmap); {type(oracle).__name__}'
+                ' does not — the streaming oracle pulls host row blocks '
+                'through pure_callback, which cannot vmap. Use '
+                "mode='sequential' (or 'auto')")
+        if solver == 'host':
+            raise ValueError("mode='vmap' is a device-driver program; it "
+                             "cannot run under solver='host' — pass "
+                             "solver='auto'/'device' or mode='sequential'")
+        if eps < F32_EPS_FLOOR:
+            # Same semantics as an explicit solver='device' below the
+            # floor: honor the explicit mode, but say why it may never
+            # converge (mode='auto' falls back to sequential instead).
+            warnings.warn(
+                f'eps={eps:g} is below the f32 noise floor of the batched '
+                'bundle state; per-lambda gaps may stall above it and the '
+                'lockstep sweep would then spin to max_iter — use '
+                f"mode='sequential' for eps < {F32_EPS_FLOOR:g}",
+                RuntimeWarning, stacklevel=2)
+    # Measured backend exception (EXPERIMENTS §Path sweep, the path-mode
+    # analogue of the oracle layer's csr_rmatvec rule): on the serial CPU
+    # backend the batched sweep loses 2-8x to sequential-warm — no
+    # parallel width to exploit, warm starts forfeited — so 'auto' keeps
+    # CPU on the sequential sweep; an explicit mode='vmap' still batches.
+    cpu_backend = jax.default_backend() == 'cpu'
+    use_vmap = mode == 'vmap' or (
+        mode == 'auto' and batchable and solver != 'host'
+        and getattr(oracle, 'prefer_device_solver', True)
+        and eps >= F32_EPS_FLOOR and not cpu_backend)
+    if use_vmap and memory_budget is not None:
+        projected = path_state_gib(len(lams), dim, max_planes,
+                                   m=int(getattr(oracle, 'm', 0)))
+        if projected > float(memory_budget):
+            warnings.warn(
+                f'batched path sweep over {len(lams)} lambdas projects '
+                f'~{projected:.3g} GiB of per-lambda bundle state + oracle '
+                f'working set (path_state_gib), over the '
+                f'{float(memory_budget):g} GiB memory_budget — falling '
+                'back to the sequential warm-started sweep. Raise the '
+                'budget, lower max_planes, or split the lambda grid to '
+                'batch it.', RuntimeWarning, stacklevel=2)
+            use_vmap = False
+
+    if use_vmap:
+        return _bmrm_path_vmap(oracle, lams, dim=dim, eps=eps,
+                               max_iter=max_iter, w0=w0,
+                               max_planes=max_planes, sync_every=sync_every,
+                               qp_iters=qp_iters, callback=callback)
+
+    results = []
+    state, w_prev = None, w0
+    for lam in lams:
+        t0 = time.perf_counter()
+        res = bmrm(oracle, lam=lam, eps=eps, max_iter=max_iter, w0=w_prev,
+                   max_planes=max_planes, callback=callback, solver=solver,
+                   sync_every=sync_every, qp_iters=qp_iters, state=state)
+        res.stats.seconds = time.perf_counter() - t0
+        state = res.state            # None on the host driver
+        w_prev = res.w
+        results.append(res)
+    return results

@@ -71,6 +71,13 @@ class RankOracle:
         layout/backend. False e.g. for CSR features whose transpose-matvec
         dispatches to the host kernel (DESIGN.md §4): the device driver
         would force the slower on-device scatter.
+      supports_path_vmap: True when `step_fn` is vmappable over the iterate
+        w, so `bmrm_path(mode='vmap')` can batch a whole regularization
+        path into one device program (DESIGN.md §7). True for the fused
+        and sharded oracles (pure traced jax); False for the streaming
+        oracle, whose `jax.pure_callback` block fetches have no batching
+        rule — path mode='auto' keeps it on the sequential warm-started
+        sweep.
       name: short identifier for reports/benchmarks.
     """
 
@@ -78,6 +85,7 @@ class RankOracle:
     device_resident = False
     supports_device_solver = False
     prefer_device_solver = False
+    supports_path_vmap = False
     m: int
     n: int
     n_pairs: int
@@ -313,6 +321,7 @@ class _FusedOracle(RankOracle):
 
     device_resident = True
     supports_device_solver = True
+    supports_path_vmap = True    # pure traced step: vmaps over w cleanly
     _engine = 'tree'
     _block = 0          # only meaningful for the blocked engine
 
@@ -502,6 +511,7 @@ class StreamingOracle(RankOracle):
     device_resident = False
     supports_device_solver = True
     prefer_device_solver = True
+    supports_path_vmap = False   # pure_callback fetches have no batch rule
 
     def __init__(self, X, y, groups=None, block_rows: int | None = None,
                  memory_budget: float | None = None):
@@ -634,6 +644,8 @@ class ShardedOracle(RankOracle):
     device_resident = True
     supports_device_solver = True
     prefer_device_solver = True
+    supports_path_vmap = True    # traced mesh body; vmap inserts a leading
+    # replicated lambda axis into its sharding constraints
 
     def __init__(self, X, y, groups=None, mesh: Mesh | None = None,
                  variant: str = 'base'):
@@ -714,10 +726,12 @@ class ShardedOracle(RankOracle):
 
         return fn
 
-    def state_shardings(self):
-        """BundleState annotations for bmrm's device driver on this mesh."""
+    def state_shardings(self, batched: bool = False):
+        """BundleState annotations for bmrm's device driver on this mesh
+        (`batched=True`: the (n_lams, ...)-leading layout of the vmapped
+        path sweep — see `core.bmrm.bundle_state_shardings`)."""
         from .bmrm import bundle_state_shardings
-        return bundle_state_shardings(self._mesh)
+        return bundle_state_shardings(self._mesh, batched=batched)
 
 
 def sharded_dryrun_cell(mesh: Mesh, shape=None, variant: str = 'base',
@@ -795,17 +809,37 @@ def make_oracle(X, y, groups=None, method: str = 'tree', *,
 
     Dispatch table (features-resident column is the memory model;
     `groups=` routes the first three through GroupedOracle with the same
-    engine, and works natively on 'sharded' and 'stream'):
+    engine, and works natively on 'sharded' and 'stream'. The path-sweep
+    column says what `RankSVM.path(mode='auto')` / `bmrm_path` resolves
+    to for that oracle — 'vmap' batches the whole lambda grid into one
+    device program, 'sequential' warm-starts fit-by-fit; see
+    `supports_path_vmap` and DESIGN.md §7):
 
       method     oracle            features resident        counts engine
+                                                            | path mode
       'tree'     TreeOracle        full X on device (f32)   merge-sort tree
+                                                            | vmap
       'pairs'    PairwiseOracle    full X on device (f32)   blocked O(m^2)
+                                                            | vmap
       'auto'     PairwiseOracle    full X on device (f32)   counts_auto
-                 or StreamingOracle — see budget rule below
+                 or StreamingOracle — see budget rule below  | per oracle
       'sharded'  ShardedOracle     X sharded over mesh      tree on the
                                    (bf16, dense)            gathered scores
+                                                            | vmap
       'stream'   StreamingOracle   ONE (block, n) f32 slab  tree, one global
                                    + O(m) vectors           pass
+                                                            | sequential
+                                                            (pure_callback
+                                                            cannot vmap)
+
+    (Two measured path-mode exceptions: CPU CSR inputs' fused oracles set
+    prefer_device_solver=False — host bincount beats XLA scatter there —
+    so path mode='auto' keeps them on the sequential host sweep; and on
+    the serial CPU backend mode='auto' runs EVERY oracle sequentially,
+    since the batched sweep measures 2-8x slower there — EXPERIMENTS
+    §Path sweep. 'vmap' in the column means "batches under mode='auto'
+    on accelerator backends, and under an explicit mode='vmap'
+    anywhere".)
 
     method='auto' resolves fused-vs-streaming by projected resident
     memory (`data.rowblocks.projected_resident_gib` — what a fused oracle

@@ -37,10 +37,17 @@ step; this module touches no counting internals. Both 'tree' and 'pairs'
 reach the same solution — the paper uses this parity as its Fig. 4 sanity
 check, reproduced in benchmarks/fig4_test_error.py.
 
-`RankSVM.path(X, y, lams)` sweeps a regularization path, reusing the
-device driver's fixed-capacity bundle state across lambda values (cutting
-planes under-estimate R_emp independently of lambda, so they remain valid
-cuts — later fits start from an already-tight model of the risk).
+`RankSVM.path(X, y, lams, mode=)` sweeps a regularization path
+(core.bmrm.bmrm_path): mode='vmap' batches ALL lambdas into one device
+program over a (K, ...)-leading bundle state (DESIGN.md §7);
+mode='sequential' fits one lambda at a time, reusing the device driver's
+fixed-capacity bundle state across lambda values (cutting planes
+under-estimate R_emp independently of lambda, so they remain valid cuts —
+later fits start from an already-tight model of the risk); mode='auto'
+(default) picks vmap for fused device-solver oracles on accelerator
+backends within the memory budget, sequential otherwise (the serial CPU
+backend stays sequential — measured 2-8x faster there, EXPERIMENTS
+§Path sweep).
 
 Feature matrices may be numpy arrays, repro.data.sparse.CSRMatrix, or
 scipy.sparse (CSR recommended); the matvecs X @ w and X.T @ v are the O(ms)
@@ -58,7 +65,8 @@ import jax.numpy as jnp
 
 from . import rank_loss as _rank_loss
 from ..data.rowblocks import _validate_block_rows as _validate_block
-from .bmrm import SOLVERS, bmrm
+from .bmrm import (SOLVERS, _validate_lams, _validate_path_mode, bmrm,
+                   bmrm_path)
 from .oracle import METHODS, make_oracle
 
 
@@ -92,25 +100,45 @@ class RankSVM:
     """Linear RankSVM trained with BMRM.
 
     Args:
-      lam: regularization weight lambda of J(w) = R_emp(w) + lam ||w||^2.
-        (SVM^rank-style C converts as C = 1 / (lam * N), see paper sec. 5.1.)
-      eps: BMRM termination gap (paper default 1e-3).
-      method: oracle selector — 'tree' | 'pairs' | 'auto' | 'sharded'
-        (see module docstring; core.oracle.make_oracle).
-      solver: BMRM driver — 'host' | 'device' | 'auto' (core.bmrm).
-      max_iter: BMRM iteration cap.
+      lam: regularization weight lambda of J(w) = R_emp(w) + lam ||w||^2
+        (default 1e-3). SVM^rank-style C converts as C = 1 / (lam * N),
+        see paper sec. 5.1. `path()` sweeps several lambdas in one call.
+      eps: BMRM termination gap (default 1e-3, the paper's/SVM^rank's).
+        The device driver keeps its bundle state in float32, whose
+        duality gap carries an ~1e-6-relative noise floor: below
+        eps = 1e-5 (`core.bmrm.F32_EPS_FLOOR`) solver='auto' falls back
+        to the float64 host driver, and an explicit solver='device'
+        warns that the gap may stall.
+      method: oracle selector — 'tree' | 'pairs' | 'auto' | 'sharded' |
+        'stream' (see module docstring; core.oracle.make_oracle holds the
+        full dispatch table).
+      solver: BMRM driver — 'host' | 'device' | 'auto' (default 'auto';
+        core.bmrm). 'auto' picks the fused device driver when the oracle
+        supports and prefers it and eps is at or above the f32 floor.
+      max_iter: BMRM iteration cap (default 1000). In `path(mode='vmap')`
+        lambdas advance in lockstep, so the cap applies to each lambda's
+        (equal) step count.
       max_planes: cutting-plane cap; for the device driver this is the
-        static bundle-buffer capacity (default core.bmrm.DEFAULT_MAX_PLANES).
-      sync_every: device driver: fused steps per host sync; 'auto' retunes
-        the chunk length from the observed gap-decay rate (core.bmrm).
+        static bundle-buffer capacity (default
+        core.bmrm.DEFAULT_MAX_PLANES = 64). Also the per-lambda buffer
+        capacity of the batched path sweep — its memory scales as
+        n_lams * max_planes * n floats (core.bmrm.path_state_gib).
+      sync_every: device driver: fused steps per host sync (default 8);
+        'auto' retunes the chunk length from the observed gap-decay rate
+        (core.bmrm).
       qp_iters: device driver: fixed FISTA iterations of the on-device
-        bundle dual solve.
-      pair_block: VMEM/cache block for the O(m^2) pairwise pass.
+        bundle dual solve (default 128).
+      pair_block: VMEM/cache block (rows) for the O(m^2) pairwise pass
+        (default 2048).
       mesh: optional jax Mesh for method='sharded' (defaults to all local
         devices on the 'data' axis).
-      memory_budget: GiB of feature residency the fused oracles may use;
-        method='auto' streams instead when the projected fused residency
-        exceeds it (core.oracle.make_oracle's dispatch heuristic).
+      memory_budget: GiB (float). Two dispatch decisions read it:
+        method='auto' streams instead of fusing when the projected fused
+        feature residency (`data.rowblocks.projected_resident_gib`)
+        exceeds it, and `path(mode='auto'|'vmap')` falls back to the
+        sequential sweep when the projected batched path state
+        (`core.bmrm.path_state_gib`) exceeds it. None (default) disables
+        both guards.
       stream_block: rows per block of the streaming oracle (default:
         budget-derived; core.oracle._auto_stream_block).
     """
@@ -167,30 +195,61 @@ class RankSVM:
         self.report_ = self._report(res, dt)
         return self
 
-    def path(self, X, y, lams, groups=None) -> list[PathPoint]:
-        """Fit a regularization path over `lams`, warm-starting each fit.
+    def path(self, X, y, lams, groups=None,
+             mode: str = 'auto') -> list[PathPoint]:
+        """Fit a regularization path over `lams`; one PathPoint per lambda.
 
-        With the device solver the entire bundle state (plane buffer, Gram,
-        dual) carries over between lambda values; with the host solver the
-        previous solution w seeds the next fit. Leaves the estimator fitted
-        at the LAST lambda in `lams`. Returns one PathPoint per lambda.
+        Args:
+          lams: lambda values, any order (duplicates allowed); each must
+            be finite and > 0, rejected with a clear error otherwise.
+          mode: 'vmap' | 'sequential' | 'auto' (`core.bmrm.bmrm_path`) —
+            * 'vmap': the whole sweep is ONE batched device program: a
+              (K, ...)-leading bundle state trains every lambda
+              simultaneously, per-lambda done masks freezing converged
+              slices (DESIGN.md §7). Trades memory (K plane buffers of
+              max_planes x n floats each, `core.bmrm.path_state_gib`) for
+              full device parallelism.
+            * 'sequential': one fit per lambda, warm-started — the device
+              solver carries the bundle state across lambdas (cutting
+              planes under-estimate R_emp independently of lambda), the
+              host solver seeds each fit with the previous w.
+            * 'auto' (default): vmap for fused device-solver oracles
+              (tree/pairs/grouped/sharded above the f32 eps floor) on
+              accelerator backends, whose projected batched state fits
+              `memory_budget` (when set); sequential on the serial CPU
+              backend (where the batched sweep measures 2-8x slower,
+              EXPERIMENTS §Path sweep), for streaming and CPU-CSR
+              host-rmatvec oracles, and — with a loud RuntimeWarning —
+              when the vmap state projects over budget.
+
+        Leaves the estimator fitted at the LAST lambda in `lams`. Each
+        PathPoint's report carries per-lambda iterations/objective/gap; in
+        vmap mode `seconds` is the lambda's share of the one joint program
+        (each batched step's wall splits evenly over the lambdas active in
+        it, so the shares sum to ~the sweep's wall-clock).
         """
-        lams = [float(lam) for lam in lams]
-        if not lams:
-            raise ValueError('path() needs at least one lambda')
+        # Validate BEFORE oracle construction (a sharded oracle densifies
+        # and transfers X — a typo'd mode must not pay for that), via the
+        # same bmrm helpers bmrm_path re-runs idempotently: one source of
+        # truth for the error messages. lams are also normalized here for
+        # the PathPoint zip below.
+        _validate_path_mode(mode)
+        lams = _validate_lams(lams)
         oracle = self._make_oracle(X, y, groups)
         self.oracle_ = oracle
 
-        points: list[PathPoint] = []
-        state, w_prev = None, None
-        for lam in lams:
-            t0 = time.perf_counter()
-            res = self._solve(oracle, lam, state=state, w0=w_prev)
-            dt = time.perf_counter() - t0
-            state = res.state            # None on the host driver
-            w_prev = res.w
-            points.append(PathPoint(lam=lam, w=res.w,
-                                    report=self._report(res, dt)))
+        results = bmrm_path(
+            oracle, lams, mode=mode, eps=self.eps, max_iter=self.max_iter,
+            max_planes=self.max_planes, solver=self.solver,
+            sync_every=self.sync_every, qp_iters=self.qp_iters,
+            memory_budget=self.memory_budget,
+            callback=(lambda t, w, j, g:
+                      print(f'  bmrm it={t} J_best={np.asarray(j)} '
+                            f'gap={np.asarray(g)}'))
+            if self.verbose else None)
+        points = [PathPoint(lam=lam, w=res.w,
+                            report=self._report(res, res.stats.seconds))
+                  for lam, res in zip(lams, results)]
         last = points[-1]
         self.w_, self.report_ = last.w, last.report
         self.lam = last.lam

@@ -228,10 +228,12 @@ def test_device_iterations_run_in_sync_chunks():
 
 
 def test_path_matches_cold_fits_and_reuses_state():
+    # mode='sequential' pinned: this test covers the warm-started bundle
+    # state threading (the vmap mode has its own suite, test_path_sweep.py)
     d = cadata_like(m=250, m_test=10, seed=11)
     lams = [1e-1, 1e-2, 1e-3]
     svm = RankSVM(eps=1e-3, method='tree', solver='device')
-    points = svm.path(d.X, d.y, lams)
+    points = svm.path(d.X, d.y, lams, mode='sequential')
     assert [p.lam for p in points] == lams
     total_warm = 0
     for p in points:

@@ -1,0 +1,109 @@
+"""The documentation layer's tier-1 guard: runs the same checks as the
+docs CI job (tools/check_docs.py) so a dangling DESIGN/EXPERIMENTS
+§-reference, a broken docs link, or an undocumented public export fails
+locally — not just after a push — plus unit tests of the matching rules
+themselves."""
+
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), '..', 'tools'))
+
+import check_docs  # noqa: E402
+
+
+def test_section_refs_resolve():
+    assert check_docs.check_section_refs() == []
+
+
+def test_markdown_links_resolve():
+    assert check_docs.check_markdown_links() == []
+
+
+def test_public_exports_covered_by_reference_docs():
+    assert check_docs.check_export_coverage() == []
+
+
+# ------------------------------------------------------- rule unit tests
+
+
+@pytest.mark.parametrize('token,label,ok', [
+    ('4', '4 BMRM solver layer and the device-resident bundle state', True),
+    ('4 fused oracle step', '4 BMRM solver layer', True),
+    ('Perf cell C baseline', 'Perf', True),
+    ('Roofline', 'Roofline', True),
+    ('9', '4 BMRM solver layer', False),
+    ('Perv', 'Perf', False),
+    ('', 'Perf', False),
+])
+def test_first_word_matching_rule(token, label, ok):
+    assert check_docs._words_prefix_match(token, label) is ok
+
+
+def test_slugify_matches_mkdocs_style():
+    assert check_docs._slugify('Choosing method, solver and path mode') == \
+        'choosing-method-solver-and-path-mode'
+    assert check_docs._slugify('§4 BMRM solver layer') == \
+        '4-bmrm-solver-layer'
+
+
+def test_exported_names_parsed_from_init():
+    root = check_docs.ROOT
+    core = check_docs._exported_names(
+        os.path.join(root, 'src', 'repro', 'core', '__init__.py'))
+    assert 'RankSVM' in core and 'make_oracle' in core and 'bmrm' in core
+    data = check_docs._exported_names(
+        os.path.join(root, 'src', 'repro', 'data', '__init__.py'))
+    assert 'RowBlockSource' in data and 'projected_resident_gib' in data
+
+
+def test_checker_detects_planted_dangling_ref(tmp_path):
+    """End-to-end self-test on a synthetic tree: a bad §-ref must be
+    caught, a good one must not."""
+    (tmp_path / 'DESIGN.md').write_text('# D\n\n## §1 Real section\n')
+    (tmp_path / 'EXPERIMENTS.md').write_text('# E\n\n## §Perf\n')
+    src = tmp_path / 'src'
+    src.mkdir()
+    # concatenation keeps THIS file's own text from looking like refs to
+    # the repo-level scan
+    ref_good = 'DESIGN' + '.md §' + '1'
+    ref_bad = 'DESIGN' + '.md §' + '9'
+    (src / 'mod.py').write_text(f'# see {ref_good} for the good ref\n'
+                                f'# and {ref_bad} for the dangling one\n')
+    for d in ('tests', 'benchmarks', 'examples', 'tools', 'docs'):
+        (tmp_path / d).mkdir()
+    problems = check_docs.check_section_refs(root=str(tmp_path))
+    assert len(problems) == 1 and '§9' in problems[0]
+
+
+def test_checker_catches_second_ref_on_same_line(tmp_path):
+    """Two refs on one line: a dangling ref after a valid one must not be
+    swallowed into the first ref's token."""
+    (tmp_path / 'DESIGN.md').write_text('# D\n\n## §1 Real section\n')
+    (tmp_path / 'EXPERIMENTS.md').write_text('# E\n\n## §Perf\n')
+    src = tmp_path / 'src'
+    src.mkdir()
+    a = 'DESIGN' + '.md §' + '1'
+    b = 'EXPERIMENTS' + '.md §' + 'Gone'
+    (src / 'mod.py').write_text(f'# see {a} and {b} for numbers\n')
+    for d in ('tests', 'benchmarks', 'examples', 'tools', 'docs'):
+        (tmp_path / d).mkdir()
+    problems = check_docs.check_section_refs(root=str(tmp_path))
+    assert len(problems) == 1 and 'Gone' in problems[0]
+
+
+def test_checker_scans_design_and_experiments_cross_refs(tmp_path):
+    """DESIGN and EXPERIMENTS reference each other; a dangling cross-file
+    §-ref inside either must be caught (they are scanned like any other
+    file, not skipped as 'their own headings')."""
+    # bare form (no '.md') on purpose: the gate must catch both spellings
+    cross_bad = 'EXPERIMENTS' + ' §' + 'Gone'
+    (tmp_path / 'DESIGN.md').write_text(
+        f'# D\n\n## §1 Real section\n\nsee {cross_bad} for numbers\n')
+    (tmp_path / 'EXPERIMENTS.md').write_text('# E\n\n## §Perf\n')
+    for d in ('src', 'tests', 'benchmarks', 'examples', 'tools', 'docs'):
+        (tmp_path / d).mkdir()
+    problems = check_docs.check_section_refs(root=str(tmp_path))
+    assert len(problems) == 1 and 'Gone' in problems[0]

@@ -1,0 +1,330 @@
+"""Tests for the batched regularization-path sweep (`core.bmrm.bmrm_path`,
+`RankSVM.path(mode=)`): vmap-vs-sequential objective parity across the
+fused oracles, per-lambda done-mask semantics, lambda validation, the
+batch-safety of the masked QP under vmap, and the over-budget fallback."""
+
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import oracle as O
+from repro.core.bmrm import (PATH_MODES, _validate_lams, bmrm, bmrm_path,
+                             path_state_gib)
+from repro.core.qp import solve_bundle_dual, solve_bundle_dual_jax
+from repro.core.ranksvm import RankSVM
+from repro.data import cadata_like, grouped_queries
+
+LAMS = [1e-1, 1e-2, 1e-3]
+
+
+def _dataset(groups=False):
+    if groups:
+        return grouped_queries(n_queries=20, per_query=15, seed=2)
+    d = cadata_like(m=300, m_test=10, seed=5)
+    return d.X, d.y, None
+
+
+# ------------------------------------------------------------- validation
+
+
+@pytest.mark.parametrize('bad', [[], [np.nan], [np.inf], [-np.inf],
+                                 [0.0], [-1e-3], [1e-2, np.nan],
+                                 [1e-40], [1e39]])
+def test_lambda_validation_rejects(bad):
+    # 1e-40 / 1e39 are finite-positive in float64 but underflow to 0 /
+    # overflow to inf at the device drivers' f32 cast — the validator
+    # must catch them before they poison 1/(2 lam) on device
+    with pytest.raises(ValueError, match='lambda'):
+        _validate_lams(bad)
+
+
+def test_lambda_validation_accepts_unsorted_duplicates():
+    assert _validate_lams([1e-3, 1e-1, 1e-3]) == [1e-3, 1e-1, 1e-3]
+    assert _validate_lams(np.asarray([2.0])) == [2.0]
+
+
+def test_path_mode_validated():
+    X, y, _ = _dataset()
+    with pytest.raises(ValueError, match='path mode'):
+        RankSVM().path(X, y, LAMS, mode='parallel')
+
+
+def test_path_mode_and_lams_checked_before_oracle_build(monkeypatch):
+    """A typo'd mode / bad lambda must fail BEFORE the (possibly very
+    expensive) oracle is constructed."""
+    svm = RankSVM()
+
+    def boom(*a, **k):
+        raise AssertionError('oracle was built before validation')
+
+    monkeypatch.setattr(svm, '_make_oracle', boom)
+    X, y, _ = _dataset()
+    with pytest.raises(ValueError, match='path mode'):
+        svm.path(X, y, LAMS, mode='vmpa')
+    with pytest.raises(ValueError, match='lambda'):
+        svm.path(X, y, [0.0], mode='auto')
+
+
+def test_vmap_mode_needs_batchable_oracle():
+    X, y, _ = _dataset()
+    orc = O.make_oracle(X, y, method='stream', stream_block=64)
+    assert not orc.supports_path_vmap
+    with pytest.raises(ValueError, match='vmap'):
+        bmrm_path(orc, LAMS, mode='vmap')
+
+
+def test_vmap_mode_rejects_host_solver():
+    X, y, _ = _dataset()
+    orc = O.make_oracle(X, y, method='tree')
+    with pytest.raises(ValueError, match='host'):
+        bmrm_path(orc, LAMS, mode='vmap', solver='host')
+
+
+def test_bare_callable_rejected():
+    with pytest.raises(ValueError, match='RankOracle'):
+        bmrm_path(lambda w: (0.0, w), LAMS)
+
+
+def test_typoed_solver_rejected_on_every_branch():
+    X, y, _ = _dataset()
+    orc = O.make_oracle(X, y, method='tree')
+    for mode in PATH_MODES:
+        with pytest.raises(ValueError, match='unknown solver'):
+            bmrm_path(orc, LAMS, mode=mode, solver='devcie')
+
+
+def test_vmap_time_attribution_consistent():
+    """Per-lambda seconds must equal the sum of that lambda's amortized
+    per-step costs, and the shares must sum to about the one joint
+    program's wall (each batched step's wall splits over active lambdas,
+    so nothing is double-counted K times)."""
+    import time as _time
+    X, y, _ = _dataset()
+    orc = O.make_oracle(X, y, method='tree')
+    bmrm_path(orc, LAMS, mode='vmap', eps=1e-3, max_iter=400)  # warm jit
+    t0 = _time.perf_counter()
+    rv = bmrm_path(orc, LAMS, mode='vmap', eps=1e-3, max_iter=400)
+    wall = _time.perf_counter() - t0
+    for res in rv:
+        assert res.stats.seconds == pytest.approx(
+            sum(res.stats.oracle_seconds), rel=1e-6)
+        assert len(res.stats.oracle_seconds) == res.stats.iterations
+    assert sum(r.stats.seconds for r in rv) <= wall * 1.01
+
+
+# ------------------------------------------------- vmap-vs-sequential parity
+
+
+@pytest.mark.parametrize('method,grouped', [('tree', False), ('pairs', False),
+                                            ('tree', True)])
+def test_vmap_matches_sequential_objectives(method, grouped):
+    # rel < 1e-3 is this PR's acceptance bar, asserted on THESE grids
+    # (lams down to 1e-3 at eps=1e-3). On wider grids both sweeps may
+    # legally drift apart toward the ~2e-3 sum of their eps-envelopes —
+    # benchmarks/path_sweep.py records that — so don't copy this bound
+    # onto a K=16 / lam=1e-4 grid.
+    X, y, g = _dataset(groups=grouped)
+    orc = O.make_oracle(X, y, groups=g, method=method)
+    rv = bmrm_path(orc, LAMS, mode='vmap', eps=1e-3, max_iter=400)
+    rs = bmrm_path(orc, LAMS, mode='sequential', eps=1e-3, max_iter=400)
+    assert len(rv) == len(rs) == len(LAMS)
+    for a, b in zip(rv, rs):
+        assert a.stats.converged and b.stats.converged
+        rel = abs(a.stats.obj_best - b.stats.obj_best) / abs(b.stats.obj_best)
+        assert rel < 1e-3
+        assert a.stats.solver == 'vmap'
+
+
+def test_vmap_matches_independent_cold_fits():
+    X, y, _ = _dataset()
+    orc = O.make_oracle(X, y, method='tree')
+    rv = bmrm_path(orc, LAMS, mode='vmap', eps=1e-3, max_iter=400)
+    for lam, res in zip(LAMS, rv):
+        cold = bmrm(orc, lam=lam, eps=1e-3, solver='device', max_iter=400)
+        rel = abs(res.stats.obj_best - cold.stats.obj_best) / abs(
+            cold.stats.obj_best)
+        assert rel < 1e-3
+
+
+def test_single_lambda_and_duplicates_vmap():
+    X, y, _ = _dataset()
+    svm = RankSVM(eps=1e-3, method='tree', max_iter=400)
+    (p,) = svm.path(X, y, [1e-2], mode='vmap')
+    assert p.report.converged
+    pts = svm.path(X, y, [1e-3, 1e-1, 1e-3], mode='vmap')
+    assert [pt.lam for pt in pts] == [1e-3, 1e-1, 1e-3]
+    # duplicate lambdas are independent slices of the batch: identical fits
+    assert pts[0].report.objective == pytest.approx(pts[2].report.objective,
+                                                    rel=1e-6)
+    np.testing.assert_allclose(pts[0].w, pts[2].w, rtol=1e-5, atol=1e-7)
+
+
+def test_estimator_left_fitted_at_last_lambda():
+    X, y, _ = _dataset()
+    svm = RankSVM(eps=1e-3, method='tree', max_iter=400)
+    pts = svm.path(X, y, LAMS, mode='vmap')
+    assert svm.lam == LAMS[-1]
+    np.testing.assert_allclose(svm.w_, pts[-1].w)
+    assert svm.report_.solver == 'vmap'
+
+
+# ------------------------------------------------------- done-mask no-ops
+
+
+def test_done_mask_freezes_converged_lambdas():
+    """An easy (large) lambda converges first; its per-lambda history must
+    stop growing — iterations == recorded history length — while harder
+    lambdas keep stepping, and every lambda still converges."""
+    X, y, _ = _dataset()
+    orc = O.make_oracle(X, y, method='tree')
+    lams = [1.0, 1e-4]
+    rv = bmrm_path(orc, lams, mode='vmap', eps=1e-3, max_iter=400)
+    easy, hard = rv
+    assert easy.stats.converged and hard.stats.converged
+    assert easy.stats.iterations < hard.stats.iterations
+    for res in rv:
+        assert len(res.stats.loss_history) == res.stats.iterations
+        assert len(res.stats.gap_history) == res.stats.iterations
+    # frozen slice: the easy lambda's returned state still matches a
+    # converged solve (gap below eps), untouched by the extra steps
+    assert easy.stats.gap < 1e-3
+    assert bool(easy.state.done)
+
+
+def test_vmap_warm_states_reusable():
+    """Each per-lambda result carries a warm-startable unbatched state."""
+    X, y, _ = _dataset()
+    orc = O.make_oracle(X, y, method='tree')
+    rv = bmrm_path(orc, [1e-2], mode='vmap', eps=1e-3, max_iter=400)
+    res = bmrm(orc, lam=1e-3, eps=1e-3, solver='device', max_iter=400,
+               state=rv[0].state)
+    cold = bmrm(orc, lam=1e-3, eps=1e-3, solver='device', max_iter=400)
+    assert res.stats.converged
+    assert res.stats.iterations <= cold.stats.iterations
+    rel = abs(res.stats.obj_best - cold.stats.obj_best) / abs(
+        cold.stats.obj_best)
+    assert rel < 1e-3
+
+
+# ---------------------------------------------------- auto mode + fallback
+
+
+def _pretend_accelerator(monkeypatch):
+    """Make the auto rule's backend probe report a non-CPU backend (the
+    devices stay CPU — only the measured-dispatch decision is under
+    test)."""
+    import repro.core.bmrm as B
+    monkeypatch.setattr(B.jax, 'default_backend', lambda: 'tpu')
+
+
+def test_auto_picks_sequential_on_cpu_backend():
+    """The measured rule (EXPERIMENTS §Path sweep): on the serial CPU
+    backend the batched sweep loses 2-8x to sequential-warm, so 'auto'
+    keeps CPU sequential even for a batchable fused oracle."""
+    X, y, _ = _dataset()
+    fused = O.make_oracle(X, y, method='tree')
+    rv = bmrm_path(fused, [1e-2, 1e-3], mode='auto', eps=1e-3, max_iter=400)
+    assert all(r.stats.solver == 'device' for r in rv)
+
+
+def test_auto_picks_vmap_for_fused_off_cpu(monkeypatch):
+    _pretend_accelerator(monkeypatch)
+    X, y, _ = _dataset()
+    fused = O.make_oracle(X, y, method='tree')
+    rv = bmrm_path(fused, [1e-2, 1e-3], mode='auto', eps=1e-3, max_iter=400)
+    assert all(r.stats.solver == 'vmap' for r in rv)
+
+
+def test_auto_picks_sequential_for_stream_any_backend(monkeypatch):
+    _pretend_accelerator(monkeypatch)
+    X, y, _ = _dataset()
+    stream = O.make_oracle(X, y, method='stream', stream_block=64)
+    rs = bmrm_path(stream, [1e-2, 1e-3], mode='auto', eps=1e-3, max_iter=400)
+    assert all(r.stats.solver == 'device' for r in rs)
+
+
+def test_explicit_vmap_below_f32_floor_warns():
+    """mode='vmap' below the eps floor is honored (explicit mode) but
+    must warn that the f32 gap may stall — same semantics as an explicit
+    solver='device' in bmrm."""
+    X, y, _ = _dataset()
+    orc = O.make_oracle(X, y, method='tree')
+    with pytest.warns(RuntimeWarning, match='noise floor'):
+        res = bmrm_path(orc, [1e-2], mode='vmap', eps=1e-7, max_iter=16)
+    assert res[0].stats.solver == 'vmap'
+
+
+def test_auto_respects_f32_floor():
+    X, y, _ = _dataset()
+    orc = O.make_oracle(X, y, method='tree')
+    with warnings.catch_warnings():
+        warnings.simplefilter('ignore')
+        rs = bmrm_path(orc, [1e-2], mode='auto', eps=1e-7, max_iter=50)
+    assert rs[0].stats.solver == 'host'
+
+
+def test_over_budget_fallback_warns_and_matches_sequential():
+    X, y, _ = _dataset()
+    orc = O.make_oracle(X, y, method='tree')
+    assert path_state_gib(3, orc.n, None, m=orc.m) > 1e-9
+    with pytest.warns(RuntimeWarning, match='memory_budget'):
+        rb = bmrm_path(orc, LAMS, mode='vmap', eps=1e-3, max_iter=400,
+                       memory_budget=1e-9)
+    rs = bmrm_path(orc, LAMS, mode='sequential', eps=1e-3, max_iter=400)
+    for a, b in zip(rb, rs):
+        assert a.stats.solver == 'device'       # fell back to sequential
+        assert a.stats.obj_best == pytest.approx(b.stats.obj_best, rel=1e-6)
+
+
+def test_budget_large_enough_keeps_vmap(monkeypatch):
+    _pretend_accelerator(monkeypatch)
+    X, y, _ = _dataset()
+    orc = O.make_oracle(X, y, method='tree')
+    rv = bmrm_path(orc, [1e-2], mode='auto', eps=1e-3, max_iter=400,
+                   memory_budget=64.0)
+    assert rv[0].stats.solver == 'vmap'
+
+
+def test_path_state_gib_scales_linearly_in_lambdas():
+    one = path_state_gib(1, 512, max_planes=64, m=10000)
+    assert path_state_gib(8, 512, max_planes=64, m=10000) == pytest.approx(
+        8 * one)
+
+
+# ------------------------------------------------ QP batch-safety via vmap
+
+
+def test_masked_qp_vmaps_per_lambda():
+    """The masked FISTA QP must be batch-safe: vmapping it over stacked
+    (G, b, lam, mask) problems has to reproduce each host float64 solve,
+    including the per-problem power-iteration Lipschitz constant."""
+    rng = np.random.default_rng(7)
+    K = 12
+    Gs, bs, lams, masks, refs = [], [], [], [], []
+    for t, lam in ((1, 0.5), (3, 0.5), (8, 0.02), (5, 1.0)):
+        A = rng.normal(size=(t, 6))
+        G = np.zeros((K, K))
+        G[:t, :t] = A @ A.T
+        b = np.zeros(K)
+        b[:t] = rng.normal(size=t)
+        _, ref = solve_bundle_dual(G[:t, :t], b[:t], lam)
+        Gs.append(G), bs.append(b), lams.append(lam)
+        masks.append(np.arange(K) < t), refs.append(ref)
+    alphas, vals = jax.vmap(
+        lambda G, b, lam, m: solve_bundle_dual_jax(G, b, lam, m,
+                                                   n_iter=512))(
+        jnp.asarray(np.stack(Gs), jnp.float32),
+        jnp.asarray(np.stack(bs), jnp.float32),
+        jnp.asarray(lams, jnp.float32), jnp.asarray(np.stack(masks)))
+    alphas, vals = np.asarray(alphas), np.asarray(vals)
+    for i, ref in enumerate(refs):
+        assert vals[i] == pytest.approx(ref, rel=1e-3, abs=1e-4)
+        np.testing.assert_allclose(alphas[i][~masks[i]], 0.0)
+        assert alphas[i].sum() == pytest.approx(1.0, abs=1e-4)
+
+
+def test_path_modes_constant():
+    assert PATH_MODES == ('vmap', 'sequential', 'auto')

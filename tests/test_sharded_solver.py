@@ -186,9 +186,11 @@ def test_ranksvm_sharded_grouped_device_matches_grouped_host():
 
 
 def test_ranksvm_sharded_path_reuses_state():
+    # mode='sequential' pinned: this covers warm-started state threading;
+    # the batched (vmap) sharded sweep is tested below
     X, y, groups, _ = _grouped_case(seed=5)
     svm = RankSVM(eps=1e-2, method='sharded')
-    points = svm.path(X, y, [1e-1, 1e-2], groups=groups)
+    points = svm.path(X, y, [1e-1, 1e-2], groups=groups, mode='sequential')
     assert all(p.report.converged for p in points)
     assert all(p.report.solver == 'device' for p in points)
     # warm start: the second lambda must not need more iterations than a
@@ -198,6 +200,23 @@ def test_ranksvm_sharded_path_reuses_state():
     assert points[-1].report.iterations <= cold.report_.iterations
 
 
+def test_sharded_path_vmap_matches_sequential():
+    """The batched path sweep composes with the mesh oracle: vmap inserts
+    a leading (replicated) lambda axis into the oracle body's sharding
+    constraints, and `bundle_state_shardings(batched=True)` pins the
+    (K, ...)-leading state. Degenerate 1-device mesh here; the >1-device
+    case is the multidevice half below."""
+    X, y, groups, _ = _grouped_case(seed=6)
+    svm = RankSVM(eps=1e-2, method='sharded')
+    pv = svm.path(X, y, [1e-1, 1e-2], groups=groups, mode='vmap')
+    ps = svm.path(X, y, [1e-1, 1e-2], groups=groups, mode='sequential')
+    assert all(p.report.converged for p in pv)
+    assert all(p.report.solver == 'vmap' for p in pv)
+    for a, b in zip(pv, ps):
+        assert a.report.objective == pytest.approx(b.report.objective,
+                                                   rel=2e-2, abs=2e-3)
+
+
 # --------------------------------------------------- sharding annotations
 
 
@@ -205,6 +224,14 @@ def test_bundle_state_shardings_layout():
     mesh = make_mesh((jax.device_count(), 1), ('data', 'model'))
     sh = bundle_state_shardings(mesh)
     assert sh.A.spec == P(None, 'model')
+    for name in ('w', 'w_best', 'b', 'G', 'alpha', 'gap', 'done'):
+        assert getattr(sh, name).spec == P()
+
+
+def test_bundle_state_shardings_batched_layout():
+    mesh = make_mesh((jax.device_count(), 1), ('data', 'model'))
+    sh = bundle_state_shardings(mesh, batched=True)
+    assert sh.A.spec == P(None, None, 'model')
     for name in ('w', 'w_best', 'b', 'G', 'alpha', 'gap', 'done'):
         assert getattr(sh, name).spec == P()
 
@@ -323,6 +350,23 @@ def test_multidevice_ranksvm_sharded_end_to_end():
     svm.fit(np.asarray(d.X), d.y)
     assert svm.report_.solver == 'device'
     assert svm.ranking_error(d.X_test, d.y_test) < 0.35
+
+
+@multidevice
+def test_multidevice_path_vmap_trains():
+    """Batched lambda sweep on a REAL 2x4 mesh: the vmapped bundle_step
+    (leading replicated lambda axis, plane buffer column-sharded over
+    'model') must train every lambda to convergence and agree with the
+    sequential sweep within the bf16 tolerance."""
+    X, y, groups, _ = _grouped_case(seed=7)
+    svm = RankSVM(eps=1e-2, method='sharded', mesh=_mesh2x4(), max_iter=200)
+    pv = svm.path(X, y, [1e-1, 1e-2], groups=groups, mode='vmap')
+    ps = svm.path(X, y, [1e-1, 1e-2], groups=groups, mode='sequential')
+    assert all(p.report.converged for p in pv)
+    assert all(p.report.solver == 'vmap' for p in pv)
+    for a, b in zip(pv, ps):
+        assert a.report.objective == pytest.approx(b.report.objective,
+                                                   rel=2e-2, abs=2e-3)
 
 
 @multidevice

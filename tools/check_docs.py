@@ -1,0 +1,231 @@
+"""Documentation consistency checker (docs CI job + tests/test_docs.py).
+
+Three independent checks, each returning a list of human-readable
+problems (empty = pass):
+
+1. `check_section_refs` — every `DESIGN.md §X` / `EXPERIMENTS.md §X`
+   reference in source code, docs pages, README, DESIGN and EXPERIMENTS
+   must resolve to an actual `##` heading of the referenced file. The
+   §-references are load-bearing navigation (distributed.py, kernel.py,
+   dryrun.py all point into DESIGN/EXPERIMENTS); a renamed or deleted
+   section must fail CI, not dangle silently.
+
+2. `check_markdown_links` — relative links in docs/ and README must point
+   at files that exist, and `#anchor` fragments must match a heading slug
+   of the target (mkdocs-style slugification).
+
+3. `check_export_coverage` — every symbol exported from
+   `repro.core/__init__.py` and `repro.data/__init__.py` must be covered
+   by a mkdocstrings `::: identifier` directive somewhere under docs/:
+   either the symbol itself, its defining module, or (for re-exported
+   modules) the module. This is the acceptance bar for the generated API
+   reference: a new public export without a reference page fails CI.
+
+Matching rule for §-refs: a reference resolves by its FIRST word — the
+section number or the heading's leading word. That makes trailing prose
+("... baseline", "... and the ...") harmless while a renamed or removed
+section still dangles. Tokens stop at close-punctuation so sentence
+structure never leaks in.
+
+    PYTHONPATH=src python tools/check_docs.py
+"""
+
+from __future__ import annotations
+
+import ast
+import importlib
+import inspect
+import os
+import re
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), '..'))
+
+# Files whose §-references are live navigation. Historical logs
+# (CHANGES.md, ROADMAP.md, ISSUE.md) are excluded on purpose: they
+# describe past states of the tree.
+_REF_SCAN_DIRS = ('src', 'tests', 'benchmarks', 'examples', 'tools', 'docs')
+_REF_SCAN_FILES = ('README.md', 'DESIGN.md', 'EXPERIMENTS.md')
+
+# The '.md' suffix is optional: prose references both forms
+# ('EXPERIMENTS.md §Roofline' and the bare 'EXPERIMENTS §Path sweep'),
+# and both must be gated. The token is tempered to stop before a second
+# ref on the same line ('... DESIGN.md §4 and EXPERIMENTS §X ...' must
+# yield TWO refs, not one token swallowing the second — a dangling ref
+# after a valid one would otherwise escape the gate).
+_REF_RE = re.compile(
+    r'\b(DESIGN|EXPERIMENTS)(?:\.md)?\s*§\s*'
+    r'((?:(?!DESIGN|EXPERIMENTS|§)[^():;,"\n])+)')
+_HEADING_RE = re.compile(r'^#{2,3}\s+(.*)$', re.M)
+_DIRECTIVE_RE = re.compile(r'^:::\s+(\S+)\s*$', re.M)
+_LINK_RE = re.compile(r'\[[^\]]*\]\(([^)\s]+)\)')
+
+
+def _read(path: str) -> str:
+    with open(path, encoding='utf-8') as f:
+        return f.read()
+
+
+def _iter_files(exts, root: str = ROOT):
+    for d in _REF_SCAN_DIRS:
+        base = os.path.join(root, d)
+        for dirpath, _, names in os.walk(base):
+            for name in sorted(names):
+                if name.endswith(exts):
+                    yield os.path.join(dirpath, name)
+    for name in _REF_SCAN_FILES:
+        p = os.path.join(root, name)
+        if os.path.exists(p) and p.endswith(exts):
+            yield p
+
+
+def _section_labels(md_path: str) -> list:
+    """`##`/`###` heading texts with a leading § stripped."""
+    labels = []
+    for h in _HEADING_RE.findall(_read(md_path)):
+        labels.append(h.strip().lstrip('§').strip())
+    return labels
+
+
+def _words_prefix_match(token: str, label: str) -> bool:
+    """First-word resolution: '4' -> '§4 BMRM solver layer ...',
+    'Perf cell C baseline' -> '§Perf'. Trailing prose after the ref is
+    harmless; a renamed/removed section still dangles."""
+    tw, lw = token.split(), label.split()
+    return bool(tw) and bool(lw) and tw[0] == lw[0]
+
+
+def check_section_refs(root: str = ROOT) -> list:
+    labels = {
+        'DESIGN': _section_labels(os.path.join(root, 'DESIGN.md')),
+        'EXPERIMENTS': _section_labels(os.path.join(root, 'EXPERIMENTS.md')),
+    }
+    problems = []
+    me = os.path.abspath(__file__)
+    for path in _iter_files(('.py', '.md'), root):
+        rel = os.path.relpath(path, root)
+        if os.path.abspath(path) == me:
+            continue   # this module's docstring holds EXAMPLE refs
+        for line_no, line in enumerate(_read(path).splitlines(), 1):
+            for target, raw in _REF_RE.findall(line):
+                token = raw.strip().rstrip('.').strip()
+                if not token:
+                    continue
+                if not any(_words_prefix_match(token, lab)
+                           for lab in labels[target]):
+                    problems.append(
+                        f'{rel}:{line_no}: dangling reference '
+                        f'{target}.md §{token} (no matching ## heading)')
+    return problems
+
+
+def _slugify(heading: str) -> str:
+    """mkdocs/python-markdown toc slug: lowercase, drop punctuation,
+    spaces to hyphens."""
+    s = heading.strip().lower()
+    s = re.sub(r'[^\w\- ]', '', s, flags=re.UNICODE)
+    return re.sub(r'[ ]+', '-', s.strip())
+
+
+def check_markdown_links(root: str = ROOT) -> list:
+    pages = [p for p in _iter_files(('.md',), root)
+             if p.startswith(os.path.join(root, 'docs'))]
+    pages.append(os.path.join(root, 'README.md'))
+    problems = []
+    for path in pages:
+        rel = os.path.relpath(path, root)
+        text = _read(path)
+        for target in _LINK_RE.findall(text):
+            if target.startswith(('http://', 'https://', 'mailto:')):
+                continue
+            frag = None
+            if '#' in target:
+                target, frag = target.split('#', 1)
+            dest = path if not target else os.path.normpath(
+                os.path.join(os.path.dirname(path), target))
+            if not os.path.exists(dest):
+                problems.append(f'{rel}: broken link target {target!r}')
+                continue
+            if frag is not None and dest.endswith('.md'):
+                slugs = {_slugify(h.lstrip('#').strip())
+                         for h in re.findall(r'^#{1,6}\s+.*$', _read(dest),
+                                             re.M)}
+                if frag not in slugs:
+                    problems.append(f'{rel}: broken anchor '
+                                    f'{target or os.path.basename(dest)}'
+                                    f'#{frag}')
+    return problems
+
+
+def _exported_names(init_path: str) -> list:
+    """Names bound by import statements at the top level of an
+    `__init__.py` — the package's deliberate export list."""
+    tree = ast.parse(_read(init_path))
+    names = []
+    for node in tree.body:
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            for alias in node.names:
+                names.append(alias.asname or alias.name.split('.')[0])
+    return [n for n in names if not n.startswith('_')]
+
+
+def _doc_directives(root: str = ROOT) -> set:
+    directives = set()
+    for dirpath, _, names in os.walk(os.path.join(root, 'docs')):
+        for name in sorted(names):
+            if name.endswith('.md'):
+                directives |= set(
+                    _DIRECTIVE_RE.findall(_read(os.path.join(dirpath,
+                                                             name))))
+    return directives
+
+
+def check_export_coverage(root: str = ROOT) -> list:
+    src = os.path.join(root, 'src')
+    sys.path.insert(0, src)
+    try:
+        return _check_export_coverage(root)
+    finally:
+        # leave the process's import path as found (repeated calls in one
+        # pytest session must not accumulate entries or shadow packages)
+        sys.path.remove(src)
+
+
+def _check_export_coverage(root: str) -> list:
+    directives = _doc_directives(root)
+    problems = []
+    for pkg_name in ('repro.core', 'repro.data'):
+        pkg = importlib.import_module(pkg_name)
+        init = os.path.join(root, 'src', *pkg_name.split('.'),
+                            '__init__.py')
+        for name in _exported_names(init):
+            obj = getattr(pkg, name, None)
+            if obj is None:
+                problems.append(f'{pkg_name}: exported name {name!r} '
+                                'missing at runtime')
+                continue
+            if inspect.ismodule(obj):
+                candidates = {obj.__name__}
+            else:
+                mod = getattr(obj, '__module__', None) or pkg_name
+                qual = getattr(obj, '__qualname__', name)
+                candidates = {f'{mod}.{qual}', mod, f'{pkg_name}.{name}'}
+            if not candidates & directives:
+                problems.append(
+                    f'{pkg_name}.{name}: not covered by any mkdocstrings '
+                    f'directive (expected one of {sorted(candidates)} '
+                    'under docs/)')
+    return problems
+
+
+def main() -> int:
+    problems = (check_section_refs() + check_markdown_links()
+                + check_export_coverage())
+    for p in problems:
+        print(f'check_docs: {p}')
+    print(f'check_docs: {len(problems)} problem(s)')
+    return 1 if problems else 0
+
+
+if __name__ == '__main__':
+    sys.exit(main())

@@ -1,0 +1,81 @@
+"""Fused rank-counts Pallas kernel vs tree lowering, per counting call.
+
+Sweeps the per-call cost of `counts_dispatch(engine='pallas')` (the
+fused rank-counting kernel, DESIGN.md §8) against `engine='tree'` (the
+single-tree merge-sort pass) at m up to 1e6, ungrouped and grouped —
+the two shapes the oracle layer feeds it. Times EXCLUDE compile (first
+call is the warmup); `compile_s` records that one-off separately, since
+on CPU it decides the `engine='auto'` tiering (EXPERIMENTS.md §Counts
+kernel): a per-call win that needs tens of BMRM iterations to pay back
+its compile is not a win for typical fits.
+
+On this container the kernel runs through the Pallas interpreter
+(lowered to XLA ops, not Mosaic) — the honest reading is "the kernel's
+algorithm on XLA", an upper bound on TPU per-element cost, not a TPU
+measurement.
+
+    PYTHONPATH=src python -m benchmarks.counts_kernel [--full]
+
+--full extends the sweep to m = 1e6 (minutes on CPU interpret).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import counts as C
+
+from .common import Reporter, timeit
+
+
+def _block_until_ready(out):
+    jax.block_until_ready(out)
+    return out
+
+
+def _bench(p, y, g, engine: str):
+    """(compile_s, per_call_s) for one engine on one case."""
+    pd, yd = jnp.asarray(p), jnp.asarray(y)
+    gd = None if g is None else jnp.asarray(g)
+
+    def f():
+        return _block_until_ready(C.counts_dispatch(pd, yd, gd,
+                                                    engine=engine))
+
+    t0 = time.perf_counter()
+    f()                                  # compile + first run
+    compile_s = time.perf_counter() - t0
+    reps = 3 if p.shape[0] <= 300_000 else 2
+    return compile_s, timeit(f, repeats=reps, warmup=0)
+
+
+def main(full: bool = False):
+    rep = Reporter('counts_kernel',
+                   ['m', 'groups', 'backend', 'tree_s', 'pallas_s',
+                    'tree_compile_s', 'pallas_compile_s', 'winner',
+                    'speedup'])
+    backend = jax.default_backend()
+    sizes = [4096, 16384, 65536, 262144] + ([1048576] if full else [])
+    rng = np.random.default_rng(0)
+    for m in sizes:
+        for n_groups in (0, 16):         # 0 = ungrouped
+            p = rng.normal(size=m).astype(np.float32) * 2.0
+            y = rng.integers(0, 5, size=m).astype(np.float32)
+            g = (None if n_groups == 0 else
+                 rng.integers(0, n_groups, size=m).astype(np.int32))
+            tc, ts = _bench(p, y, g, 'tree')
+            pc, ps = _bench(p, y, g, 'pallas')
+            winner = 'pallas' if ps < ts else 'tree'
+            rep.row(m, n_groups, backend, round(ts, 4), round(ps, 4),
+                    round(tc, 2), round(pc, 2), winner,
+                    round(ts / ps, 2))
+    return rep
+
+
+if __name__ == '__main__':
+    import sys
+    main(full='--full' in sys.argv).save()

@@ -219,6 +219,19 @@ def counts_grouped_fused(p: jnp.ndarray, y: jnp.ndarray, g: jnp.ndarray):
     return counts_fused(pg, yg)
 
 
+ENGINES = ('tree', 'blocked', 'pallas', 'auto')
+
+
+def _validate_engine(engine: str) -> None:
+    """Reject typo'd engine names before any work (or any late import)
+    happens: `counts_dispatch` runs at trace time inside the oracles'
+    jitted steps, and an error surfacing from a half-built trace is far
+    less actionable than one thrown at the dispatch boundary."""
+    if engine not in ENGINES:
+        raise ValueError(f'unknown counting engine {engine!r}; '
+                         f'expected one of {ENGINES}')
+
+
 def counts_dispatch(p, y, g, engine: str = 'tree', block: int = 2048):
     """Trace-time dispatch over counting engines — THE counting core every
     oracle shares (fused `_FusedOracle` and chunked `StreamingOracle`
@@ -227,9 +240,24 @@ def counts_dispatch(p, y, g, engine: str = 'tree', block: int = 2048):
     g is None for ungrouped counting; grouped counting applies the
     key-offset trick (`_group_offsets`) before the chosen engine runs.
     engine: 'tree' (merge-sort tree, the paper), 'blocked' (O(m^2)
-    pairwise, O(m*block) memory), 'auto' (`kernels.pairwise_rank
-    .counts_auto`: Pallas kernel for small m on TPU, tree otherwise).
+    pairwise, O(m*block) memory), 'pallas' (`kernels.rank_counts`: both
+    frequency vectors in one fused tiled on-chip pass, DESIGN.md §8),
+    'auto' (`kernels.pairwise_rank.counts_auto`: measured tiering —
+    Pallas pairwise for small m on TPU, Pallas rank-counts above it,
+    tree lowering elsewhere).
+
+    engine and block are validated up front: `engine` against `ENGINES`
+    and, for the one engine that consumes it, `block` through the same
+    `_validate_block_rows` gate as every other block-sized knob — a
+    typo'd engine or a fractional/non-positive block fails here with an
+    actionable message instead of deep inside a trace.
     """
+    _validate_engine(engine)
+    if engine == 'blocked':
+        # function-local import: repro.data pulls heavier deps and the
+        # core counting module stays importable without it
+        from ..data.rowblocks import _validate_block_rows
+        block = _validate_block_rows(block, 'counts_dispatch block')
     if engine == 'tree':
         if g is None:
             return counts_fused(p, y)
@@ -241,8 +269,9 @@ def counts_dispatch(p, y, g, engine: str = 'tree', block: int = 2048):
         # patchable (tests) and the pallas import stays off the core path
         from repro.kernels.pairwise_rank import ops as _pr_ops
         return _pr_ops.counts_auto(p, y)
-    if engine != 'blocked':
-        raise ValueError(f'unknown counting engine {engine!r}')
+    if engine == 'pallas':
+        from repro.kernels.rank_counts import ops as _rc_ops
+        return _rc_ops.rank_counts(p, y)
     return counts_blocked_host(p, y, block=block)
 
 

@@ -79,7 +79,7 @@ def out_shardings(mesh):
             NamedSharding(mesh, P('model')))     # subgradient (like w)
 
 
-def make_oracle_body(mesh, variant: str = 'base'):
+def make_oracle_body(mesh, variant: str = 'base', engine: str = 'tree'):
     """Traced `(X, y, g, w, n_pairs) -> (loss, a)` — the paper's Algorithm 3
     sharded over `mesh`, composable inside a larger jitted program (bmrm's
     device `bundle_step` inlines it via `ShardedOracle.step_fn`).
@@ -95,7 +95,16 @@ def make_oracle_body(mesh, variant: str = 'base'):
     merge-sort-tree is sharding-constrained over the mesh rows, so each
     device answers m/devices rank queries against the replicated (4 MB)
     tree levels. Identical outputs; O(devices) less query work per device.
+
+    engine='tree' (default) is the sharded production path above. Any
+    other `counts.ENGINES` entry runs `counts_dispatch` on the
+    all-gathered (replicated) offset keys instead — the Pallas kernels
+    have no partitioning rule, so their count work replicates across
+    devices like variant='base' does; the matvecs (the O(m n) term)
+    stay sharded either way. `variant='opt'` query sharding applies to
+    the tree engine only.
     """
+    _counts._validate_engine(engine)
     rows = tuple(a for a in ('pod', 'data') if a in mesh.axis_names)
     cns = None
     if variant == 'opt':
@@ -124,7 +133,9 @@ def make_oracle_body(mesh, variant: str = 'base'):
             pk, yk = _counts._group_offsets(p_rep, y_rep, g_rep)
         else:
             pk, yk = p_rep, y_rep
-        if cns is None:
+        if engine != 'tree':
+            c, d = _counts.counts_dispatch(pk, yk, None, engine=engine)
+        elif cns is None:
             c, d = _counts.counts(pk, yk)
         else:
             c = _counts._half_counts(pk, yk, constrain=cns)

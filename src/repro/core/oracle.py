@@ -317,15 +317,25 @@ _fused_step = functools.partial(jax.jit, static_argnames=(
 
 class _FusedOracle(RankOracle):
     """Shared machinery around `_fused_step`. Subclasses pick the counting
-    engine ('tree' | 'blocked' | 'auto') via `_engine`."""
+    engine ('tree' | 'blocked' | 'pallas' | 'auto') via `_engine`; an
+    explicit `engine=` overrides the subclass default (the
+    `make_oracle(engine=)` / `RankSVM(engine=)` pass-through), so e.g.
+    the tree oracle swaps its per-iteration counting pass for the fused
+    rank-counts Pallas kernel with zero other changes."""
 
     device_resident = True
     supports_device_solver = True
     supports_path_vmap = True    # pure traced step: vmaps over w cleanly
+    # ('pallas' included: rank_counts carries a sequential_vmap rule)
     _engine = 'tree'
     _block = 0          # only meaningful for the blocked engine
 
-    def __init__(self, X, y, groups=None, csr_rmatvec: str = 'auto'):
+    def __init__(self, X, y, groups=None, csr_rmatvec: str = 'auto',
+                 engine: str | None = None, engine_block: int = 2048):
+        if engine is not None:
+            _counts._validate_engine(engine)
+            self._engine = engine
+            self.name = f'{self.name}[{engine}]'
         y = np.asarray(y, np.float32)
         self._feats = _features(X, csr_rmatvec=csr_rmatvec)
         self.m, self.n = self._feats.m, self._feats.n
@@ -343,6 +353,12 @@ class _FusedOracle(RankOracle):
         self._g = None if groups is None else jnp.asarray(groups)
         self._inv_n = 1.0 / float(self.n_pairs)
         self._inv_n_dev = jnp.asarray(self._inv_n, f32)
+        if engine is not None:
+            # an explicit engine override also owns the block: only the
+            # O(m^2) blocked engine consumes one.
+            self._block = (min(_validate_block(engine_block,
+                                               'engine block'), self.m)
+                           if engine == 'blocked' else 0)
         # When the transpose-matvec is host-dispatched (CPU CSR), fusing
         # the iteration on device would force the slower scatter path;
         # solver='auto' keeps such oracles on the host driver.
@@ -394,14 +410,17 @@ class PairwiseOracle(_FusedOracle):
     (tiled Pallas kernel for small m on TPU, merge tree otherwise)."""
 
     def __init__(self, X, y, groups=None, block: int = 2048,
-                 dispatch: str = 'blocked', csr_rmatvec: str = 'auto'):
+                 dispatch: str = 'blocked', csr_rmatvec: str = 'auto',
+                 engine: str | None = None):
         if dispatch not in ('blocked', 'auto'):
             raise ValueError(f'unknown dispatch {dispatch!r}')
         block = _validate_block(block, 'PairwiseOracle block')
         self._engine = 'blocked' if dispatch == 'blocked' else 'auto'
         self.name = 'pairs' if dispatch == 'blocked' else 'auto'
-        super().__init__(X, y, groups=groups, csr_rmatvec=csr_rmatvec)
-        self._block = min(block, self.m) if dispatch == 'blocked' else 0
+        super().__init__(X, y, groups=groups, csr_rmatvec=csr_rmatvec,
+                         engine=engine, engine_block=block)
+        if engine is None:
+            self._block = min(block, self.m) if dispatch == 'blocked' else 0
 
 
 class GroupedOracle(_FusedOracle):
@@ -412,7 +431,7 @@ class GroupedOracle(_FusedOracle):
     name = 'grouped'
 
     def __init__(self, X, y, groups, inner: str = 'tree', block: int = 2048,
-                 csr_rmatvec: str = 'auto'):
+                 csr_rmatvec: str = 'auto', engine: str | None = None):
         if groups is None:
             raise ValueError('GroupedOracle requires group ids')
         if inner not in ('tree', 'pairs', 'auto'):
@@ -421,8 +440,10 @@ class GroupedOracle(_FusedOracle):
         self._engine = {'tree': 'tree', 'pairs': 'blocked',
                         'auto': 'auto'}[inner]
         self.name = f'grouped/{inner}'
-        super().__init__(X, y, groups=groups, csr_rmatvec=csr_rmatvec)
-        self._block = min(block, self.m) if inner == 'pairs' else 0
+        super().__init__(X, y, groups=groups, csr_rmatvec=csr_rmatvec,
+                         engine=engine, engine_block=block)
+        if engine is None:
+            self._block = min(block, self.m) if inner == 'pairs' else 0
 
 
 # ------------------------------------------------------- streaming oracle
@@ -430,9 +451,13 @@ class GroupedOracle(_FusedOracle):
 
 # Jitted entry of the shared counting core for the streaming host path:
 # the full score vector arrives chunk-accumulated from host, one O(m)
-# device computation produces loss + coefficients.
-_stream_counts = jax.jit(functools.partial(_loss_and_coeffs, engine='tree',
-                                           block=0))
+# device computation produces loss + coefficients. Engine-parameterized
+# (static) so the streaming oracle rides the same counting engines as
+# the fused ones — its default 'auto' is the measured tiering: tree
+# lowering on CPU (bit-identical to the old hardwired 'tree'), Pallas
+# kernels on TPU.
+_stream_counts = functools.partial(
+    jax.jit, static_argnames=('engine', 'block'))(_loss_and_coeffs)
 
 DEFAULT_STREAM_BLOCK = 8192
 
@@ -514,7 +539,11 @@ class StreamingOracle(RankOracle):
     supports_path_vmap = False   # pure_callback fetches have no batch rule
 
     def __init__(self, X, y, groups=None, block_rows: int | None = None,
-                 memory_budget: float | None = None):
+                 memory_budget: float | None = None,
+                 engine: str = 'auto'):
+        _counts._validate_engine(engine)
+        self._engine = engine
+        self._cblock = 2048 if engine == 'blocked' else 0
         y = np.asarray(y, np.float32)
         self._src = _rowblocks.as_row_block_source(X)
         self.m, self.n = self._src.m, self._src.n
@@ -568,7 +597,8 @@ class StreamingOracle(RankOracle):
         for lo, hi in self._src.ranges(self._B):
             p[lo:hi] = self._src.matvec_block(lo, hi, w64)
         loss, cd = _stream_counts(jnp.asarray(p), self._y, self._g,
-                                  self._inv_n_dev)
+                                  self._inv_n_dev, engine=self._engine,
+                                  block=self._cblock)
         v = np.asarray(cd, np.float64) * self._inv_n
         a = np.zeros(self.n, np.float64)
         for lo, hi in self._src.ranges(self._B):
@@ -583,6 +613,7 @@ class StreamingOracle(RankOracle):
         (same discipline as `_FusedOracle.step_fn`)."""
         B, n, m, nblk = self._B, self.n, self.m, self._nblk
         y, g, inv_n = self._y, self._g, self._inv_n_dev
+        engine, cblock = self._engine, self._cblock
         fetch = functools.partial(_fetch_padded, self._src, B, m, n)
         slab = jax.ShapeDtypeStruct((B, n), f32)
         pad = nblk * B - m
@@ -595,7 +626,8 @@ class StreamingOracle(RankOracle):
             _, ps = jax.lax.scan(score_blk, jnp.zeros((), f32),
                                  jnp.arange(nblk))
             p = ps.reshape(-1)[:m] if pad else ps.reshape(-1)
-            loss, cd = _loss_and_coeffs(p, y, g, inv_n)
+            loss, cd = _loss_and_coeffs(p, y, g, inv_n, engine=engine,
+                                        block=cblock)
             v = cd * inv_n
             vb = (jnp.pad(v, (0, pad)) if pad else v).reshape(nblk, B)
 
@@ -648,7 +680,8 @@ class ShardedOracle(RankOracle):
     # replicated lambda axis into its sharding constraints
 
     def __init__(self, X, y, groups=None, mesh: Mesh | None = None,
-                 variant: str = 'base'):
+                 variant: str = 'base', engine: str = 'tree'):
+        _counts._validate_engine(engine)
         y = np.asarray(y, np.float32)
         sparse_in = (_is_csr_like(X) and hasattr(X, 'to_dense')) or (
             _scipy_sparse is not None and _scipy_sparse.issparse(X))
@@ -701,7 +734,8 @@ class ShardedOracle(RankOracle):
             groups = np.concatenate([base,
                                      np.full(pad, pad_id, np.int32)])
         sh = _dist.arg_shardings(self._mesh)
-        self._body = _dist.make_oracle_body(self._mesh, variant=variant)
+        self._body = _dist.make_oracle_body(self._mesh, variant=variant,
+                                            engine=engine)
         self._fn = jax.jit(self._body)
         self._X = jax.device_put(jnp.asarray(X, jnp.bfloat16), sh['X'])
         self._yd = jax.device_put(jnp.asarray(y, f32), sh['y'])
@@ -801,6 +835,7 @@ METHODS = ('tree', 'pairs', 'auto', 'sharded', 'stream')
 
 
 def make_oracle(X, y, groups=None, method: str = 'tree', *,
+                engine: str | None = None,
                 pair_block: int = 2048, mesh: Mesh | None = None,
                 variant: str = 'base', csr_rmatvec: str = 'auto',
                 memory_budget: float | None = None,
@@ -826,8 +861,9 @@ def make_oracle(X, y, groups=None, method: str = 'tree', *,
       'sharded'  ShardedOracle     X sharded over mesh      tree on the
                                    (bf16, dense)            gathered scores
                                                             | vmap
-      'stream'   StreamingOracle   ONE (block, n) f32 slab  tree, one global
-                                   + O(m) vectors           pass
+      'stream'   StreamingOracle   ONE (block, n) f32 slab  ONE global
+                                   + O(m) vectors           engine pass
+                                                            (default 'auto')
                                                             | sequential
                                                             (pure_callback
                                                             cannot vmap)
@@ -856,30 +892,58 @@ def make_oracle(X, y, groups=None, method: str = 'tree', *,
     dense f32 slab, or O(nnz_row) for CSR); `pair_block` is the
     VMEM/cache block of the O(m^2) engine. Both are validated as
     positive whole row counts.
+
+    `engine=` overrides the COUNTING ENGINE of whatever oracle `method`
+    selects (orthogonal to the method's memory model / residency
+    choice), validated up front against `counts.ENGINES`:
+
+      engine     counting pass (`counts.counts_dispatch`)
+      None       the method's own default (table above)
+      'tree'     merge-sort tree, one fused pass (`counts_fused`)
+      'blocked'  O(m^2) pairwise, `pair_block`-row VMEM blocks
+      'pallas'   fused rank-counts Pallas kernel: both frequency
+                 vectors in one tiled on-chip pass (DESIGN.md §8;
+                 interpret-mode off TPU, vmap-safe for path sweeps)
+      'auto'     measured tiering (`kernels.pairwise_rank.counts_auto`):
+                 TPU = pairwise kernel to 4096 elements then
+                 rank-counts kernel; elsewhere tree lowering —
+                 EXPERIMENTS.md §Counts kernel
+
+    The streaming oracle's one global counting pass defaults to 'auto'
+    (identical to its previous hardwired tree on CPU, kernel pickup on
+    accelerators); the sharded oracle defaults to 'tree' (the only
+    engine with a partitioned counting path — any other engine counts
+    on the all-gathered replicated scores, matvecs still sharded).
     """
     if method not in METHODS:
         raise ValueError(f'unknown oracle method {method!r}; '
                          f'expected one of {METHODS}')
+    if engine is not None:
+        _counts._validate_engine(engine)
     stream_only = isinstance(X, (_rowblocks.RowBlockSource, np.memmap))
     if method == 'auto' and not stream_only and memory_budget is not None:
         if _rowblocks.projected_resident_gib(X) > float(memory_budget):
             method = 'stream'
     if method == 'stream' or (method == 'auto' and stream_only):
         return StreamingOracle(X, y, groups=groups, block_rows=stream_block,
-                               memory_budget=memory_budget)
+                               memory_budget=memory_budget,
+                               engine=engine if engine is not None
+                               else 'auto')
     if isinstance(X, _rowblocks.RowBlockSource):
         raise ValueError(
             f"method={method!r} needs materialized features, but X is a "
             f'{type(X).__name__} row-block source; train it with '
             "method='stream' (or 'auto', which streams such sources)")
     if method == 'sharded':
-        return ShardedOracle(X, y, groups=groups, mesh=mesh, variant=variant)
+        return ShardedOracle(X, y, groups=groups, mesh=mesh, variant=variant,
+                             engine=engine if engine is not None else 'tree')
     if groups is not None:
         return GroupedOracle(X, y, groups, inner=method, block=pair_block,
-                             csr_rmatvec=csr_rmatvec)
+                             csr_rmatvec=csr_rmatvec, engine=engine)
     if method == 'tree':
-        return TreeOracle(X, y, csr_rmatvec=csr_rmatvec)
+        return TreeOracle(X, y, csr_rmatvec=csr_rmatvec, engine=engine,
+                          engine_block=pair_block)
     return PairwiseOracle(
         X, y, block=pair_block,
         dispatch='auto' if method == 'auto' else 'blocked',
-        csr_rmatvec=csr_rmatvec)
+        csr_rmatvec=csr_rmatvec, engine=engine)

@@ -67,6 +67,7 @@ from . import rank_loss as _rank_loss
 from ..data.rowblocks import _validate_block_rows as _validate_block
 from .bmrm import (SOLVERS, _validate_lams, _validate_path_mode, bmrm,
                    bmrm_path)
+from .counts import _validate_engine
 from .oracle import METHODS, make_oracle
 
 
@@ -112,6 +113,19 @@ class RankSVM:
       method: oracle selector — 'tree' | 'pairs' | 'auto' | 'sharded' |
         'stream' (see module docstring; core.oracle.make_oracle holds the
         full dispatch table).
+      engine: counting-engine override for the selected oracle
+        (None | 'tree' | 'blocked' | 'pallas' | 'auto'), orthogonal to
+        `method`'s memory model and validated at construction:
+
+          engine     per-iteration counting pass
+          None       the method's own default
+          'tree'     merge-sort tree (one fused pass)
+          'blocked'  O(m^2) pairwise, `pair_block`-row blocks
+          'pallas'   fused rank-counts Pallas kernel — both frequency
+                     vectors in one tiled on-chip pass (DESIGN.md §8)
+          'auto'     measured tiering: Pallas pairwise then rank-counts
+                     on TPU, tree lowering elsewhere (EXPERIMENTS.md
+                     §Counts kernel)
       solver: BMRM driver — 'host' | 'device' | 'auto' (default 'auto';
         core.bmrm). 'auto' picks the fused device driver when the oracle
         supports and prefers it and eps is at or above the f32 floor.
@@ -149,10 +163,14 @@ class RankSVM:
                  solver: str = 'auto', max_planes: int | None = None,
                  sync_every: 'int | str' = 8, qp_iters: int = 128,
                  memory_budget: float | None = None,
-                 stream_block: int | None = None):
+                 stream_block: int | None = None,
+                 engine: str | None = None):
         if method not in METHODS:
             raise ValueError(f'unknown method {method!r}; '
                              f'expected one of {METHODS}')
+        if engine is not None:
+            _validate_engine(engine)
+        self.engine = engine
         if solver not in SOLVERS:
             raise ValueError(f'unknown solver {solver!r}; '
                              f'expected one of {SOLVERS}')
@@ -283,6 +301,7 @@ class RankSVM:
 
     def _make_oracle(self, X, y, groups):
         return make_oracle(X, y, groups=groups, method=self.method,
+                           engine=self.engine,
                            pair_block=self.pair_block, mesh=self.mesh,
                            memory_budget=self.memory_budget,
                            stream_block=self.stream_block)

@@ -11,7 +11,10 @@ from . import kernel as _k
 
 
 def _on_tpu() -> bool:
-    return jax.default_backend() == 'tpu'
+    # Probe the actual device platform, not jax.default_backend(): the
+    # question is "can a compiled Pallas kernel lower here", which is a
+    # property of the hardware the computation will run on.
+    return jax.devices()[0].platform == 'tpu'
 
 
 @functools.partial(jax.jit,
@@ -54,8 +57,25 @@ KERNEL_MAX_M = 4096
 
 
 def counts_auto(p: jnp.ndarray, y: jnp.ndarray):
-    """Dispatch: Pallas pairwise kernel for small m on TPU, merge-tree else."""
+    """Measured engine tiering behind `counts_dispatch(engine='auto')`.
+
+    TPU: the dense Pallas pairwise kernel up to KERNEL_MAX_M elements
+    (the fig5_crossover win band), the fused rank-counts kernel
+    (`kernels.rank_counts`, DESIGN.md §8) above it — one tiled on-chip
+    pass for both frequency vectors, with its own in-trace tree
+    fallback when the distinct-y alphabet overflows the histogram.
+
+    Other backends: the single-tree merge-sort pass (`counts_fused`).
+    The rank-counts kernel only runs through the Pallas interpreter off
+    TPU; its measured interpret-mode per-call win at mid m does not
+    survive the extra compile latency and inverts at m ~ 1e6, so
+    CPU-auto staying on the tree is the recorded dispatch exception
+    (EXPERIMENTS.md §Counts kernel).
+    """
     from repro.core import counts as _tree
-    if _on_tpu() and p.shape[0] <= KERNEL_MAX_M:
-        return pairwise_counts(p, y)
-    return _tree.counts(p, y)
+    if _on_tpu():
+        if p.shape[0] <= KERNEL_MAX_M:
+            return pairwise_counts(p, y)
+        from ..rank_counts import ops as _rc_ops
+        return _rc_ops.rank_counts(p, y)
+    return _tree.counts_fused(p, y)

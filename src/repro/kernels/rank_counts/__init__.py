@@ -1,0 +1,1 @@
+from .ops import rank_counts, rank_counts_grouped  # noqa: F401

@@ -1,0 +1,3 @@
+"""Pure-jnp oracle for the rank_counts kernel (= the paper's eqs. 5-6)."""
+from repro.core.ref import (counts_ref, grouped_counts_ref,  # noqa: F401
+                            loss_from_counts)

@@ -1,0 +1,296 @@
+"""Bit-parity suite for the fused rank-counts Pallas kernel
+(`kernels.rank_counts`): kernel vs `counts_fused` vs `ref.counts_ref`
+on adversarial tie patterns, plus the dispatch surface it rides behind
+(`counts_dispatch(engine=...)` / `make_oracle` / `RankSVM`) and the
+vmap-batching contract used by `bmrm_path(mode='vmap')`.
+
+Everything here runs through the Pallas interpreter on CPU (marked
+`pallas_interpret`); the one compiled-mode assertion skips off-TPU."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import counts as C
+from repro.core import ref as R
+from repro.core.oracle import make_oracle
+from repro.core.ranksvm import RankSVM
+from repro.kernels.rank_counts import ops
+
+pytestmark = pytest.mark.pallas_interpret
+
+
+def _assert_kernel_match(p, y, **kw):
+    """Kernel == O(m^2) reference == single-tree fast path, bit-for-bit."""
+    p, y = jnp.asarray(p), jnp.asarray(y)
+    c, d = ops.rank_counts(p, y, **kw)
+    cr, dr = R.counts_ref(p.astype(jnp.float32), y.astype(jnp.float32))
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(dr))
+    cf, df = C.counts_fused(p, y)
+    np.testing.assert_array_equal(np.asarray(cf), np.asarray(cr))
+    np.testing.assert_array_equal(np.asarray(df), np.asarray(dr))
+    return np.asarray(c), np.asarray(d)
+
+
+# ----------------------------------------------------------- shape/ties
+
+
+@pytest.mark.parametrize('m', [1, 2, 3, 127, 129, 1000, 2049, 4097])
+def test_rank_counts_shape_sweep(m):
+    rng = np.random.default_rng(m)
+    p = rng.normal(size=m).astype(np.float32) * 2
+    y = rng.integers(0, 8, size=m).astype(np.float32)
+    _assert_kernel_match(p, y)
+
+
+def test_rank_counts_empty():
+    c, d = ops.rank_counts(jnp.zeros((0,), jnp.float32),
+                           jnp.zeros((0,), jnp.float32))
+    assert c.shape == (0,) and d.shape == (0,)
+
+
+def test_rank_counts_exact_margin_boundary():
+    """p_j == p_i + 1 must NOT count toward c (strict inequality)."""
+    p = np.asarray([0.0, 1.0], np.float32)
+    y = np.asarray([0.0, 1.0], np.float32)
+    c, d = _assert_kernel_match(p, y)
+    assert c[0] == 0 and d[1] == 0
+
+
+def test_rank_counts_exact_margin_grid():
+    """Scores on an integer grid: every frontier lands exactly on a
+    run of p_i ± 1 ties — the worst case for the searchsorted band
+    boundaries."""
+    rng = np.random.default_rng(5)
+    m = 1500
+    p = (np.arange(m) % 5).astype(np.float32)
+    y = rng.integers(0, 4, size=m).astype(np.float32)
+    _assert_kernel_match(p, y)
+
+
+def test_rank_counts_just_inside_margin():
+    eps = np.float32(1e-3)
+    p = np.asarray([0.0, 1.0 - eps], np.float32)
+    y = np.asarray([0.0, 1.0], np.float32)
+    c, d = _assert_kernel_match(p, y)
+    assert c[0] == 1 and d[1] == 1
+
+
+def test_rank_counts_duplicate_scores():
+    rng = np.random.default_rng(3)
+    p = (rng.integers(-2, 3, size=800) * 0.5).astype(np.float32)
+    y = rng.integers(0, 3, size=800).astype(np.float32)
+    _assert_kernel_match(p, y)
+
+
+def test_rank_counts_duplicate_utilities():
+    """Constant y: no preference pairs, both vectors identically 0."""
+    rng = np.random.default_rng(4)
+    p = rng.normal(size=300).astype(np.float32)
+    y = np.ones(300, np.float32)
+    c, d = _assert_kernel_match(p, y)
+    assert not c.any() and not d.any()
+
+
+def test_rank_counts_float64_input():
+    rng = np.random.default_rng(6)
+    p = rng.normal(size=400) * 3
+    y = rng.integers(0, 5, size=400).astype(np.float64)
+    _assert_kernel_match(p, y)
+
+
+@pytest.mark.parametrize('ti,tj', [(1, 1), (2, 4), (4, 2), (8, 8)])
+def test_rank_counts_tile_sweep(ti, tj):
+    """Output must be identical for any VMEM tiling choice."""
+    rng = np.random.default_rng(7)
+    p = (rng.integers(-3, 4, size=700) * 0.5).astype(np.float32)
+    y = rng.integers(0, 6, size=700).astype(np.float32)
+    _assert_kernel_match(p, y, ti_rows=ti, tj_rows=tj)
+
+
+def test_rank_counts_level_overflow_falls_back_exactly():
+    """More distinct y values than histogram levels: the in-trace
+    `lax.cond` guard must produce the tree's exact counts."""
+    rng = np.random.default_rng(8)
+    p = rng.normal(size=600).astype(np.float32)
+    y = rng.normal(size=600).astype(np.float32)      # ~600 distinct ranks
+    _assert_kernel_match(p, y)                       # default levels=256
+    # and with an explicit tiny capacity on an in-capacity-looking input
+    y_few = rng.integers(0, 10, size=600).astype(np.float32)
+    _assert_kernel_match(p, y_few, levels=4)
+
+
+# -------------------------------------------------------------- grouped
+
+
+def test_rank_counts_grouped_matches_refs():
+    rng = np.random.default_rng(11)
+    for m, n_groups in [(5, 2), (33, 3), (128, 5), (700, 7)]:
+        p = (rng.integers(-2, 3, size=m) * 0.5).astype(np.float32)
+        y = rng.integers(0, 3, size=m).astype(np.float32)
+        g = rng.integers(0, n_groups, size=m).astype(np.int32)
+        pj, yj, gj = jnp.asarray(p), jnp.asarray(y), jnp.asarray(g)
+        ck, dk = ops.rank_counts_grouped(pj, yj, gj)
+        cr, dr = R.grouped_counts_ref(pj, yj, gj)
+        np.testing.assert_array_equal(np.asarray(ck), np.asarray(cr))
+        np.testing.assert_array_equal(np.asarray(dk), np.asarray(dr))
+        cf, df = C.counts_grouped_fused(pj, yj, gj)
+        np.testing.assert_array_equal(np.asarray(cf), np.asarray(cr))
+        np.testing.assert_array_equal(np.asarray(df), np.asarray(dr))
+
+
+def test_rank_counts_grouped_boundary_ties():
+    """Equal scores/utilities straddling a group boundary: the offset
+    keys must keep the groups cleanly apart."""
+    p = np.asarray([0.0, 0.5, 0.5, 0.5, 0.5, 1.0], np.float32)
+    y = np.asarray([0.0, 1.0, 1.0, 1.0, 1.0, 0.0], np.float32)
+    g = np.asarray([0, 0, 0, 1, 1, 1], np.int32)
+    pj, yj, gj = jnp.asarray(p), jnp.asarray(y), jnp.asarray(g)
+    ck, dk = ops.rank_counts_grouped(pj, yj, gj)
+    cr, dr = R.grouped_counts_ref(pj, yj, gj)
+    np.testing.assert_array_equal(np.asarray(ck), np.asarray(cr))
+    np.testing.assert_array_equal(np.asarray(dk), np.asarray(dr))
+
+
+def test_rank_counts_grouped_many_groups_overflow():
+    """Enough groups to overflow the level alphabet (offsets multiply
+    it): the guard falls back in-trace, results stay exact."""
+    rng = np.random.default_rng(12)
+    m = 900
+    p = rng.normal(size=m).astype(np.float32)
+    y = rng.integers(0, 4, size=m).astype(np.float32)
+    g = rng.integers(0, 90, size=m).astype(np.int32)   # ~90*4 ranks > 256
+    pj, yj, gj = jnp.asarray(p), jnp.asarray(y), jnp.asarray(g)
+    ck, dk = ops.rank_counts_grouped(pj, yj, gj)
+    cr, dr = R.grouped_counts_ref(pj, yj, gj)
+    np.testing.assert_array_equal(np.asarray(ck), np.asarray(cr))
+    np.testing.assert_array_equal(np.asarray(dk), np.asarray(dr))
+
+
+# ----------------------------------------------------- dispatch surface
+
+
+def test_counts_dispatch_pallas_engine():
+    rng = np.random.default_rng(13)
+    p = jnp.asarray((rng.integers(-2, 3, size=500) * 0.5)
+                    .astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 3, size=500).astype(np.float32))
+    g = jnp.asarray(rng.integers(0, 4, size=500).astype(np.int32))
+    c, d = C.counts_dispatch(p, y, None, engine='pallas')
+    cr, dr = R.counts_ref(p, y)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(dr))
+    cg, dg = C.counts_dispatch(p, y, g, engine='pallas')
+    crg, drg = R.grouped_counts_ref(p, y, g)
+    np.testing.assert_array_equal(np.asarray(cg), np.asarray(crg))
+    np.testing.assert_array_equal(np.asarray(dg), np.asarray(drg))
+
+
+def test_counts_dispatch_validates_engine_up_front():
+    p = jnp.zeros(4, jnp.float32)
+    with pytest.raises(ValueError, match="unknown counting engine"):
+        C.counts_dispatch(p, p, None, engine='pallaz')
+
+
+def test_counts_dispatch_validates_block_up_front():
+    p = jnp.zeros(8, jnp.float32)
+    y = jnp.asarray(np.arange(8, dtype=np.float32))
+    for bad in (0, -4, 2.5):
+        with pytest.raises(ValueError, match='block'):
+            C.counts_dispatch(p, y, None, engine='blocked', block=bad)
+    # a valid block still flows through to the blocked engine
+    c, d = C.counts_dispatch(p, y, None, engine='blocked', block=3)
+    cr, dr = R.counts_ref(p, y)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(dr))
+
+
+def test_typoed_engine_rejected_before_reaching_dispatch():
+    """make_oracle / RankSVM validate engine at construction — a typo
+    must not surface later from inside a jitted trace."""
+    X = np.eye(4, dtype=np.float32)
+    y = np.arange(4, dtype=np.float32)
+    with pytest.raises(ValueError, match='unknown counting engine'):
+        make_oracle(X, y, engine='pallsa')
+    with pytest.raises(ValueError, match='unknown counting engine'):
+        make_oracle(X, y, method='stream', engine='treee')
+    with pytest.raises(ValueError, match='unknown counting engine'):
+        make_oracle(X, y, method='sharded', engine='blockd')
+    with pytest.raises(ValueError, match='unknown counting engine'):
+        RankSVM(engine='auto ')
+
+
+@pytest.mark.parametrize('method', ['tree', 'pairs', 'stream'])
+def test_oracle_engine_pallas_matches_tree(method):
+    rng = np.random.default_rng(14)
+    X = rng.normal(size=(257, 6)).astype(np.float32)
+    y = rng.integers(0, 4, size=257).astype(np.float32)
+    w = rng.normal(size=6).astype(np.float32)
+    lt, at = make_oracle(X, y, method=method).loss_and_subgrad(w)
+    lp, ap = make_oracle(X, y, method=method,
+                         engine='pallas').loss_and_subgrad(w)
+    # identical counts -> identical loss and subgradient coefficients
+    assert float(lt) == pytest.approx(float(lp), rel=1e-6)
+    np.testing.assert_allclose(np.asarray(at), np.asarray(ap),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_grouped_oracle_engine_pallas_matches_tree():
+    rng = np.random.default_rng(15)
+    X = rng.normal(size=(200, 5)).astype(np.float32)
+    y = rng.integers(0, 3, size=200).astype(np.float32)
+    g = rng.integers(0, 6, size=200).astype(np.int32)
+    w = rng.normal(size=5).astype(np.float32)
+    lt, at = make_oracle(X, y, groups=g).loss_and_subgrad(w)
+    lp, ap = make_oracle(X, y, groups=g,
+                         engine='pallas').loss_and_subgrad(w)
+    assert float(lt) == pytest.approx(float(lp), rel=1e-6)
+    np.testing.assert_allclose(np.asarray(at), np.asarray(ap),
+                               rtol=1e-6, atol=1e-7)
+
+
+# ------------------------------------------------------------- batching
+
+
+def test_rank_counts_vmap_parity():
+    rng = np.random.default_rng(16)
+    P = jnp.asarray(rng.normal(size=(3, 400)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 4, size=400).astype(np.float32))
+    cv, dv = jax.vmap(lambda p: ops.rank_counts(p, y))(P)
+    for k in range(3):
+        cr, dr = R.counts_ref(P[k], y)
+        np.testing.assert_array_equal(np.asarray(cv[k]), np.asarray(cr))
+        np.testing.assert_array_equal(np.asarray(dv[k]), np.asarray(dr))
+
+
+def test_bmrm_path_vmap_composes_with_pallas_engine():
+    """The batched lambda path sweep vmaps the oracle step over the
+    per-lambda iterates; the kernel's sequential_vmap rule must carry
+    it to the same solution as the tree engine."""
+    rng = np.random.default_rng(17)
+    X = rng.normal(size=(120, 5)).astype(np.float32)
+    y = rng.integers(0, 3, size=120).astype(np.float32)
+    lams = [1e-2, 1e-1]
+    kw = dict(method='tree', eps=1e-3, max_iter=25)
+    pts_p = RankSVM(engine='pallas', **kw).path(X, y, lams, mode='vmap')
+    pts_t = RankSVM(**kw).path(X, y, lams, mode='vmap')
+    for pp, pt in zip(pts_p, pts_t):
+        np.testing.assert_allclose(pp.w, pt.w, rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------- accelerator-only
+
+
+@pytest.mark.skipif(jax.default_backend() != 'tpu',
+                    reason='compiled (non-interpret) Pallas lowering '
+                           'needs a TPU backend')
+def test_rank_counts_compiled_matches_ref_on_tpu():
+    rng = np.random.default_rng(18)
+    p = jnp.asarray(rng.normal(size=5000).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 5, size=5000).astype(np.float32))
+    c, d = ops.rank_counts(p, y, interpret=False)
+    cr, dr = R.counts_ref(p, y)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(dr))

@@ -1,0 +1,86 @@
+"""Row-sharded CSR vs densified-bf16 mesh oracle: memory and time.
+
+PR 7 replaced the sharded path's densify-and-warn CSR fallback with a
+padded slot layout (`core.distributed.csr_slot_arrays`, 6 bytes/slot)
+and a segment-sum oracle body that does O(nnz) matvec work. This
+measures the trade against densifying the same matrix to bf16
+(2 bytes/dense-column) on the forced-8-virtual-device CPU mesh:
+
+* **device bytes** — the slot arrays vs the dense bf16 shard, straight
+  from the array nbytes (the ~n/3 nnz-per-row crossover of DESIGN.md §9).
+* **oracle call time** — `loss_and_subgrad` wall time for both layouts.
+* **objective parity** — full device-driver BMRM fits must agree within
+  the driver tolerance (both stop at gap < eps).
+
+    PYTHONPATH=src python -m benchmarks.sharded_csr [--full]
+"""
+
+import os
+
+# Force the 8 virtual devices BEFORE jax is imported, appending so a
+# user-set XLA_FLAGS doesn't silently leave us on a 1-device "mesh".
+_FLAG = '--xla_force_host_platform_device_count=8'
+if _FLAG not in os.environ.get('XLA_FLAGS', ''):
+    os.environ['XLA_FLAGS'] = (
+        os.environ.get('XLA_FLAGS', '') + ' ' + _FLAG).strip()
+
+import numpy as np
+
+from repro.core.bmrm import bmrm
+from repro.core.oracle import ShardedOracle
+from repro.data.sparse import random_tfidf
+from repro.launch.mesh import make_mesh
+
+from .common import Reporter, timeit
+
+LAM, EPS, MAX_ITER = 1e-2, 1e-2, 200
+
+
+def _device_bytes(oracle):
+    return sum(int(a.nbytes) for a in oracle._args)
+
+
+def main(full: bool = False):
+    import jax
+    ndev = jax.device_count()
+    mesh = make_mesh((ndev // 2, 2), ('data', 'model'))
+    rep = Reporter('sharded_csr',
+                   ['m', 'n', 'nnz_per_row', 'devices',
+                    'csr_mib', 'dense_mib', 'csr_over_dense_mem',
+                    'csr_call_ms', 'dense_call_ms', 'csr_over_dense_ms',
+                    'csr_obj', 'dense_obj', 'obj_rel_diff',
+                    'csr_it', 'dense_it'])
+    sizes = [(4096, 512, 8), (8192, 2048, 16), (16384, 4096, 16)]
+    if full:
+        sizes.append((65536, 16384, 32))
+    for m, n, k in sizes:
+        X = random_tfidf(m=m, n=n, nnz_per_row=k, seed=0)
+        y = np.asarray(X.to_dense() @ np.random.default_rng(1).normal(
+            size=n), np.float64)
+        y += 0.3 * np.random.default_rng(2).normal(size=m)
+        csr = ShardedOracle(X, y, mesh=mesh)
+        dense = ShardedOracle(np.asarray(X.to_dense()), y, mesh=mesh)
+        assert csr.name == 'sharded/csr' and dense.name == 'sharded'
+        w = np.random.default_rng(3).normal(size=n)
+        c_ms = 1e3 * timeit(lambda: csr.loss_and_subgrad(w), repeats=3)
+        d_ms = 1e3 * timeit(lambda: dense.loss_and_subgrad(w), repeats=3)
+        rc = bmrm(csr, lam=LAM, eps=EPS, solver='device',
+                  max_iter=MAX_ITER)
+        rd = bmrm(dense, lam=LAM, eps=EPS, solver='device',
+                  max_iter=MAX_ITER)
+        c_obj, d_obj = rc.stats.obj_best, rd.stats.obj_best
+        rep.row(m, n, k, ndev,
+                round(_device_bytes(csr) / 2**20, 2),
+                round(_device_bytes(dense) / 2**20, 2),
+                round(_device_bytes(csr) / _device_bytes(dense), 3),
+                round(c_ms, 3), round(d_ms, 3), round(c_ms / d_ms, 2),
+                round(c_obj, 6), round(d_obj, 6),
+                format(abs(c_obj - d_obj) / max(abs(d_obj), 1e-12),
+                       '.2e'),
+                rc.stats.iterations, rd.stats.iterations)
+    return rep
+
+
+if __name__ == '__main__':
+    import sys
+    main(full='--full' in sys.argv).save()

@@ -8,6 +8,15 @@ Two measurements (PR 4, the out-of-core oracle layer):
   `StreamingOracle` (same data, same solver path). The streaming price is
   the per-block host<->device traffic of the two `pure_callback` passes.
 
+* **prefetch** — (PR 7) the same on-disk matrix through
+  `StreamingOracle(prefetch=...)`: wall time of one full oracle call (two
+  chunked disk passes + matvecs) at read-ahead depths 0/1/2, and
+  per-iteration device-solver fits at 0 vs 1. Depth 1 is what
+  `prefetch='auto'` picks for memmap sources; the honest numbers land in
+  EXPERIMENTS.md either way (on a fast local page cache the overlap can
+  be noise-level — the auto rule only spends the thread where there is
+  I/O to hide).
+
 * **beyond-ceiling** — features live in an np.memmap on DISK at an
   (m, n) whose projected fused residency exceeds the configured
   `memory_budget`; `RankSVM(method='auto', memory_budget=...)` must
@@ -73,9 +82,12 @@ def _write_disk_matrix(path, m, n, seed, block=32768):
 
 def main(full: bool = False):
     rep = Reporter('streaming_oracle',
-                   ['case', 'm', 'n', 'source', 'block_rows',
+                   # 'ratio' is per-case: overhead rows = stream/fused
+                   # per-iteration; prefetch rows = time over the depth-0
+                   # (synchronous) baseline of the same case
+                   ['case', 'm', 'n', 'source', 'block_rows', 'prefetch',
                     'fused_ms_per_it', 'stream_ms_per_it',
-                    'stream_over_fused', 'proj_fused_gib', 'budget_gib',
+                    'ratio', 'proj_fused_gib', 'budget_gib',
                     'block_mib', 'matrix_mib', 'rss_before_mb',
                     'rss_peak_mb', 'rss_delta_mb', 'iters', 'converged'])
 
@@ -102,7 +114,8 @@ def main(full: bool = False):
         o = svm.oracle_
         assert isinstance(o, StreamingOracle), o
         r = svm.report_
-        rep.row('beyond-ceiling', m, n, 'memmap', o.block_rows, '-',
+        rep.row('beyond-ceiling', m, n, 'memmap', o.block_rows,
+                o.prefetch, '-',
                 round(1e3 * r.seconds / max(1, r.iterations), 3), '-',
                 format(proj, '.4f'), format(budget, '.4f'),
                 round(o.block_resident_bytes() / 2**20, 2),
@@ -117,6 +130,38 @@ def main(full: bool = False):
               f'O(m log m) counting working set (which a fused oracle '
               f'pays too), not the {proj * 1024:.0f} MiB of features',
               flush=True)
+
+        # -- prefetch on/off over the same disk matrix --------------------
+        # Host-pass oracle calls: two full disk sweeps per call, the I/O
+        # the read-ahead thread is supposed to hide behind the matvecs.
+        rng = np.random.default_rng(2)
+        w = rng.normal(size=n)
+        blk = 16384
+        base_ms = None
+        for depth in (0, 1, 2):
+            so = StreamingOracle(src, y, block_rows=blk, prefetch=depth)
+            secs = timeit(lambda: so.loss_and_subgrad(w), repeats=3,
+                          warmup=1)
+            if depth == 0:
+                base_ms = 1e3 * secs
+            rep.row('prefetch-host', m, n, 'memmap', blk, depth, '-',
+                    round(1e3 * secs, 3),
+                    round(1e3 * secs / base_ms, 2), format(proj, '.4f'),
+                    '-', round(so.block_resident_bytes() / 2**20, 2),
+                    round(proj * 1024, 1), '-', '-', '-', '-', '-')
+        # Device-solver fits: the wraparound read-ahead inside step_fn
+        # (last block of the score pass warms block 0 of the grad pass).
+        base_per = None
+        for depth in (0, 1):
+            so = StreamingOracle(src, y, block_rows=blk, prefetch=depth)
+            s_per, s_it = _per_iter(so)
+            if depth == 0:
+                base_per = s_per
+            rep.row('prefetch-device', m, n, 'memmap', blk, depth, '-',
+                    round(1e3 * s_per, 3), round(s_per / base_per, 2),
+                    format(proj, '.4f'), '-',
+                    round(so.block_resident_bytes() / 2**20, 2),
+                    round(proj * 1024, 1), '-', '-', '-', s_it, '-')
     finally:
         os.unlink(tmp.name)
 
@@ -129,7 +174,7 @@ def main(full: bool = False):
         f_per, _ = _per_iter(TreeOracle(X, y))
         so = StreamingOracle(X, y, block_rows=8192)
         s_per, s_it = _per_iter(so)
-        rep.row('overhead', m, n, 'dense', so.block_rows,
+        rep.row('overhead', m, n, 'dense', so.block_rows, so.prefetch,
                 round(1e3 * f_per, 3), round(1e3 * s_per, 3),
                 round(s_per / f_per, 2),
                 format(projected_resident_gib(X), '.4f'), '-',

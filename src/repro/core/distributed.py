@@ -29,6 +29,15 @@ conditions by construction, so the sharded cost model above is unchanged.
 device driver inlines it into its jitted `bundle_step` via
 `ShardedOracle.step_fn`, with the bundle state carrying the matching
 sharding annotations (`core.bmrm.bundle_state_shardings`).
+
+Sparse features stay sparse (DESIGN.md §9): `make_csr_oracle_body` is
+the same oracle over a row-sharded padded CSR slot layout
+(`csr_slot_arrays`) whose matvecs cost O(nnz) instead of dense m·n —
+only the two matvecs differ, the counting/loss core
+(`_scores_to_coeffs`) is shared. And X never has to be host-resident:
+`assemble_row_sharded` streams each host's row ranges out of a
+`RowBlockSource` (prefetched) and stitches the device shards with
+`jax.make_array_from_single_device_arrays`.
 """
 
 from __future__ import annotations
@@ -37,9 +46,12 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from . import counts as _counts
+from ..data import rowblocks as _rowblocks
 
 f32 = jnp.float32
 
@@ -71,6 +83,12 @@ def arg_shardings(mesh):
         'g': NamedSharding(mesh, P(rows)),       # group ids ride like y
         'w': NamedSharding(mesh, P('model')),
         'n_pairs': NamedSharding(mesh, P()),
+        # CSR layout (make_csr_oracle_body): the padded per-row slot
+        # arrays shard row-wise like y — the slot axis is tiny (max
+        # nnz/row) and stays local, so the O(nnz) segment-sum matvecs
+        # run on each device's own rows.
+        'data2': NamedSharding(mesh, P(rows, None)),
+        'idx2': NamedSharding(mesh, P(rows, None)),
     }
 
 
@@ -104,6 +122,38 @@ def make_oracle_body(mesh, variant: str = 'base', engine: str = 'tree'):
     stay sharded either way. `variant='opt'` query sharding applies to
     the tree engine only.
     """
+    core = _scores_to_coeffs(mesh, variant=variant, engine=engine)
+    rows = tuple(a for a in ('pod', 'data') if a in mesh.axis_names)
+
+    def oracle(X, y, g, w, n_pairs):
+        # p = X w : contraction over the column-sharded n axis -> all-reduce
+        # over 'model'; result stays row-sharded.
+        p = jnp.einsum('mn,n->m', X, w.astype(jnp.bfloat16),
+                       preferred_element_type=f32)
+        p = jax.lax.with_sharding_constraint(p, NamedSharding(mesh, P(rows)))
+        loss, cd = core(p, y, g, n_pairs)
+        # a = X^T cd / N : contraction over row-sharded m -> collective over
+        # 'data'/'pod'; result column-sharded like w.
+        a = jnp.einsum('mn,m->n', X, (cd / n_pairs).astype(jnp.bfloat16),
+                       preferred_element_type=f32)
+        a = jax.lax.with_sharding_constraint(
+            a, NamedSharding(mesh, P('model')))
+        return loss, a
+
+    return oracle
+
+
+def _scores_to_coeffs(mesh, variant: str = 'base', engine: str = 'tree'):
+    """The layout-independent middle of every sharded oracle body:
+    row-sharded scores -> (loss, row-sharded pair-count coefficients).
+
+    Gathers the tiny per-row vectors, folds group ids in via the
+    key-offset trick, runs the counting engine (queries sharded over the
+    mesh rows under variant='opt'), and evaluates the Lemma 1 loss. Both
+    `make_oracle_body` (dense bf16 einsum matvecs) and
+    `make_csr_oracle_body` (padded-slot segment-sum matvecs) wrap this
+    core — the feature layout only ever touches the two matvecs.
+    """
     _counts._validate_engine(engine)
     rows = tuple(a for a in ('pod', 'data') if a in mesh.axis_names)
     cns = None
@@ -112,13 +162,7 @@ def make_oracle_body(mesh, variant: str = 'base', engine: str = 'tree'):
             return jax.lax.with_sharding_constraint(
                 x, NamedSharding(mesh, P(*((rows,) + (None,) * (x.ndim - 1)))))
 
-    def oracle(X, y, g, w, n_pairs):
-        # p = X w : contraction over the column-sharded n axis -> all-reduce
-        # over 'model'; result stays row-sharded.
-        p = jnp.einsum('mn,n->m', X, w.astype(jnp.bfloat16),
-                       preferred_element_type=f32)
-        p = jax.lax.with_sharding_constraint(p, NamedSharding(mesh, P(rows)))
-
+    def core(p, y, g, n_pairs):
         # counts: gather the tiny score vectors, shard the queries.
         p_rep = jax.lax.with_sharding_constraint(
             p, NamedSharding(mesh, P()))
@@ -147,15 +191,131 @@ def make_oracle_body(mesh, variant: str = 'base', engine: str = 'tree'):
         # Loss uses the ORIGINAL scores p: within-group offsets cancel in
         # the hinge terms, exactly as in the single-host grouped oracle.
         loss = jnp.sum(cd * p_rep + c.astype(f32)) / n_pairs
-        # a = X^T cd / N : contraction over row-sharded m -> collective over
-        # 'data'/'pod'; result column-sharded like w.
-        a = jnp.einsum('mn,m->n', X, (cd / n_pairs).astype(jnp.bfloat16),
+        return loss, cd
+
+    return core
+
+
+def make_csr_oracle_body(mesh, variant: str = 'base', engine: str = 'tree'):
+    """Traced `(data2, idx2, y, g, w, n_pairs) -> (loss, a)` — the sharded
+    oracle on CSR features at O(nnz) matvec cost, no densification.
+
+    Layout (DESIGN.md §9): CSR rows are padded to a uniform slot count
+    s = max nnz/row — `data2` (m, s) bf16 values, `idx2` (m, s) int32
+    column ids — and both shard row-wise like y (`arg_shardings`), so
+    each device owns its rows' nonzeros outright. Pad slots carry
+    (0.0, 0): they contribute 0 to both matvecs, exactly like the dense
+    body's zero pad rows. Memory is 6 bytes/slot (bf16 value + int32 id)
+    vs 2 bytes/column dense, so the layout wins below ~n/3 nonzeros per
+    row — tf-idf text is orders of magnitude below that.
+
+    Matvec: gather w (replicated — O(n) floats, the cheap collective)
+    per nonzero and einsum over the slot axis, bf16 products with f32
+    accumulation — the same precision trade as the dense body.
+    Transpose-matvec: f32 products segment-summed into the n feature
+    bins (partial sums per row shard, reduced over 'data'/'pod'),
+    constrained column-sharded like w. Counting/loss run through the
+    same `_scores_to_coeffs` core as the dense body, so grouped
+    counting, `variant='opt'` query sharding, and engine dispatch
+    compose unchanged.
+    """
+    core = _scores_to_coeffs(mesh, variant=variant, engine=engine)
+    rows = tuple(a for a in ('pod', 'data') if a in mesh.axis_names)
+
+    def oracle(data2, idx2, y, g, w, n_pairs):
+        n = w.shape[0]
+        wb = w.astype(jnp.bfloat16)
+        p = jnp.einsum('ms,ms->m', data2, wb[idx2],
                        preferred_element_type=f32)
+        p = jax.lax.with_sharding_constraint(p, NamedSharding(mesh, P(rows)))
+        loss, cd = core(p, y, g, n_pairs)
+        prod = data2.astype(f32) * (cd / n_pairs)[:, None]
+        a = jax.ops.segment_sum(prod.reshape(-1), idx2.reshape(-1),
+                                num_segments=n)
         a = jax.lax.with_sharding_constraint(
             a, NamedSharding(mesh, P('model')))
         return loss, a
 
     return oracle
+
+
+def csr_slot_arrays(data, indices, indptr, shape, *, pad_rows: int = 0):
+    """Host-side packing of CSR (data, indices, indptr) into the padded
+    per-row slot arrays consumed by `make_csr_oracle_body`.
+
+    Returns `(data2, idx2)`: (m + pad_rows, s) float32/int32 with
+    s = max(1, max nnz/row); pad slots and the `pad_rows` trailing
+    zero-feature rows (the mesh row-multiple padding) carry (0.0, 0).
+    The caller casts data2 to bf16 at device_put, keeping the one f32
+    copy host-side and transient.
+    """
+    m, _ = map(int, shape)
+    data = np.asarray(data, np.float32)
+    indices = np.asarray(indices, np.int64)
+    indptr = np.asarray(indptr, np.int64)
+    lens = np.diff(indptr)
+    s = max(1, int(lens.max())) if m else 1
+    data2 = np.zeros((m + pad_rows, s), np.float32)
+    idx2 = np.zeros((m + pad_rows, s), np.int32)
+    if m and data.size:
+        rows = np.repeat(np.arange(m, dtype=np.int64), lens)
+        slots = np.arange(data.size, dtype=np.int64) - np.repeat(
+            indptr[:-1], lens)
+        data2[rows, slots] = data
+        idx2[rows, slots] = indices
+    return data2, idx2
+
+
+def assemble_row_sharded(source, sharding, shape, *, block_rows: int,
+                         prefetch=0):
+    """Assemble the 2-D row-sharded bf16 feature array from a
+    `RowBlockSource`, one HOST-LOCAL shard at a time — the per-host
+    streamed input path of `ShardedOracle` (DESIGN.md §9).
+
+    The per-host source contract: each host walks
+    `sharding.addressable_devices_indices_map` — its own devices only —
+    groups devices by row range so every row range is read ONCE per
+    host, streams that range's blocks out of `source` (read ahead
+    `prefetch` blocks by a `data.rowblocks._ReadAhead` thread), and
+    `device_put`s each device's column slice of the assembled bf16 slab.
+    `jax.make_array_from_single_device_arrays` stitches the global array
+    without any host materializing X: peak host residency is one
+    per-device-group row range (f32 assembly slab + its bf16 cast) plus
+    the in-flight blocks, not the m x n matrix. Rows at or past
+    `source.m` (the mesh row-multiple padding) stay zero — identical to
+    the dense path's zero-feature pad rows.
+    """
+    m_pad, n = map(int, shape)
+    block_rows = _rowblocks._validate_block_rows(block_rows)
+    depth = _rowblocks.resolve_prefetch(source, prefetch)
+    by_rows = {}
+    imap = sharding.addressable_devices_indices_map((m_pad, n))
+    for dev, idx in imap.items():
+        rsl, csl = idx[0], idx[1]
+        key = (rsl.start or 0, m_pad if rsl.stop is None else rsl.stop)
+        by_rows.setdefault(key, []).append((dev, csl))
+    shards = []
+    for (r0, r1), devs in sorted(by_rows.items()):
+        slab = np.zeros((r1 - r0, n), np.float32)
+        hi_real = min(r1, source.m)
+        spans = [(lo, min(lo + block_rows, hi_real))
+                 for lo in range(r0, hi_real, block_rows)]
+        ra = (_rowblocks._ReadAhead(lambda i: source.block(*spans[i]),
+                                    len(spans), depth)
+              if depth and len(spans) > 1 else None)
+        try:
+            for i, (lo, hi) in enumerate(spans):
+                blk = ra.get(i) if ra is not None else source.block(lo, hi)
+                slab[lo - r0:hi - r0] = blk
+        finally:
+            if ra is not None:
+                ra.close()
+        slab = slab.astype(ml_dtypes.bfloat16)   # RN ties-to-even, same
+        for dev, csl in devs:                    # rounding as jnp's cast
+            shards.append(jax.device_put(
+                np.ascontiguousarray(slab[:, csl]), dev))
+    return jax.make_array_from_single_device_arrays(
+        (m_pad, n), sharding, shards)
 
 
 def make_oracle_step(mesh, variant: str = 'base'):

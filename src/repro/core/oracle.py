@@ -48,6 +48,8 @@ from . import counts as _counts
 from . import distributed as _dist
 from ..data import rowblocks as _rowblocks
 from ..data.rowblocks import _validate_block_rows as _validate_block
+from ..data.rowblocks import _validate_prefetch, resolve_prefetch
+from ..kernels.platform import device_platform as _device_platform
 
 f32 = jnp.float32
 
@@ -232,7 +234,11 @@ class _CSRFeatures:
                            'idx': jnp.asarray(indices),
                            'rows': jnp.asarray(rows)}
         if csr_rmatvec == 'auto':
-            csr_rmatvec = ('host' if jax.default_backend() == 'cpu'
+            # The actual device platform, not jax.default_backend(): the
+            # scatter-vs-bincount trade is a property of the hardware the
+            # scatter would run on (kernels.platform, same probe as the
+            # Pallas lowering dispatch).
+            csr_rmatvec = ('host' if _device_platform() == 'cpu'
                            else 'device')
         if csr_rmatvec not in ('host', 'device'):
             raise ValueError(f'unknown csr_rmatvec {csr_rmatvec!r}')
@@ -521,6 +527,14 @@ class StreamingOracle(RankOracle):
     RAM, in CSR, or in an `np.memmap` on disk (`data.rowblocks`), lifting
     the fused oracles' device-memory ceiling on m.
 
+    `prefetch=` (blocks of read-ahead; None/'auto' = double-buffer memmap
+    sources, synchronous otherwise — `data.rowblocks.resolve_prefetch`)
+    overlaps the next block's disk fetch with the current block's matvec
+    on BOTH surfaces below: the host passes iterate prefetched payloads,
+    and the traced step's callbacks pull from a wraparound `_ReadAhead`
+    (the lookahead of the last block warms block 0 of the next pass).
+    Results are bit-identical at any depth — only the fetch timing moves.
+
     Two evaluation surfaces, same math:
       * `loss_and_subgrad` — host-chunk passes (float64 numpy per-block
         matvecs, layout-native for CSR), counts on device.
@@ -540,12 +554,13 @@ class StreamingOracle(RankOracle):
 
     def __init__(self, X, y, groups=None, block_rows: int | None = None,
                  memory_budget: float | None = None,
-                 engine: str = 'auto'):
+                 engine: str = 'auto', prefetch=None):
         _counts._validate_engine(engine)
         self._engine = engine
         self._cblock = 2048 if engine == 'blocked' else 0
         y = np.asarray(y, np.float32)
         self._src = _rowblocks.as_row_block_source(X)
+        self._prefetch = resolve_prefetch(self._src, prefetch)
         self.m, self.n = self._src.m, self._src.n
         if y.shape[0] != self.m:
             raise ValueError(f'X has {self.m} rows but y has {y.shape[0]}')
@@ -558,8 +573,11 @@ class StreamingOracle(RankOracle):
         if self.n_pairs == 0:
             raise ValueError('training data induces no preference pairs')
         if block_rows is None:
-            block_rows = _auto_stream_block(self.m, self._src.row_bytes(),
-                                            memory_budget)
+            # In-flight read-ahead blocks count against the budget: depth
+            # pending + 1 being consumed.
+            block_rows = _auto_stream_block(
+                self.m, self._src.row_bytes() * (1 + self._prefetch),
+                memory_budget)
         block_rows = _validate_block(block_rows, 'StreamingOracle '
                                      'block_rows')
         self._B = min(block_rows, self.m)
@@ -582,27 +600,35 @@ class StreamingOracle(RankOracle):
     def block_rows(self) -> int:
         return self._B
 
+    @property
+    def prefetch(self) -> int:
+        """Resolved read-ahead depth (0 = synchronous fetches)."""
+        return self._prefetch
+
     def block_resident_bytes(self) -> int:
         """Peak feature bytes resident at any point of a pass, at the
         source's layout-native per-row cost (dense f32 slab; O(nnz_row)
         for CSR, whose solver='auto' path keeps blocks sparse) — the
-        O(block) term of the memory model; the O(m) score/coefficient
-        vectors come on top. Forcing solver='device' on a CSR source
-        densifies each slab to block_rows * n * 4 bytes instead."""
-        return self._B * self._src.row_bytes()
+        O(block) term of the memory model, counting the read-ahead's
+        in-flight blocks (`prefetch` pending + 1 consumed); the O(m)
+        score/coefficient vectors come on top. Forcing solver='device'
+        on a CSR source densifies each slab to block_rows * n * 4 bytes
+        instead."""
+        return (1 + self._prefetch) * self._B * self._src.row_bytes()
 
     def loss_and_subgrad(self, w):
+        src, B, depth = self._src, self._B, self._prefetch
         w64 = np.asarray(w, np.float64)
         p = np.empty(self.m, np.float32)
-        for lo, hi in self._src.ranges(self._B):
-            p[lo:hi] = self._src.matvec_block(lo, hi, w64)
+        for lo, hi, payload in src.iter_payloads(B, prefetch=depth):
+            p[lo:hi] = src._payload_matvec(payload, w64)
         loss, cd = _stream_counts(jnp.asarray(p), self._y, self._g,
                                   self._inv_n_dev, engine=self._engine,
                                   block=self._cblock)
         v = np.asarray(cd, np.float64) * self._inv_n
         a = np.zeros(self.n, np.float64)
-        for lo, hi in self._src.ranges(self._B):
-            a += self._src.rmatvec_block(lo, hi, v[lo:hi])
+        for lo, hi, payload in src.iter_payloads(B, prefetch=depth):
+            a += src._payload_rmatvec(payload, v[lo:hi])
         return loss, a
 
     def step_fn(self):
@@ -615,6 +641,15 @@ class StreamingOracle(RankOracle):
         y, g, inv_n = self._y, self._g, self._inv_n_dev
         engine, cblock = self._engine, self._cblock
         fetch = functools.partial(_fetch_padded, self._src, B, m, n)
+        if self._prefetch and nblk > 1:
+            # Wraparound read-ahead: while the device multiplies block i,
+            # the thread fetches (i+1) % nblk — so the last block of the
+            # score pass warms block 0 of the gradient pass, and the last
+            # block of an oracle call warms the next call's first fetch.
+            # get(i) is exact for ANY callback order (a miss just fetches
+            # synchronously), so correctness never leans on scan order.
+            fetch = _rowblocks._ReadAhead(fetch, nblk, self._prefetch,
+                                          wrap=True).get
         slab = jax.ShapeDtypeStruct((B, n), f32)
         pad = nblk * B - m
 
@@ -670,6 +705,22 @@ class ShardedOracle(RankOracle):
     Note the matvecs run in bf16 (the deliberate pod-scale trade); the
     counts see bf16-rounded scores, so parity with the f32 oracles is
     approximate (~1e-2), which BMRM tolerates as an inexact oracle.
+
+    Three feature layouts, one oracle (DESIGN.md §9):
+      * dense ndarray — 2-D sharded bf16, einsum matvecs (the original
+        path).
+      * CSR (`repro.data.sparse.CSRMatrix`, scipy sparse, or a
+        `CSRBlockSource`) — stays SPARSE: rows padded to the max nnz/row
+        slot count (`core.distributed.csr_slot_arrays`), both slot
+        arrays row-sharded, segment-sum matvecs at O(nnz) cost
+        (`make_csr_oracle_body`). No densification, no projected-GiB
+        trap; 6 bytes/slot vs 2 bytes/dense-column, a win below ~n/3
+        nonzeros per row.
+      * `np.memmap` / any other `RowBlockSource` — streamed per-host
+        assembly (`core.distributed.assemble_row_sharded`): each host
+        reads only its own devices' row ranges, `prefetch` blocks ahead
+        (`block_rows` per read), so X is never host-resident and the
+        fully-X-in-RAM requirement of the sharded path is lifted.
     """
 
     name = 'sharded'
@@ -680,28 +731,31 @@ class ShardedOracle(RankOracle):
     # replicated lambda axis into its sharding constraints
 
     def __init__(self, X, y, groups=None, mesh: Mesh | None = None,
-                 variant: str = 'base', engine: str = 'tree'):
+                 variant: str = 'base', engine: str = 'tree',
+                 block_rows: int | None = None, prefetch=None):
         _counts._validate_engine(engine)
+        _validate_prefetch(prefetch)
         y = np.asarray(y, np.float32)
-        sparse_in = (_is_csr_like(X) and hasattr(X, 'to_dense')) or (
-            _scipy_sparse is not None and _scipy_sparse.issparse(X))
-        if sparse_in:
-            m_, n_ = map(int, X.shape)
-            itemsize = getattr(getattr(X, 'data', None), 'dtype',
-                               np.dtype(np.float64)).itemsize
-            warnings.warn(
-                f'ShardedOracle stores X dense: densifying the sparse '
-                f'{m_} x {n_} input materializes '
-                f'{m_ * n_ * itemsize / 2**30:.2f} GiB at its '
-                f'{itemsize}-byte dtype on host (plus a '
-                f'{m_ * n_ * 2 / 2**30:.2f} GiB bf16 device copy) — at '
-                'the 1M-row scales this oracle targets that is an OOM '
-                'trap. Densify/shard upstream, or keep sparse features '
-                'on the tree oracle (DESIGN.md §5).',
-                RuntimeWarning, stacklevel=3)
-            X = (X.to_dense() if hasattr(X, 'to_dense') else X.toarray())
-        X = np.asarray(X)
-        self.m, self.n = map(int, X.shape)
+        src = None
+        if isinstance(X, (np.memmap, _rowblocks.RowBlockSource)) and \
+                not isinstance(X, _rowblocks.CSRBlockSource):
+            src = _rowblocks.as_row_block_source(X)
+            layout = 'stream'
+            self.m, self.n = src.m, src.n
+        else:
+            if isinstance(X, _rowblocks.CSRBlockSource):
+                X = X._X                     # the layout-native CSR object
+            if _scipy_sparse is not None and _scipy_sparse.issparse(X):
+                X = X.tocsr()
+            if _is_csr_like(X):
+                layout = 'csr'
+            else:
+                layout = 'dense'
+                X = np.asarray(X)
+                if X.ndim != 2:
+                    raise ValueError('ShardedOracle features must be 2-D; '
+                                     f'got shape {X.shape}')
+            self.m, self.n = map(int, X.shape)
         if y.shape[0] != self.m:
             raise ValueError(f'X has {self.m} rows but y has {y.shape[0]}')
         if groups is not None:
@@ -726,7 +780,6 @@ class ShardedOracle(RankOracle):
         # exactly those of the unpadded problem.
         pad = (-self.m) % rsize
         if pad:
-            X = np.concatenate([X, np.zeros((pad, self.n), X.dtype)])
             y = np.concatenate([y, np.zeros(pad, np.float32)])
             base = groups if groups is not None else np.zeros(self.m,
                                                               np.int32)
@@ -734,10 +787,36 @@ class ShardedOracle(RankOracle):
             groups = np.concatenate([base,
                                      np.full(pad, pad_id, np.int32)])
         sh = _dist.arg_shardings(self._mesh)
-        self._body = _dist.make_oracle_body(self._mesh, variant=variant,
-                                            engine=engine)
+        if layout == 'csr':
+            self.name = 'sharded/csr'
+            data2, idx2 = _dist.csr_slot_arrays(
+                X.data, X.indices, X.indptr, (self.m, self.n),
+                pad_rows=pad)
+            self._body = _dist.make_csr_oracle_body(
+                self._mesh, variant=variant, engine=engine)
+            self._args = (
+                jax.device_put(jnp.asarray(data2, jnp.bfloat16),
+                               sh['data2']),
+                jax.device_put(jnp.asarray(idx2), sh['idx2']))
+        elif layout == 'stream':
+            self.name = 'sharded/stream'
+            block = _validate_block(
+                block_rows if block_rows is not None
+                else DEFAULT_STREAM_BLOCK, 'ShardedOracle block_rows')
+            self._body = _dist.make_oracle_body(self._mesh, variant=variant,
+                                                engine=engine)
+            self._args = (_dist.assemble_row_sharded(
+                src, sh['X'], (self.m + pad, self.n),
+                block_rows=min(block, max(self.m, 1)), prefetch=prefetch),)
+        else:
+            self.name = 'sharded'
+            if pad:
+                X = np.concatenate([X, np.zeros((pad, self.n), X.dtype)])
+            self._body = _dist.make_oracle_body(self._mesh, variant=variant,
+                                                engine=engine)
+            self._args = (jax.device_put(jnp.asarray(X, jnp.bfloat16),
+                                         sh['X']),)
         self._fn = jax.jit(self._body)
-        self._X = jax.device_put(jnp.asarray(X, jnp.bfloat16), sh['X'])
         self._yd = jax.device_put(jnp.asarray(y, f32), sh['y'])
         self._g = (None if groups is None
                    else jax.device_put(jnp.asarray(groups), sh['g']))
@@ -747,16 +826,16 @@ class ShardedOracle(RankOracle):
 
     def loss_and_subgrad(self, w):
         wd = jax.device_put(jnp.asarray(np.asarray(w), f32), self._wsh)
-        return self._fn(self._X, self._yd, self._g, wd, self._np)
+        return self._fn(*self._args, self._yd, self._g, wd, self._np)
 
     def step_fn(self):
         """Traced `w -> (loss, a)` over the mesh-sharded arrays, for bmrm's
         device driver (the sharded analogue of `_FusedOracle.step_fn`)."""
-        X, y, g, n_pairs = self._X, self._yd, self._g, self._np
+        args, y, g, n_pairs = self._args, self._yd, self._g, self._np
         body = self._body
 
         def fn(w):
-            return body(X, y, g, w, n_pairs)
+            return body(*args, y, g, w, n_pairs)
 
         return fn
 
@@ -839,7 +918,8 @@ def make_oracle(X, y, groups=None, method: str = 'tree', *,
                 pair_block: int = 2048, mesh: Mesh | None = None,
                 variant: str = 'base', csr_rmatvec: str = 'auto',
                 memory_budget: float | None = None,
-                stream_block: int | None = None) -> RankOracle:
+                stream_block: int | None = None,
+                prefetch=None) -> RankOracle:
     """Build the RankOracle for (X, y[, groups]) selected by `method`.
 
     Dispatch table (features-resident column is the memory model;
@@ -884,14 +964,28 @@ def make_oracle(X, y, groups=None, method: str = 'tree', *,
     `RowBlockSource` (layouts with no sensible fused form); otherwise it
     keeps the fused counts_auto oracle. With no budget and in-memory X
     the dispatch is unchanged from before. method='stream' forces the
-    streaming oracle for any X.
+    streaming oracle for any X. method='sharded' accepts every layout:
+    CSR input stays sparse (the padded-slot segment-sum body — no
+    densification), and memmap/`RowBlockSource` input is assembled shard
+    by shard per host (`core.distributed.assemble_row_sharded`) without
+    ever materializing X.
 
     `stream_block` (rows per block) defaults to a budget-derived size
     (`_auto_stream_block`: the block gets at most half the budget left
-    after the O(m) vectors, at the source's layout-native per-row cost —
-    dense f32 slab, or O(nnz_row) for CSR); `pair_block` is the
-    VMEM/cache block of the O(m^2) engine. Both are validated as
-    positive whole row counts.
+    after the O(m) vectors — counting the read-ahead's in-flight blocks —
+    at the source's layout-native per-row cost: dense f32 slab, or
+    O(nnz_row) for CSR); `pair_block` is the VMEM/cache block of the
+    O(m^2) engine. Both are validated as positive whole row counts. It
+    also sizes the per-host assembly reads of the streamed sharded path.
+
+    `prefetch` (None/'auto' | int >= 0) is the row-block read-ahead
+    depth for the streaming oracle's passes and the sharded oracle's
+    per-host assembly: a background thread fetches up to that many
+    blocks ahead of the consumer (`data.rowblocks._ReadAhead`),
+    overlapping disk latency with compute. The auto rule double-buffers
+    memmap sources and stays synchronous for in-RAM layouts
+    (`data.rowblocks.resolve_prefetch`); results are bit-identical at
+    any depth. Ignored by the fused oracles (nothing is streamed).
 
     `engine=` overrides the COUNTING ENGINE of whatever oracle `method`
     selects (orthogonal to the method's memory model / residency
@@ -920,6 +1014,7 @@ def make_oracle(X, y, groups=None, method: str = 'tree', *,
                          f'expected one of {METHODS}')
     if engine is not None:
         _counts._validate_engine(engine)
+    _validate_prefetch(prefetch)
     stream_only = isinstance(X, (_rowblocks.RowBlockSource, np.memmap))
     if method == 'auto' and not stream_only and memory_budget is not None:
         if _rowblocks.projected_resident_gib(X) > float(memory_budget):
@@ -928,15 +1023,17 @@ def make_oracle(X, y, groups=None, method: str = 'tree', *,
         return StreamingOracle(X, y, groups=groups, block_rows=stream_block,
                                memory_budget=memory_budget,
                                engine=engine if engine is not None
-                               else 'auto')
+                               else 'auto', prefetch=prefetch)
+    if method == 'sharded':
+        return ShardedOracle(X, y, groups=groups, mesh=mesh, variant=variant,
+                             engine=engine if engine is not None else 'tree',
+                             block_rows=stream_block, prefetch=prefetch)
     if isinstance(X, _rowblocks.RowBlockSource):
         raise ValueError(
             f"method={method!r} needs materialized features, but X is a "
             f'{type(X).__name__} row-block source; train it with '
-            "method='stream' (or 'auto', which streams such sources)")
-    if method == 'sharded':
-        return ShardedOracle(X, y, groups=groups, mesh=mesh, variant=variant,
-                             engine=engine if engine is not None else 'tree')
+            "method='stream' or 'sharded' (or 'auto', which streams "
+            'such sources)')
     if groups is not None:
         return GroupedOracle(X, y, groups, inner=method, block=pair_block,
                              csr_rmatvec=csr_rmatvec, engine=engine)

@@ -10,10 +10,14 @@
             an np.memmap / RowBlockSource X) it falls over to the
             streaming oracle when the projected fused residency exceeds
             the budget
-  'sharded' pod-scale mesh oracle (core.distributed) on dense bf16
-            features; accepts `groups=` like every other method, and under
-            solver='auto' trains on the device bundle driver with the
-            bundle state sharded over the mesh (per-query LTR at pod scale)
+  'sharded' pod-scale mesh oracle (core.distributed): dense input is 2-D
+            sharded bf16, CSR input stays SPARSE (row-sharded padded-slot
+            segment-sum matvecs at O(nnz) — no densification), and
+            memmap/RowBlockSource input streams per host into the device
+            shards (assemble_row_sharded, prefetched). Accepts `groups=`
+            like every other method, and under solver='auto' trains on
+            the device bundle driver with the bundle state sharded over
+            the mesh (per-query LTR at pod scale)
   'stream'  out-of-core streaming oracle (core.oracle.StreamingOracle):
             two chunked passes over a row-block feature source
             (data.rowblocks — dense, CSR, or np.memmap-backed), peak
@@ -65,6 +69,7 @@ import jax.numpy as jnp
 
 from . import rank_loss as _rank_loss
 from ..data.rowblocks import _validate_block_rows as _validate_block
+from ..data.rowblocks import _validate_prefetch
 from .bmrm import (SOLVERS, _validate_lams, _validate_path_mode, bmrm,
                    bmrm_path)
 from .counts import _validate_engine
@@ -154,7 +159,17 @@ class RankSVM:
         (`core.bmrm.path_state_gib`) exceeds it. None (default) disables
         both guards.
       stream_block: rows per block of the streaming oracle (default:
-        budget-derived; core.oracle._auto_stream_block).
+        budget-derived; core.oracle._auto_stream_block) and of the
+        sharded oracle's per-host streamed assembly reads.
+      prefetch: row-block read-ahead depth (None/'auto' | int >= 0) for
+        the streaming oracle's chunked passes and the sharded oracle's
+        per-host assembly: a background thread fetches up to `prefetch`
+        blocks ahead of the consumer, hiding disk latency behind the
+        matvec (`data.rowblocks._ReadAhead`). None/'auto' (default)
+        double-buffers disk-backed memmap sources and stays synchronous
+        for in-RAM dense/CSR layouts (`data.rowblocks.resolve_prefetch`);
+        results are bit-identical at any depth. Validated up front;
+        ignored by the fused oracles.
     """
 
     def __init__(self, lam: float = 1e-3, eps: float = 1e-3,
@@ -164,7 +179,7 @@ class RankSVM:
                  sync_every: 'int | str' = 8, qp_iters: int = 128,
                  memory_budget: float | None = None,
                  stream_block: int | None = None,
-                 engine: str | None = None):
+                 engine: str | None = None, prefetch=None):
         if method not in METHODS:
             raise ValueError(f'unknown method {method!r}; '
                              f'expected one of {METHODS}')
@@ -192,6 +207,8 @@ class RankSVM:
         self.stream_block = (None if stream_block is None
                              else _validate_block(stream_block,
                                                   'stream_block'))
+        _validate_prefetch(prefetch)    # fail at construction, not fit
+        self.prefetch = prefetch
         self.mesh = mesh
         self.verbose = verbose
         self.w_: np.ndarray | None = None
@@ -304,7 +321,8 @@ class RankSVM:
                            engine=self.engine,
                            pair_block=self.pair_block, mesh=self.mesh,
                            memory_budget=self.memory_budget,
-                           stream_block=self.stream_block)
+                           stream_block=self.stream_block,
+                           prefetch=self.prefetch)
 
     def _solve(self, oracle, lam, state=None, w0=None):
         return bmrm(oracle, lam=lam, eps=self.eps, max_iter=self.max_iter,

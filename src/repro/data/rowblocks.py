@@ -21,10 +21,20 @@ Three implementations cover the storage layouts the oracles accept:
 `as_row_block_source` dispatches on the input type; `projected_resident_gib`
 is the memory model behind `make_oracle`'s fused-vs-streaming budget
 heuristic (what WOULD a fused oracle pin resident for this X?).
+
+Async read-ahead (DESIGN.md §9): `iter_blocks`/`iter_payloads` accept a
+`prefetch=` depth — a single background thread (`_ReadAhead`) fetches up
+to that many upcoming blocks while the consumer computes on the current
+one, hiding disk latency behind the matvec. `resolve_prefetch` is the
+layout-aware auto rule (double-buffer memmaps, stay synchronous for
+in-RAM sources); every slab is copied out of its short-lived memmap
+window before the lookahead opens the next, so prefetched iteration is
+bit-identical to synchronous iteration.
 """
 
 from __future__ import annotations
 
+from concurrent.futures import ThreadPoolExecutor
 from typing import NamedTuple
 
 import numpy as np
@@ -60,6 +70,110 @@ def _validate_block_rows(block_rows, what: str = 'block_rows') -> int:
         raise ValueError(f'{what} must be a positive integer; got '
                          f'{block_rows}')
     return block_rows
+
+
+def _validate_prefetch(prefetch, what: str = 'prefetch'):
+    """Validate a read-ahead depth: None/'auto' pass through as None (the
+    caller resolves them per source layout — `resolve_prefetch`); anything
+    else must be a non-negative whole number of blocks. 0 means
+    synchronous fetches (no background thread); k >= 1 keeps up to k
+    blocks in flight ahead of the consumer."""
+    if prefetch is None or (isinstance(prefetch, str)
+                            and prefetch == 'auto'):
+        return None
+    ok = isinstance(prefetch, (int, np.integer)) and not isinstance(
+        prefetch, bool)
+    if not ok and isinstance(prefetch, (float, np.floating)):
+        if not float(prefetch).is_integer():
+            raise ValueError(f'{what} must be a whole number of blocks; '
+                             f'got the fractional value {prefetch!r}')
+        ok = True
+    if not ok:
+        raise ValueError(f"{what} must be a non-negative integer, None or "
+                         f"'auto'; got {prefetch!r} of type "
+                         f'{type(prefetch).__name__}')
+    prefetch = int(prefetch)
+    if prefetch < 0:
+        raise ValueError(f'{what} must be a non-negative integer; got '
+                         f'{prefetch}')
+    return prefetch
+
+
+def resolve_prefetch(source: 'RowBlockSource', prefetch) -> int:
+    """Effective read-ahead depth for `source`.
+
+    Explicit integers pass through (validated); None/'auto' resolves by
+    layout: 1 (double buffering) for the disk-backed memmap source, whose
+    per-window file reads are the latency worth hiding behind compute;
+    0 (synchronous) for the in-RAM dense/CSR sources, where a fetch is a
+    view or an O(nnz_block) slice and the thread handoff can only add
+    overhead (measured at noise level either way on this container —
+    EXPERIMENTS.md §Streaming oracle; the auto rule spends the thread
+    only where there is I/O to overlap).
+    """
+    depth = _validate_prefetch(prefetch)
+    if depth is None:
+        depth = 1 if source.kind == 'memmap' else 0
+    return depth
+
+
+class _ReadAhead:
+    """Depth-bounded background read-ahead over an indexed block fetch.
+
+    One worker thread (a single-worker `ThreadPoolExecutor`) runs
+    `fetch(i)` for up to `depth` indices past the one being consumed;
+    `get(i)` returns block i, blocking only if its fetch has not finished
+    (double buffering at depth 1). Correctness never depends on the
+    predicted order: a `get` miss is simply fetched on the worker and
+    waited for, so any access pattern yields exactly `fetch(i)` — only
+    throughput varies. Worker exceptions re-raise in the consumer at the
+    corresponding `get` (validation errors surface as without prefetch).
+
+    `wrap=True` predicts `(i + 1) % n` — the access pattern of the
+    streaming oracle's repeated two-pass sweeps, where the lookahead of
+    the last block warms block 0 of the next pass (and of the next BMRM
+    iteration).
+
+    Every `fetch` payload must own its memory or reference stable in-RAM
+    storage (the sources' block/window fetches copy out of short-lived
+    memmap windows — `MemmapBlockSource._window` — so the worker never
+    aliases a buffer the consumer still holds). Peak resident payloads:
+    `depth` pending + the one being consumed.
+
+    Lifecycle: `close()` drops pending work and shuts the pool down
+    without blocking on in-flight fetches. An *abandoned* instance is
+    also safe: when it is garbage-collected the executor's queue wakes
+    the worker with a sentinel and the thread exits, so a long-lived
+    closure holding one (the streaming oracle's traced step) never pins
+    a thread past its own lifetime.
+    """
+
+    def __init__(self, fetch, n: int, depth: int, *, wrap: bool = False):
+        self._fetch = fetch
+        self._n = int(n)
+        self._depth = int(depth)
+        self._wrap = bool(wrap)
+        self._pool = ThreadPoolExecutor(max_workers=1)
+        self._pending = {}
+
+    def get(self, i):
+        i = int(i)
+        fut = self._pending.pop(i, None)
+        if fut is None:
+            fut = self._pool.submit(self._fetch, i)
+        for k in range(1, self._depth + 1):
+            j = i + k
+            if self._wrap:
+                j %= self._n
+            if j == i or not 0 <= j < self._n:
+                continue
+            if j not in self._pending and len(self._pending) < self._depth:
+                self._pending[j] = self._pool.submit(self._fetch, j)
+        return fut.result()
+
+    def close(self):
+        self._pending.clear()
+        self._pool.shutdown(wait=False, cancel_futures=True)
 
 
 class RowBlock(NamedTuple):
@@ -101,6 +215,45 @@ class RowBlockSource:
         return self.block(lo, hi).astype(np.float64).T @ np.asarray(
             v, np.float64)
 
+    def _payload(self, lo: int, hi: int):
+        """Layout-native slab for rows [lo, hi) — the unit a background
+        read-ahead fetches. Must be safe to hand across threads: own its
+        memory (memmap windows copy out) or reference stable in-RAM
+        storage (dense views, CSR slices). Default: the dense f32 block.
+        Consumed by `_payload_matvec` / `_payload_rmatvec`, which run the
+        SAME kernels on the same bytes as `matvec_block` /
+        `rmatvec_block` — prefetched host passes are bit-identical to
+        synchronous ones."""
+        return self.block(lo, hi)
+
+    def _payload_matvec(self, payload, w) -> np.ndarray:
+        return payload.astype(np.float64) @ np.asarray(w, np.float64)
+
+    def _payload_rmatvec(self, payload, v) -> np.ndarray:
+        return payload.astype(np.float64).T @ np.asarray(v, np.float64)
+
+    def iter_payloads(self, block_rows: int, prefetch=0):
+        """Yield `(lo, hi, payload)` over `ranges(block_rows)`, the
+        payloads optionally fetched `prefetch` blocks ahead by a
+        background thread (`_ReadAhead`; None/'auto' resolves per layout
+        via `resolve_prefetch`). The streaming oracle's host passes
+        consume this: fetch (disk/decompress) overlaps the per-block
+        matvec on the main thread, and because the payload kernels are
+        the block kernels, results are bit-identical at any depth."""
+        spans = list(self.ranges(block_rows))
+        depth = resolve_prefetch(self, prefetch)
+        if depth == 0 or len(spans) <= 1:
+            for lo, hi in spans:
+                yield lo, hi, self._payload(lo, hi)
+            return
+        ra = _ReadAhead(lambda i: self._payload(*spans[i]), len(spans),
+                        depth)
+        try:
+            for i, (lo, hi) in enumerate(spans):
+                yield lo, hi, ra.get(i)
+        finally:
+            ra.close()
+
     def _check_range(self, lo: int, hi: int) -> tuple[int, int]:
         lo, hi = int(lo), int(hi)
         if not 0 <= lo <= hi <= self.m:
@@ -115,13 +268,21 @@ class RowBlockSource:
         for lo in range(0, self.m, block_rows):
             yield lo, min(lo + block_rows, self.m)
 
-    def iter_blocks(self, block_rows: int, *aligned) -> 'iter':
+    def iter_blocks(self, block_rows: int, *aligned, prefetch=0) -> 'iter':
         """Yield `RowBlock`s: dense row slabs plus the matching slices of
         each row-aligned array (y, groups, sample weights, ...) — the
         convenience surface for external block consumers (custom losses,
         export pipelines). `StreamingOracle` itself drives the leaner
-        `ranges()` + per-block matvecs and never materializes slabs it
-        does not need."""
+        `iter_payloads()` + per-payload matvecs and never materializes
+        slabs it does not need.
+
+        `prefetch` (blocks of read-ahead; None/'auto' resolves per layout
+        via `resolve_prefetch`, default 0 = synchronous) fetches upcoming
+        slabs on a background thread while the consumer works on the
+        current one. Blocks are produced by the same `block()` calls
+        either way — every slab is copied out of its (short-lived) memmap
+        window before the lookahead opens the next, so prefetched
+        iteration is bit-identical to synchronous iteration."""
         arrays = []
         for a in aligned:
             a = np.asarray(a)
@@ -130,9 +291,20 @@ class RowBlockSource:
                     f'aligned array has leading dim {a.shape[:1]} but the '
                     f'source has {self.m} rows; they must align one-to-one')
             arrays.append(a)
-        for lo, hi in self.ranges(block_rows):
-            yield RowBlock(lo, hi, self.block(lo, hi),
-                           tuple(a[lo:hi] for a in arrays))
+        spans = list(self.ranges(block_rows))
+        depth = resolve_prefetch(self, prefetch)
+        if depth == 0 or len(spans) <= 1:
+            for lo, hi in spans:
+                yield RowBlock(lo, hi, self.block(lo, hi),
+                               tuple(a[lo:hi] for a in arrays))
+            return
+        ra = _ReadAhead(lambda i: self.block(*spans[i]), len(spans), depth)
+        try:
+            for i, (lo, hi) in enumerate(spans):
+                yield RowBlock(lo, hi, ra.get(i),
+                               tuple(a[lo:hi] for a in arrays))
+        finally:
+            ra.close()
 
     def n_blocks(self, block_rows: int) -> int:
         block_rows = _validate_block_rows(block_rows)
@@ -171,6 +343,15 @@ class DenseBlockSource(RowBlockSource):
         lo, hi = self._check_range(lo, hi)
         return np.asarray(
             self._X[lo:hi].T @ np.asarray(v, np.float64)).ravel()
+
+    def _payload(self, lo: int, hi: int):
+        return self._X[lo:hi]        # zero-copy view of stable RAM
+
+    def _payload_matvec(self, payload, w) -> np.ndarray:
+        return np.asarray(payload @ np.asarray(w, np.float64)).ravel()
+
+    def _payload_rmatvec(self, payload, v) -> np.ndarray:
+        return np.asarray(payload.T @ np.asarray(v, np.float64)).ravel()
 
 
 class MemmapBlockSource(RowBlockSource):
@@ -250,6 +431,13 @@ class MemmapBlockSource(RowBlockSource):
         return self._window(lo, hi).astype(np.float64).T @ np.asarray(
             v, np.float64)
 
+    def _payload(self, lo: int, hi: int):
+        # The raw-dtype window, copied out (so the lookahead thread never
+        # aliases a mapping the consumer holds); the base payload matvecs
+        # run the same astype(f64) products as the *_block kernels above,
+        # keeping prefetched passes bit-identical for any file dtype.
+        return self._window(lo, hi)
+
 
 class CSRBlockSource(RowBlockSource):
     """CSR-backed blocks: per-block products run on the sparse slice in
@@ -280,6 +468,15 @@ class CSRBlockSource(RowBlockSource):
     def rmatvec_block(self, lo: int, hi: int, v) -> np.ndarray:
         lo, hi = self._check_range(lo, hi)
         return self._X.row_slice(lo, hi).rmatvec(np.asarray(v, np.float64))
+
+    def _payload(self, lo: int, hi: int):
+        return self._X.row_slice(lo, hi)     # sparse, O(nnz_block)
+
+    def _payload_matvec(self, payload, w) -> np.ndarray:
+        return payload.matvec(np.asarray(w, np.float64))
+
+    def _payload_rmatvec(self, payload, v) -> np.ndarray:
+        return payload.rmatvec(np.asarray(v, np.float64))
 
     def row_bytes(self) -> int:
         """O(nnz_row) for the sparse per-block products (f64 data +

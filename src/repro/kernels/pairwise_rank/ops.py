@@ -8,13 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from . import kernel as _k
-
-
-def _on_tpu() -> bool:
-    # Probe the actual device platform, not jax.default_backend(): the
-    # question is "can a compiled Pallas kernel lower here", which is a
-    # property of the hardware the computation will run on.
-    return jax.devices()[0].platform == 'tpu'
+from ..platform import on_tpu as _on_tpu
 
 
 @functools.partial(jax.jit,

@@ -1,0 +1,27 @@
+"""One shared probe for the ACTUAL device platform.
+
+Dispatch decisions that depend on where compiled code will run — "can a
+Pallas kernel lower here", "does the XLA scatter-add beat the host
+bincount" — are properties of the hardware, not of the configured
+default backend: `jax.default_backend()` reports the highest-priority
+*initialized* backend and can disagree with the device a computation is
+placed on (e.g. a forced-CPU run on a TPU host). Both kernel `ops`
+modules and the oracle layer's CSR rmatvec dispatch probe through here
+so the answer cannot drift between tiers again.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def device_platform() -> str:
+    """Platform string ('cpu' | 'tpu' | 'gpu' | ...) of the default
+    device — the one jitted computations run on absent explicit
+    placement."""
+    return jax.devices()[0].platform
+
+
+def on_tpu() -> bool:
+    """True when compiled (non-interpret) Pallas lowering is available."""
+    return device_platform() == 'tpu'

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from . import kernel as _k
+from ..platform import on_tpu as _on_tpu
 
 # Static y-level capacity of the on-chip histogram. Utility scores in
 # ranking data are graded relevance judgments (a handful of levels; the
@@ -24,12 +25,6 @@ from . import kernel as _k
 # whose key offsets multiply the alphabet by the group count) fall back
 # to the merge-sort tree INSIDE the trace — same outputs, no recompile.
 DEFAULT_LEVELS = 256
-
-
-def _on_tpu() -> bool:
-    # Actual device platform, not jax.default_backend() — compiled
-    # lowering is a property of the hardware (see pairwise_rank.ops).
-    return jax.devices()[0].platform == 'tpu'
 
 
 def _compact_ranks(y: jnp.ndarray) -> jnp.ndarray:

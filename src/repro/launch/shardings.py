@@ -73,9 +73,14 @@ def metric_shardings(rules: ShardingRules):
 
 # The ranksvm-linear cells do NOT route through this module: their arg and
 # bundle-state sharding tables live with the math that needs them
-# (core.distributed.arg_shardings, core.bmrm.bundle_state_shardings) and
-# core.oracle.sharded_dryrun_cell applies both — see launch/dryrun.py's
-# ranksvm branch and DESIGN.md §5.
+# (core.distributed.arg_shardings — including the row-sharded CSR slot
+# arrays data2/idx2 of the sparse mesh oracle — and
+# core.bmrm.bundle_state_shardings) and core.oracle.sharded_dryrun_cell
+# applies both — see launch/dryrun.py's ranksvm branch, DESIGN.md §5 and
+# DESIGN.md §9.
+# Per-host streamed shard assembly likewise lives with its math:
+# core.distributed.assemble_row_sharded maps each host's addressable
+# devices onto row-range reads of a data.rowblocks source.
 
 
 # NOTE: batch-1 long-context SP falls out of ShardingRules.spec's

@@ -2,8 +2,9 @@
 
 Covers: `ShardedOracle(groups=...)` parity with `GroupedOracle` (bf16
 tolerance) on the degenerate 1-device mesh, host-vs-device-driver parity
-for the sharded path, the BundleState sharding annotations, the CSR
-densification warning, and the full-bundle_step dry-run cell.
+for the sharded path, the BundleState sharding annotations, the sparse
+(row-sharded CSR slot) input path, and the full-bundle_step dry-run cell.
+The streamed per-host assembly half lives in test_sharded_stream.py.
 
 The multi-device half of the file needs a real >1-device mesh; those tests
 skip on a bare CPU run and are exercised by the `test-multidevice` CI job
@@ -242,17 +243,63 @@ def test_abstract_bundle_state_shapes():
     assert st.w.shape == (32,) and st.done.shape == ()
 
 
-def test_sharded_csr_densification_warns():
+def test_sharded_csr_trains_without_densification():
+    """Acceptance (PR 7): CSR input stays SPARSE on the mesh — no
+    projected-GiB densification warning (the PR 3 fallback is gone), the
+    slot-layout segment-sum oracle matches the dense tree oracle within
+    bf16 tolerance, and `bmrm` trains on it."""
     X = random_tfidf(m=64, n=32, nnz_per_row=4, seed=0)
     y = np.random.default_rng(1).normal(size=64)
-    with pytest.warns(RuntimeWarning, match='densif'):
-        oracle = O.ShardedOracle(X, y)
-    # and it still computes: parity against the dense tree oracle
-    w = np.random.default_rng(2).normal(size=32)
     with warnings.catch_warnings():
-        warnings.simplefilter('ignore')
-        _assert_bf16_close(O.TreeOracle(np.asarray(X.to_dense()), y),
-                           oracle, w)
+        warnings.simplefilter('error')       # ANY warning fails the test
+        oracle = O.ShardedOracle(X, y)
+    assert oracle.name == 'sharded/csr'
+    w = np.random.default_rng(2).normal(size=32)
+    _assert_bf16_close(O.TreeOracle(np.asarray(X.to_dense()), y),
+                       oracle, w)
+    res = bmrm(oracle, lam=1e-2, eps=1e-2, solver='device', max_iter=200)
+    assert res.stats.converged
+
+
+def test_sharded_csr_loss_matches_dense_sharded_tightly():
+    """Both layouts round (X, w) to the SAME bf16 values before the f32
+    matvec, so the only divergence left is XLA's reduction order (exact
+    bf16 products reassociated differently) and the count flips of
+    near-tie pairs that rounding causes — a much tighter bound than the
+    generic f32-vs-bf16 oracle tolerance (2e-2)."""
+    X = random_tfidf(m=96, n=24, nnz_per_row=5, seed=3)
+    y = np.random.default_rng(4).normal(size=96)
+    w = np.random.default_rng(5).normal(size=24)
+    dense = O.ShardedOracle(np.asarray(X.to_dense()), y)
+    sparse = O.ShardedOracle(X, y)
+    ld, _ = dense.loss_and_subgrad(w)
+    ls, _ = sparse.loss_and_subgrad(w)
+    assert float(ls) == pytest.approx(float(ld), rel=5e-3, abs=5e-3)
+
+
+def test_sharded_csr_grouped_and_scipy_inputs():
+    """Group ids compose with the CSR layout, and a scipy.sparse matrix
+    (if available) routes to the same slot path."""
+    X = random_tfidf(m=80, n=16, nnz_per_row=3, seed=6)
+    rng = np.random.default_rng(7)
+    y = rng.normal(size=80)
+    g = rng.integers(0, 5, size=80).astype(np.int32)
+    w = rng.normal(size=16)
+    oracle = O.ShardedOracle(X, y, groups=g)
+    assert oracle.name == 'sharded/csr'
+    _assert_bf16_close(O.GroupedOracle(np.asarray(X.to_dense()), y, g),
+                       oracle, w)
+    scipy_sparse = pytest.importorskip('scipy.sparse')
+    sp = scipy_sparse.csr_matrix(np.asarray(X.to_dense()))
+    sp_oracle = O.ShardedOracle(sp, y, groups=g)
+    assert sp_oracle.name == 'sharded/csr'
+    l0, a0 = oracle.loss_and_subgrad(w)
+    l1, a1 = sp_oracle.loss_and_subgrad(w)
+    # the dense round-trip re-rounds the values (f64 -> f32 data), so
+    # near-tie pairs may count differently: tight, not exact
+    assert float(l1) == pytest.approx(float(l0), rel=1e-3, abs=1e-3)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a0),
+                               rtol=1e-2, atol=1e-3)
 
 
 # ------------------------------------------------------ dry-run lowering

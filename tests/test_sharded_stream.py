@@ -1,0 +1,265 @@
+"""Streamed + sharded training (PR 7): per-host assembled feature shards,
+the row-sharded CSR slot layout, and their composition with the bundle
+drivers.
+
+Parity chains covered here: streamed+sharded vs the dense ShardedOracle
+(bit-identical for f32 sources — same bf16 rounding), vs StreamingOracle
+and the fused tree oracle (bf16 tolerance), grouped and ungrouped; and
+sharded-CSR vs dense-sharded objectives through `bmrm` and
+`RankSVM.path()`. The >1-device halves run under the `test-multidevice`
+CI job (XLA_FLAGS=--xla_force_host_platform_device_count=8).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import oracle as O
+from repro.core.bmrm import bmrm
+from repro.core.distributed import (arg_shardings, assemble_row_sharded,
+                                    csr_slot_arrays)
+from repro.core.ranksvm import RankSVM
+from repro.data import MemmapBlockSource, as_row_block_source, random_tfidf
+from repro.launch.mesh import make_mesh
+
+multidevice = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason='needs >= 8 devices (CI: XLA_FLAGS='
+           '--xla_force_host_platform_device_count=8)')
+
+
+def _mesh2x4():
+    return make_mesh((2, 4), ('data', 'model'))
+
+
+def _memmap_of(X, tmp_path, name='X.f32', dtype=np.float32):
+    path = tmp_path / name
+    mm = np.memmap(path, mode='w+', dtype=dtype, shape=X.shape)
+    mm[:] = X
+    mm.flush()
+    return np.memmap(path, mode='r', dtype=dtype, shape=X.shape)
+
+
+def _case(m=220, n=8, seed=40, grouped=False):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(m, n)).astype(np.float32)
+    y = rng.normal(size=m)
+    w = rng.normal(size=n)
+    g = (rng.integers(0, 7, size=m).astype(np.int32) if grouped else None)
+    return X, y, w, g
+
+
+def _assert_bf16_close(o_ref, o_other, w):
+    loss_r, a_r = o_ref.loss_and_subgrad(w)
+    loss_s, a_s = o_other.loss_and_subgrad(w)
+    assert float(loss_s) == pytest.approx(float(loss_r), rel=2e-2, abs=2e-2)
+    a_r = np.asarray(a_r, np.float64)
+    a_s = np.asarray(a_s, np.float64)
+    cos = a_r @ a_s / (np.linalg.norm(a_r) * np.linalg.norm(a_s) + 1e-12)
+    assert cos > 0.99
+
+
+# ------------------------------------------------- slot-layout unit tests
+
+
+def test_csr_slot_arrays_layout():
+    """(data2, idx2) reproduce the CSR rows slot-by-slot; pad slots and
+    pad rows carry (0.0, 0) so they contribute nothing to either matvec."""
+    X = random_tfidf(m=13, n=10, nnz_per_row=3, seed=41)
+    D = np.asarray(X.to_dense())
+    data2, idx2 = csr_slot_arrays(X.data, X.indices, X.indptr, X.shape,
+                                  pad_rows=3)
+    assert data2.shape == idx2.shape == (16, 3)
+    assert data2.dtype == np.float32 and idx2.dtype == np.int32
+    dense = np.zeros((16, 10), np.float32)
+    np.add.at(dense, (np.repeat(np.arange(16), 3)[data2.reshape(-1) != 0],
+                      idx2.reshape(-1)[data2.reshape(-1) != 0]),
+              data2.reshape(-1)[data2.reshape(-1) != 0])
+    np.testing.assert_allclose(dense[:13], D, atol=1e-6)
+    assert not dense[13:].any()
+
+
+def test_csr_slot_arrays_empty_rows():
+    """Rows with zero nonzeros and an all-empty matrix stay well-formed
+    (s floors at 1)."""
+    indptr = np.array([0, 2, 2, 3])
+    data = np.array([1.0, 2.0, 3.0])
+    indices = np.array([0, 4, 2])
+    data2, idx2 = csr_slot_arrays(data, indices, indptr, (3, 5))
+    assert data2.shape == (3, 2)
+    np.testing.assert_allclose(data2, [[1, 2], [0, 0], [3, 0]])
+    np.testing.assert_array_equal(idx2, [[0, 4], [0, 0], [2, 0]])
+    d0, i0 = csr_slot_arrays(np.zeros(0), np.zeros(0, np.int32),
+                             np.zeros(4, np.int64), (3, 5))
+    assert d0.shape == i0.shape == (3, 1)
+    assert not d0.any() and not i0.any()
+
+
+# --------------------------------------- streamed per-host shard assembly
+
+
+def test_assemble_row_sharded_matches_device_put(tmp_path):
+    """The streamed assembly produces the SAME global bf16 array as the
+    all-at-once dense device_put (f32 source: identical rounding), with
+    or without read-ahead, including mesh row-multiple padding."""
+    X, y, w, _ = _case(m=100, n=8)
+    mesh = make_mesh((jax.device_count(), 1), ('data', 'model'))
+    sh = arg_shardings(mesh)['X']
+    m_pad = -(-100 // jax.device_count()) * jax.device_count()
+    src = MemmapBlockSource(_memmap_of(X, tmp_path))
+    import jax.numpy as jnp
+    Xp = np.concatenate([X, np.zeros((m_pad - 100, 8), np.float32)])
+    ref = np.asarray(jax.device_put(jnp.asarray(Xp, jnp.bfloat16), sh)
+                     .astype(jnp.float32))
+    for depth in (0, 2):
+        got = assemble_row_sharded(src, sh, (m_pad, 8), block_rows=16,
+                                   prefetch=depth)
+        assert got.sharding == sh and got.shape == (m_pad, 8)
+        np.testing.assert_array_equal(
+            np.asarray(got.astype(jnp.float32)), ref)
+
+
+def test_sharded_stream_bit_identical_to_dense_sharded(tmp_path):
+    """Memmap input to ShardedOracle routes through the streamed assembly
+    and gives bit-identical loss AND subgradient to the dense sharded
+    path (same bf16 shards, same traced body)."""
+    X, y, w, _ = _case(m=150, n=8, seed=42)
+    dense = O.ShardedOracle(X, y)
+    stream = O.ShardedOracle(MemmapBlockSource(_memmap_of(X, tmp_path)), y,
+                             block_rows=32)
+    assert stream.name == 'sharded/stream'
+    ld, ad = dense.loss_and_subgrad(w)
+    ls, as_ = stream.loss_and_subgrad(w)
+    assert float(ls) == float(ld)
+    np.testing.assert_array_equal(np.asarray(as_), np.asarray(ad))
+
+
+@pytest.mark.parametrize('grouped', [False, True])
+def test_sharded_stream_matches_streaming_and_tree(tmp_path, grouped):
+    """The three-oracle parity chain on a memmap source: streamed+sharded
+    (bf16 mesh) vs StreamingOracle (f32 host passes) vs the fused tree
+    oracle, grouped and ungrouped."""
+    X, y, w, g = _case(m=180, n=8, seed=43, grouped=grouped)
+    mm = _memmap_of(X, tmp_path)
+    sharded = O.ShardedOracle(MemmapBlockSource(mm), y, groups=g,
+                              block_rows=48)
+    streaming = O.StreamingOracle(mm, y, groups=g, block_rows=48)
+    fused = (O.GroupedOracle(X, y, g) if grouped else O.TreeOracle(X, y))
+    _assert_bf16_close(fused, sharded, w)
+    _assert_bf16_close(streaming, sharded, w)
+    assert sharded.n_pairs == streaming.n_pairs == fused.n_pairs
+
+
+def test_ranksvm_sharded_accepts_memmap(tmp_path):
+    """RankSVM(method='sharded') on a memmap trains end-to-end through
+    the streamed input path and matches the in-RAM sharded fit."""
+    X, y, _, _ = _case(m=200, n=8, seed=44)
+    mm = _memmap_of(X, tmp_path)
+    sv_mm = RankSVM(lam=1e-2, eps=1e-2, method='sharded',
+                    prefetch=1).fit(mm, y)
+    sv_ram = RankSVM(lam=1e-2, eps=1e-2, method='sharded').fit(X, y)
+    assert sv_mm.oracle_.name == 'sharded/stream'
+    assert sv_mm.report_.converged
+    assert sv_mm.report_.objective == pytest.approx(
+        sv_ram.report_.objective, rel=1e-4, abs=1e-6)
+
+
+# ----------------------------------------- CSR objective parity (drivers)
+
+
+def test_sharded_csr_bmrm_objective_matches_dense_sharded():
+    X = random_tfidf(m=160, n=24, nnz_per_row=6, seed=45)
+    y = np.random.default_rng(46).normal(size=160)
+    rs = bmrm(O.ShardedOracle(X, y), lam=1e-2, eps=1e-2, solver='device',
+              max_iter=200)
+    rd = bmrm(O.ShardedOracle(np.asarray(X.to_dense()), y), lam=1e-2,
+              eps=1e-2, solver='device', max_iter=200)
+    assert rs.stats.converged and rd.stats.converged
+    # both stop at gap < eps; principled bound on the difference is eps
+    assert rs.stats.obj_best == pytest.approx(rd.stats.obj_best, abs=1e-2)
+
+
+def test_sharded_csr_path_matches_dense_sharded():
+    """RankSVM.path() over the sparse mesh oracle: warm-started sweep,
+    objectives within the driver tolerance of the dense-sharded sweep."""
+    X = random_tfidf(m=140, n=16, nnz_per_row=4, seed=47)
+    y = np.random.default_rng(48).normal(size=140)
+    lams = [1e-1, 1e-2]
+    ps = RankSVM(eps=1e-2, method='sharded').path(
+        X, y, lams, mode='sequential')
+    pd = RankSVM(eps=1e-2, method='sharded').path(
+        np.asarray(X.to_dense()), y, lams, mode='sequential')
+    assert all(p.report.converged for p in ps)
+    for a, b in zip(ps, pd):
+        assert a.report.objective == pytest.approx(b.report.objective,
+                                                   rel=2e-2, abs=2e-3)
+
+
+def test_make_oracle_routes_sharded_layouts(tmp_path):
+    X, y, _, _ = _case(m=64, n=8, seed=49)
+    o_csr = O.make_oracle(random_tfidf(m=64, n=8, nnz_per_row=2, seed=50),
+                          y, method='sharded')
+    assert o_csr.name == 'sharded/csr'
+    mm = _memmap_of(X, tmp_path)
+    o_st = O.make_oracle(mm, y, method='sharded', prefetch=1)
+    assert o_st.name == 'sharded/stream'
+    src = as_row_block_source(X)
+    o_src = O.make_oracle(src, y, method='sharded')
+    assert o_src.name == 'sharded/stream'
+
+
+# ------------------------------------------------------- real >1-dev mesh
+
+
+@multidevice
+def test_multidevice_sharded_csr_parity():
+    """Row-sharded slot arrays on a REAL 2x4 mesh: segment-sum rmatvec
+    crosses the model axis, loss matches the dense tree oracle."""
+    X = random_tfidf(m=192, n=32, nnz_per_row=5, seed=51)
+    y = np.random.default_rng(52).normal(size=192)
+    w = np.random.default_rng(53).normal(size=32)
+    oracle = O.ShardedOracle(X, y, mesh=_mesh2x4())
+    assert oracle.name == 'sharded/csr'
+    _assert_bf16_close(O.TreeOracle(np.asarray(X.to_dense()), y), oracle, w)
+
+
+@multidevice
+def test_multidevice_sharded_csr_grouped_trains():
+    X = random_tfidf(m=8 * 24, n=32, nnz_per_row=4, seed=54)
+    rng = np.random.default_rng(55)
+    y = rng.normal(size=8 * 24)
+    g = rng.integers(0, 6, size=8 * 24).astype(np.int32)
+    oracle = O.ShardedOracle(X, y, groups=g, mesh=_mesh2x4())
+    res = bmrm(oracle, lam=1e-2, eps=1e-2, solver='device', max_iter=200)
+    assert res.stats.converged
+    assert res.state.A.sharding.spec == P(None, 'model')
+
+
+@multidevice
+def test_multidevice_sharded_stream_parity(tmp_path):
+    """Streamed per-host assembly across 8 devices (2x4 mesh, ragged m):
+    bit-identical to the dense sharded oracle on the same mesh."""
+    X, y, w, _ = _case(m=2 * 89 + 1, n=8, seed=56)   # ragged over rows=2
+    mm = _memmap_of(X, tmp_path)
+    mesh = _mesh2x4()
+    dense = O.ShardedOracle(X, y, mesh=mesh)
+    stream = O.ShardedOracle(MemmapBlockSource(mm), y, mesh=mesh,
+                             block_rows=32, prefetch=1)
+    ld, ad = dense.loss_and_subgrad(w)
+    ls, as_ = stream.loss_and_subgrad(w)
+    assert float(ls) == float(ld)
+    np.testing.assert_array_equal(np.asarray(as_), np.asarray(ad))
+
+
+@multidevice
+def test_multidevice_sharded_stream_end_to_end(tmp_path):
+    X, y, _, g = _case(m=8 * 30, n=8, seed=57, grouped=True)
+    mm = _memmap_of(X, tmp_path)
+    svm = RankSVM(lam=1e-2, eps=1e-2, method='sharded', mesh=_mesh2x4(),
+                  prefetch=1)
+    svm.fit(mm, y, groups=g)
+    assert svm.oracle_.name == 'sharded/stream'
+    assert svm.report_.solver == 'device'
+    assert svm.report_.converged

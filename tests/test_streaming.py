@@ -12,7 +12,8 @@ from repro.core.ranksvm import RankSVM
 from repro.data import (CSRBlockSource, DenseBlockSource, MemmapBlockSource,
                         as_row_block_source, projected_resident_gib,
                         random_tfidf)
-from repro.data.rowblocks import _validate_block_rows
+from repro.data.rowblocks import (_ReadAhead, _validate_block_rows,
+                                  _validate_prefetch, resolve_prefetch)
 from repro.data.sparse import CSRMatrix
 
 
@@ -320,7 +321,10 @@ def test_ranksvm_memory_capped_smoke():
     residency (but above the O(m) vector overhead, so block sizing runs
     its REPRESENTATIVE path, not the degenerate 1-row fallback) forces
     the streaming path through RankSVM(method='auto') and training still
-    converges on the device driver."""
+    converges on the device driver. prefetch=1 (explicit: dense X would
+    auto-resolve to 0) keeps the CI fast job exercising the read-ahead
+    thread, and the block sizing must account for BOTH in-flight blocks
+    under the same budget."""
     import warnings as _w
     rng = np.random.default_rng(12)
     m, n = 2000, 16
@@ -331,9 +335,10 @@ def test_ranksvm_memory_capped_smoke():
     with _w.catch_warnings():
         _w.simplefilter('error')             # no degenerate-budget warning
         svm = RankSVM(method='auto', memory_budget=budget, lam=1e-2,
-                      eps=1e-2, max_iter=100)
+                      eps=1e-2, max_iter=100, prefetch=1)
         svm.fit(X, y)
     assert isinstance(svm.oracle_, O.StreamingOracle)
+    assert svm.oracle_.prefetch == 1
     assert 1 < svm.oracle_.block_rows < m    # budget-derived, non-trivial
     assert svm.report_.converged
     assert svm.oracle_.block_resident_bytes() < budget * 2**30
@@ -382,6 +387,177 @@ def test_oracle_block_params_validated():
         RankSVM(stream_block=3.5)
     # whole-valued floats are accepted (np ints too)
     assert O.StreamingOracle(X, y, block_rows=np.int64(8)).block_rows == 8
+
+
+# --------------------------------------------- prefetch read-ahead (§9)
+
+
+def test_prefetched_iter_blocks_bit_identical_memmap(tmp_path):
+    """Acceptance (PR 7): the async double-buffered iterator yields the
+    SAME bytes as the sync one over a MemmapBlockSource — including
+    row-sliced and view-of-view memmaps, where the window reconstruction
+    must compose the view displacement (the PR 4 regression) with the
+    background-thread fetch."""
+    rng = np.random.default_rng(30)
+    X = rng.normal(size=(500, 6)).astype(np.float64)
+    path = tmp_path / 'x.f64'
+    mm = np.memmap(path, mode='w+', dtype=np.float64, shape=X.shape)
+    mm[:] = X
+    mm.flush()
+    mm = np.memmap(path, mode='r', dtype=np.float64, shape=X.shape)
+    y = rng.normal(size=500).astype(np.float32)
+
+    views = [(mm, y), (mm[50:450], y[50:450]), (mm[20:][30:470], y[50:490])]
+    for xv, yv in views:
+        src = MemmapBlockSource(xv)
+        sync = list(src.iter_blocks(48, yv))
+        pre = list(src.iter_blocks(48, yv, prefetch=2))
+        assert len(sync) == len(pre) == src.n_blocks(48)
+        for bs, bp in zip(sync, pre):
+            assert (bs.lo, bs.hi) == (bp.lo, bp.hi)
+            np.testing.assert_array_equal(bs.X, bp.X)
+            np.testing.assert_array_equal(bs.aligned[0], bp.aligned[0])
+
+
+def test_prefetched_payload_passes_bit_identical(tmp_path):
+    """loss_and_subgrad host passes are bit-identical with prefetch on and
+    off, for both the raw-dtype memmap payloads and the sparse CSR ones
+    (payloads carry the SOURCE layout, not an f32 slab, so read-ahead
+    cannot change rounding)."""
+    rng = np.random.default_rng(31)
+    X = rng.normal(size=(300, 8))
+    y = rng.normal(size=300)
+    w = rng.normal(size=8)
+    path = tmp_path / 'x.f64'
+    mm = np.memmap(path, mode='w+', dtype=np.float64, shape=X.shape)
+    mm[:] = X
+    mm.flush()
+    for feats in (np.memmap(path, mode='r', dtype=np.float64,
+                            shape=X.shape),
+                  random_tfidf(m=300, n=8, nnz_per_row=3, seed=32)):
+        l0, a0 = O.StreamingOracle(feats, y, block_rows=64,
+                                   prefetch=0).loss_and_subgrad(w)
+        l2, a2 = O.StreamingOracle(feats, y, block_rows=64,
+                                   prefetch=2).loss_and_subgrad(w)
+        assert float(l0) == float(l2)
+        np.testing.assert_array_equal(np.asarray(a0), np.asarray(a2))
+
+
+def test_prefetch_auto_resolution(tmp_path):
+    """None/'auto' double-buffers memmap sources (disk latency to hide)
+    and stays synchronous for in-RAM dense/CSR sources."""
+    X, y, _ = _case(m=64, n=4)
+    mm_src = as_row_block_source(_memmap_of(X, tmp_path))
+    assert resolve_prefetch(mm_src, None) == 1
+    assert resolve_prefetch(mm_src, 'auto') == 1
+    assert resolve_prefetch(as_row_block_source(X), None) == 0
+    csr = as_row_block_source(random_tfidf(m=64, n=8, nnz_per_row=2,
+                                           seed=33))
+    assert resolve_prefetch(csr, None) == 0
+    # explicit depths pass through unchanged, for every layout
+    assert resolve_prefetch(as_row_block_source(X), 3) == 3
+    assert resolve_prefetch(mm_src, 0) == 0
+    assert O.StreamingOracle(_memmap_of(X, tmp_path), y,
+                             block_rows=16).prefetch == 1
+    assert O.StreamingOracle(X, y, block_rows=16).prefetch == 0
+
+
+def test_prefetch_counts_against_block_residency(tmp_path):
+    """block_resident_bytes models the prefetch queue: depth pending + one
+    consumed block, and the auto block sizing halves the block under the
+    same budget when double-buffering."""
+    X, y, _ = _case(m=256, n=8)
+    mm = _memmap_of(X, tmp_path)
+    o0 = O.StreamingOracle(mm, y, block_rows=32, prefetch=0)
+    o1 = O.StreamingOracle(mm, y, block_rows=32, prefetch=1)
+    assert o0.block_resident_bytes() == 32 * 8 * 4
+    assert o1.block_resident_bytes() == 2 * 32 * 8 * 4
+    budget = 1e-4
+    b0 = O.StreamingOracle(mm, y, memory_budget=budget, prefetch=0)
+    b1 = O.StreamingOracle(mm, y, memory_budget=budget, prefetch=1)
+    assert b1.block_rows <= b0.block_rows
+    assert b1.block_resident_bytes() <= budget * 2**30
+
+
+@pytest.mark.parametrize('bad', [-1, 2.5, True, 'x', 'AUTO'])
+def test_validate_prefetch_rejects(bad):
+    with pytest.raises(ValueError, match='prefetch'):
+        _validate_prefetch(bad)
+    with pytest.raises(ValueError, match='prefetch'):
+        RankSVM(prefetch=bad)
+
+
+def test_validate_prefetch_accepts():
+    assert _validate_prefetch(None) is None
+    assert _validate_prefetch('auto') is None
+    assert _validate_prefetch(0) == 0
+    assert _validate_prefetch(np.int64(2)) == 2
+    assert _validate_prefetch(1.0) == 1    # whole floats, like block_rows
+
+
+def test_readahead_propagates_fetch_errors():
+    def fetch(i):
+        if i == 2:
+            raise RuntimeError('boom at 2')
+        return i * 10
+
+    ra = _ReadAhead(fetch, 4, 2)
+    try:
+        assert ra.get(0) == 0          # schedules 1 and the failing 2
+        assert ra.get(1) == 10
+        with pytest.raises(RuntimeError, match='boom at 2'):
+            ra.get(2)
+        assert ra.get(3) == 30         # the pool survives the error
+    finally:
+        ra.close()
+
+
+def test_readahead_out_of_order_access_is_exact():
+    seen = []
+
+    def fetch(i):
+        seen.append(i)
+        return i
+
+    ra = _ReadAhead(fetch, 6, 2, wrap=True)
+    try:
+        # arbitrary access order: misses fetch synchronously, hits reuse
+        # the pending future — values are always exact
+        for i in [3, 0, 5, 5, 1, 4, 2]:
+            assert ra.get(i) == i
+    finally:
+        ra.close()
+
+
+def test_prefetched_device_solver_matches_sync(tmp_path):
+    """The wraparound read-ahead inside the traced step_fn (pure_callback
+    fetches) gives the same fit as the synchronous stream."""
+    X, y, _ = _case(m=240, n=8, seed=34)
+    mm = _memmap_of(X, tmp_path)
+    r0 = bmrm(O.StreamingOracle(mm, y, block_rows=64, prefetch=0),
+              lam=1e-2, eps=1e-3, solver='device', max_iter=150)
+    r1 = bmrm(O.StreamingOracle(mm, y, block_rows=64, prefetch=2),
+              lam=1e-2, eps=1e-3, solver='device', max_iter=150)
+    assert r0.stats.converged and r1.stats.converged
+    assert float(r1.stats.obj_best) == pytest.approx(
+        float(r0.stats.obj_best), rel=1e-6, abs=1e-8)
+    np.testing.assert_allclose(np.asarray(r1.w), np.asarray(r0.w),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_prefetched_streaming_oracle_is_collectable(tmp_path):
+    """The read-ahead thread must not pin the oracle: step_fn's closure
+    holds the SOURCE (via the fetch partial) but never `self`."""
+    import gc
+    import weakref
+    X, y, _ = _case(m=64, n=5, seed=35)
+    so = O.StreamingOracle(_memmap_of(X, tmp_path), y, block_rows=16,
+                           prefetch=1)
+    bmrm(so, lam=1e-2, eps=1e-2, solver='device', max_iter=30)
+    ref = weakref.ref(so)
+    del so
+    gc.collect()
+    assert ref() is None
 
 
 # ------------------------------------------------------- large-m (slow)

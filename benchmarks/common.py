@@ -1,4 +1,11 @@
-"""Shared helpers for the benchmark harness."""
+"""Shared helpers for the benchmark harness.
+
+Includes the ONE synthetic-traffic generator every serving benchmark
+draws from (`open_loop_arrivals` + `synthetic_candidate_sets`): all
+randomness flows from an explicit integer seed through
+`np.random.default_rng` — never from wall-clock time — so the committed
+CSVs are regenerated from identical request streams on every run.
+"""
 
 from __future__ import annotations
 
@@ -6,6 +13,32 @@ import csv
 import os
 import resource
 import time
+
+import numpy as np
+
+
+def open_loop_arrivals(rate_hz: float, n_requests: int, *,
+                       seed: int) -> np.ndarray:
+    """Deterministic open-loop arrival schedule: cumulative Poisson
+    inter-arrival offsets (seconds from traffic start) at `rate_hz`.
+    Open-loop means arrivals do NOT wait for completions — exactly the
+    regime where queueing delay shows up in the latency tail."""
+    if rate_hz <= 0 or n_requests < 1:
+        raise ValueError('need rate_hz > 0 and n_requests >= 1')
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate_hz, size=n_requests))
+
+
+def synthetic_candidate_sets(n_requests: int, n_features: int, *,
+                             sizes, seed: int):
+    """Deterministic request payloads: `n_requests` float32 candidate
+    matrices with per-request row counts drawn from `sizes` (uniform).
+    Returns (list of (n_i, n_features) arrays, sizes array)."""
+    rng = np.random.default_rng(seed)
+    ns = rng.choice(np.asarray(sizes, np.int64), size=n_requests)
+    reqs = [rng.standard_normal((int(n), n_features)).astype(np.float32)
+            for n in ns]
+    return reqs, ns
 
 
 def timeit(fn, *, repeats: int = 3, warmup: int = 1) -> float:

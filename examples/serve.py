@@ -1,13 +1,20 @@
-"""Batched serving example: prefill + decode with the KV-cache runtime.
+"""Batched serving example: prefill + decode with the KV-cache runtime,
+reranked through the low-latency serving layer.
 
     PYTHONPATH=src python examples/serve.py [--arch qwen2.5-3b] [--tokens 24]
 
 Instantiates a REDUCED config of the chosen architecture (full configs are
 for the dry-run), prefills a batch of prompts, then decodes greedily with
 the fixed-capacity cache — the same `forward_prefill`/`forward_decode` pair
-the decode_32k / long_500k dry-run cells lower at production shapes. Also
-demonstrates ranking a batch of candidate continuations with the score head
-(reranker pattern: the paper's loss trains it, serving consumes it).
+the decode_32k / long_500k dry-run cells lower at production shapes. The
+candidate continuations are then ranked through `repro.serve` (reranker
+pattern: the paper's loss trains the score head, serving consumes it): a
+`RankingService` around the score-head weights serves `top_k` over the
+candidates' final hidden states on the jitted bucketed hot path, and an
+atomic weight hot-swap (`swap_weights`) demonstrates a zero-downtime
+score-head rollout — the production half that
+`benchmarks/serving_latency.py` measures under open-loop traffic
+(EXPERIMENTS.md §Serving).
 """
 
 import argparse
@@ -26,6 +33,7 @@ from repro.configs.registry import ARCHS
 from repro.distributed.sharding import NoSharding
 from repro.models import lm as LM
 from repro.models.params import init_params
+from repro.serve import RankingService
 
 
 def main(argv=None):
@@ -93,7 +101,10 @@ def main(argv=None):
           f'({t_decode/max(args.tokens-1,1)*1e3:.1f} ms/token)')
     print('generated token ids (first sequence):', gen[0][:16], '...')
 
-    # reranker pattern: score candidate continuations with the score head
+    # reranker pattern through the serving layer: the score head is a
+    # linear ranker over final hidden states, so serving it IS the
+    # repro.serve hot path — candidates become the (n_candidates, d)
+    # matrix, the head weights the served model.
     hid = LM.forward_train(
         params, cfg,
         {'tokens': jnp.concatenate([prompts, jnp.asarray(gen)], axis=1)}
@@ -101,10 +112,20 @@ def main(argv=None):
         {'frame_embeds': jnp.take(params['embed'], jnp.concatenate(
             [prompts, jnp.asarray(gen)], axis=1), axis=0)},
         shd, remat='none')
-    scores = jnp.einsum('bd,d->b', hid[:, -1].astype(jnp.float32),
-                        params['score_head'].astype(jnp.float32))
-    order = np.argsort(-np.asarray(scores))
-    print('reranked candidate order (score head):', order.tolist())
+    candidates = np.asarray(hid[:, -1], np.float32)
+    head = np.asarray(params['score_head'], np.float32)
+    with RankingService(head, max_delay_ms=1.0) as svc:
+        vals, order = svc.top_k(candidates, k=b)
+        print('reranked candidate order (score head, serve layer):',
+              order.tolist())
+        # zero-downtime score-head rollout: a retrained head (here:
+        # rescaled — rank-preserving, so the order must not change)
+        # swaps in atomically between launches
+        v = svc.swap_weights(head * 2.0)
+        vals2, order2 = svc.top_k(candidates, k=b)
+        assert order2.tolist() == order.tolist()
+        print(f'hot-swapped score head (version {v}): order unchanged, '
+              f'top score {vals[0]:.4f} -> {vals2[0]:.4f}')
 
 
 if __name__ == '__main__':

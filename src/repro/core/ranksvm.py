@@ -298,6 +298,42 @@ class RankSVM:
     def predict(self, X) -> np.ndarray:
         return self.decision_function(X)
 
+    def scorer(self, **kwargs):
+        """A `repro.serve.Scorer` over the fitted weights — the serving
+        hot path (jitted, shape-bucketed, see `repro.serve`). Kwargs pass
+        through to the `Scorer` constructor (`min_bucket`, `donate`).
+        Cached per fitted weight vector when called without kwargs;
+        refit invalidates the cache."""
+        if self.w_ is None:
+            raise RuntimeError('fit() first')
+        from ..serve import Scorer     # serving layer is optional at import
+        if kwargs:
+            return Scorer(self.w_, **kwargs)
+        cached = getattr(self, '_scorer_cache', None)
+        if cached is None or cached[0] is not self.w_:
+            self._scorer_cache = (self.w_, Scorer(self.w_))
+        return self._scorer_cache[1]
+
+    def scores(self, X) -> np.ndarray:
+        """Candidate scores X @ w via the serving scorer (float32 device
+        matmul, default buckets) — so notebooks don't hand-roll `X @ w`.
+        Sparse inputs fall back to the layout-native
+        `decision_function` (the serve hot path is dense)."""
+        if self.w_ is None:
+            raise RuntimeError('fit() first')
+        if hasattr(X, 'matvec') or not hasattr(X, '__array__'):
+            return self.decision_function(X)
+        return self.scorer().scores(np.asarray(X, np.float32))
+
+    def top_k(self, X, k: int):
+        """Best-k candidates by score: `(values, indices)`, ties broken
+        lowest-index-first, bit-consistent with ranking `self.scores(X)`
+        by a stable full argsort; `k` larger than the candidate count
+        returns everything ranked (`repro.serve.Scorer.top_k`)."""
+        if self.w_ is None:
+            raise RuntimeError('fit() first')
+        return self.scorer().top_k(np.asarray(X, np.float32), k)
+
     def ranking_error(self, X, y, groups=None) -> float:
         """Pairwise ranking error (paper eq. 1) on held-out data."""
         p = jnp.asarray(self.decision_function(X), jnp.float32)

@@ -1,0 +1,24 @@
+"""Low-latency serving layer: the inference half of the reproduction.
+
+Training ends at a weight vector; this package is what consumes it under
+production traffic (DESIGN.md §10, EXPERIMENTS.md §Serving):
+
+  `WeightStore`     versioned weight slots, atomic non-blocking hot-swap
+  `Scorer`          jitted bucketed hot path — flat scores, `lax.top_k`
+                    (argsort-consistent ties), per-query grouped ranking
+  `MicroBatcher`    latency-bounded request coalescing (flush on
+                    max_batch OR max_delay_ms, bounded-queue backpressure)
+  `RankingService`  the assembled stack; `RankSVM.scores`/`.top_k` are
+                    thin wrappers over a `Scorer` built from the fitted
+                    estimator
+"""
+
+from .batching import MicroBatcher, Response, ServeFuture
+from .scorer import Scorer, bucket_for
+from .service import RankingService
+from .weights import WeightStore
+
+__all__ = [
+    'MicroBatcher', 'RankingService', 'Response', 'Scorer',
+    'ServeFuture', 'WeightStore', 'bucket_for',
+]

@@ -1,0 +1,321 @@
+"""Jitted batched scoring hot path: bucketed shapes, donated buffers,
+top-k bit-consistent with a full argsort (DESIGN.md §10).
+
+Serving traffic presents candidate sets of arbitrary size; jit compiles
+one program per shape. Left unchecked that means a steady-state
+recompile every time a new candidate count shows up — a multi-hundred-ms
+latency spike in the middle of production traffic. `Scorer` rounds every
+size up to a power-of-two **bucket** (rows padded, padding masked to
+-inf so it can never enter a top-k) and compiles ONE program per bucket:
+after warmup over the traffic's size range the compile cache is
+saturated and serving triggers zero recompiles (asserted in
+tests/test_serve.py via the jitted programs' cache sizes). `k` is
+bucketed the same way and the result sliced back, so heterogeneous k
+values share programs too.
+
+Three hot-path entry points, all reading one atomic `(version, w)`
+snapshot per device launch from a `WeightStore`:
+
+  `scores(X)`            X @ w for one candidate set
+  `top_k(X, k)`          best-k (values, indices) via `jax.lax.top_k` —
+                         ties break lowest-index-first, bit-consistent
+                         with `np.argsort(-s, kind='stable')[:k]`
+  `rank_grouped(X, g)`   per-query candidate-set ranking: one permutation
+                         ordering rows by (group asc, score desc, index
+                         asc) — the serving complement of the training
+                         side's grouped machinery
+
+plus `score_batch`, the micro-batcher's coalesced launch: B requests
+padded to a (B_bucket, m_bucket, d) slab, scored and top-k'd in ONE
+program call (`batching.MicroBatcher` slices the per-request views).
+
+Input buffers are donated to the compiled program on accelerator
+backends (the padded slab is consumed by the launch, saving a device
+allocation per request); donation is skipped on CPU where XLA does not
+implement it and would warn per call (`kernels.platform`).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.platform import device_platform
+from .weights import WeightStore
+
+# Smallest candidate bucket: sub-64 sets all share one program — the
+# padding cost is noise next to dispatch overhead at those sizes.
+MIN_BUCKET = 64
+
+# Group sentinel for padded rows of `rank_grouped`: sorts after every
+# real (int32) group id, so padding lands at the tail of the permutation
+# and slicing [:n] removes exactly it.
+_PAD_GROUP = np.int32(np.iinfo(np.int32).max)
+
+
+def bucket_for(n: int, min_bucket: int = MIN_BUCKET) -> int:
+    """Smallest power-of-two >= n (floored at `min_bucket`) — the padded
+    shape a size-n candidate set is scored at. The bucket set is
+    implicitly log-bounded: traffic spanning [1, N] compiles at most
+    log2(N / min_bucket) + 1 programs per entry point."""
+    if n < 1:
+        raise ValueError(f'bucket_for needs n >= 1; got {n}')
+    return max(int(min_bucket), 1 << (int(n) - 1).bit_length())
+
+
+class Scorer:
+    """Bucketed jitted scorer over a `WeightStore` snapshot.
+
+    Args:
+      weights: a `WeightStore`, or anything `WeightStore` accepts (1-D
+        array, fitted `RankSVM`, `PathPoint`) — wrapped in a fresh store.
+      min_bucket: smallest candidate bucket (default 64); sizes below it
+        share one program.
+      donate: donate the padded input slab to the compiled program
+        ('auto' (default) = on accelerator backends only, where XLA
+        implements buffer donation; True/False force it).
+
+    Thread safety: entry points are safe to call concurrently — program
+    compilation is guarded by the GIL-atomic dict idiom (a lost race
+    compiles the same program twice, harmless), and each call snapshots
+    `(version, w)` exactly once.
+    """
+
+    def __init__(self, weights, *, min_bucket: int = MIN_BUCKET,
+                 donate: 'bool | str' = 'auto'):
+        self.store = (weights if isinstance(weights, WeightStore)
+                      else WeightStore(weights))
+        if not (isinstance(min_bucket, int) and min_bucket >= 1):
+            raise ValueError(f'min_bucket must be a positive int; got '
+                             f'{min_bucket!r}')
+        self.min_bucket = int(min_bucket)
+        if donate == 'auto':
+            donate = device_platform() != 'cpu'
+        self._donate = (0,) if donate else ()
+        self._programs: dict = {}
+
+    # -- public hot path ---------------------------------------------------
+
+    @property
+    def n_features(self) -> int:
+        return self.store.n_features
+
+    def scores(self, X) -> np.ndarray:
+        """X @ w for one candidate set X of shape (n, d); returns (n,)
+        float32 host scores."""
+        Xp, n = self._pad(X)
+        _, w = self.store.get()
+        s = self._program('scores', Xp.shape[0])(Xp, w, np.int32(n))
+        return np.asarray(s)[:n]
+
+    def top_k(self, X, k: int):
+        """Best k of one candidate set: `(values, indices)` with ties
+        broken lowest-index-first — bit-consistent with ranking the same
+        scores by `np.argsort(-s, kind='stable')[:k]`. `k` is clamped to
+        the candidate count (a reranker asked for more than it has
+        returns everything, ranked)."""
+        Xp, n = self._pad(X)
+        k = self._validate_k(k, n)
+        kb = self._k_bucket(k, Xp.shape[0])
+        _, w = self.store.get()
+        _, v, i = self._program('topk', Xp.shape[0], kb)(Xp, w,
+                                                         np.int32(n))
+        return np.asarray(v)[:k], np.asarray(i)[:k]
+
+    def rank_grouped(self, X, groups) -> np.ndarray:
+        """Per-query candidate ranking: one permutation of [0, n) that
+        orders rows by (group id asc, score desc, original index asc) —
+        each query's candidate block comes out contiguous and ranked.
+        Group ids are any int32 labels (the training-side oracles'
+        grouped convention); rows of one group need not be contiguous."""
+        Xp, n = self._pad(X)
+        g = np.asarray(groups)
+        if g.shape != (n,):
+            raise ValueError(f'groups must align with the {n} candidate '
+                             f'rows; got shape {g.shape}')
+        if g.size and not np.all(np.isfinite(g.astype(np.float64))):
+            raise ValueError('groups contain non-finite entries')
+        gp = np.full(Xp.shape[0], _PAD_GROUP, np.int32)
+        gp[:n] = g.astype(np.int32)
+        _, w = self.store.get()
+        order = self._program('grouped', Xp.shape[0])(Xp, w, np.int32(n),
+                                                      gp)
+        return np.asarray(order)[:n]
+
+    def score_batch(self, requests):
+        """The micro-batcher's coalesced launch: `requests` is a list of
+        `(X, n, k)` with X already validated float32 (n, d). Returns
+        `(version, scores, values, indices)` — version is the ONE weight
+        snapshot the whole batch was scored with; the arrays are the
+        padded (B_bucket, m_bucket[, k_bucket]) program outputs, rows
+        [i, :n_i] / [i, :k_i] valid."""
+        if not requests:
+            raise ValueError('score_batch needs at least one request')
+        d = self.n_features
+        mb = bucket_for(max(n for _, n, _ in requests), self.min_bucket)
+        kb = self._k_bucket(max(max(k for _, _, k in requests), 1), mb)
+        bb = 1 << (len(requests) - 1).bit_length()
+        Xp = np.zeros((bb, mb, d), np.float32)
+        n_valid = np.zeros(bb, np.int32)
+        for i, (X, n, _) in enumerate(requests):
+            Xp[i, :n] = X
+            n_valid[i] = n
+        version, w = self.store.get()
+        s, v, idx = self._program('batch', bb, mb, kb)(Xp, w, n_valid)
+        return version, np.asarray(s), np.asarray(v), np.asarray(idx)
+
+    def warm(self, max_candidates: int, *, ks=(1,),
+             max_batch: 'int | None' = None, grouped: bool = False):
+        """Precompile the whole program grid for traffic up to
+        `max_candidates` rows per request: every candidate bucket, the
+        k-buckets of `ks` (each clamped per bucket), and — when
+        `max_batch` is given — every batch-bucket of the micro-batcher's
+        coalesced launch. Steady-state serving is zero-recompile only
+        AFTER this grid is compiled: a flush size or candidate bucket
+        first seen mid-traffic would otherwise pay its one-time compile
+        as a latency spike in production. Returns the number of compiled
+        programs."""
+        d = self.n_features
+        w = self.store.get()[1]
+        mbs, mb = [], self.min_bucket
+        top = bucket_for(int(max_candidates), self.min_bucket)
+        while mb <= top:
+            mbs.append(mb)
+            mb *= 2
+        for mb in mbs:
+            Xp = np.zeros((mb, d), np.float32)
+            self._program('scores', mb)(Xp, w, np.int32(1))
+            for k in ks:
+                kb = self._k_bucket(self._validate_k(k, mb), mb)
+                self._program('topk', mb, kb)(np.zeros((mb, d),
+                                                       np.float32),
+                                              w, np.int32(1))
+            if grouped:
+                gp = np.full(mb, _PAD_GROUP, np.int32)
+                self._program('grouped', mb)(np.zeros((mb, d),
+                                                      np.float32),
+                                             w, np.int32(1), gp)
+            if max_batch:
+                bb = 1
+                while bb <= (1 << (int(max_batch) - 1).bit_length()):
+                    for k in ks:
+                        kb = self._k_bucket(self._validate_k(k, mb), mb)
+                        self._program('batch', bb, mb, kb)(
+                            np.zeros((bb, mb, d), np.float32), w,
+                            np.zeros(bb, np.int32))
+                    bb *= 2
+        return self.n_programs
+
+    # -- introspection (tests, benchmark) ----------------------------------
+
+    @property
+    def n_programs(self) -> int:
+        """Compiled-program count — stable after bucket warmup."""
+        return len(self._programs)
+
+    def program_cache_sizes(self) -> dict:
+        """Per-program jit-cache sizes; every entry stays at 1 in steady
+        state (the zero-recompile assertion of tests/test_serve.py)."""
+        return {key: fn._cache_size() for key, fn in
+                self._programs.items()}
+
+    # -- internals ---------------------------------------------------------
+
+    def _validate_request(self, X, k):
+        """Shared request validation (also called by the micro-batcher in
+        the SUBMITTING thread, so bad input raises at the call site, not
+        inside the worker): X to float32 (n, d), n >= 1, d matching the
+        served model; k clamped to n (None -> 0: scores only)."""
+        X = np.ascontiguousarray(np.asarray(X, np.float32))
+        if X.ndim != 2:
+            raise ValueError('candidate set must be a 2-D (n_candidates, '
+                             f'n_features) matrix; got shape {X.shape}')
+        n, d = X.shape
+        if n == 0:
+            raise ValueError('empty candidate set: nothing to score '
+                             '(n_candidates == 0)')
+        if d != self.n_features:
+            raise ValueError(f'candidate features have width {d}; the '
+                             f'served model scores {self.n_features}')
+        k = 0 if k is None else self._validate_k(k, n)
+        return X, n, k
+
+    @staticmethod
+    def _validate_k(k, n: int) -> int:
+        if not (isinstance(k, (int, np.integer))
+                and not isinstance(k, bool)) or k < 1:
+            raise ValueError(f'k must be a positive integer; got {k!r}')
+        return min(int(k), n)
+
+    def _k_bucket(self, k: int, m_bucket: int) -> int:
+        """k rounds to a power of two, clamped to the candidate bucket —
+        heterogeneous k share programs, and the slice back to the
+        requested k is free."""
+        return min(1 << (int(k) - 1).bit_length(), m_bucket)
+
+    def _pad(self, X):
+        X, n, _ = self._validate_request(X, None)
+        mb = bucket_for(n, self.min_bucket)
+        Xp = np.zeros((mb, X.shape[1]), np.float32)
+        Xp[:n] = X
+        return Xp, n
+
+    def _program(self, kind: str, *dims):
+        key = (kind, *dims)
+        fn = self._programs.get(key)
+        if fn is None:
+            fn = self._programs[key] = self._build(kind, *dims)
+        return fn
+
+    def _build(self, kind: str, *dims):
+        """One compiled program per (kind, bucket dims). Padding rows are
+        masked to -inf AFTER the matmul, so they lose every top-k/sort
+        comparison against any finite real score; with `lax.top_k`'s and
+        stable `argsort`'s shared lowest-index-first tie rule, a padded
+        row (index >= n) can never displace a real one even at equal
+        keys."""
+        if kind == 'scores':
+            (mb,) = dims
+
+            def scores_fn(Xp, w, n_valid):
+                s = Xp @ w
+                return jnp.where(jnp.arange(mb) < n_valid, s, -jnp.inf)
+
+            return jax.jit(scores_fn, donate_argnums=self._donate)
+        if kind == 'topk':
+            mb, kb = dims
+
+            def topk_fn(Xp, w, n_valid):
+                s = jnp.where(jnp.arange(mb) < n_valid, Xp @ w, -jnp.inf)
+                v, i = jax.lax.top_k(s, kb)
+                return s, v, i
+
+            return jax.jit(topk_fn, donate_argnums=self._donate)
+        if kind == 'batch':
+            bb, mb, kb = dims
+
+            def batch_fn(Xp, w, n_valid):
+                s = jnp.einsum('bmd,d->bm', Xp, w)
+                s = jnp.where(jnp.arange(mb)[None, :] < n_valid[:, None],
+                              s, -jnp.inf)
+                v, i = jax.lax.top_k(s, kb)
+                return s, v, i
+
+            return jax.jit(batch_fn, donate_argnums=self._donate)
+        if kind == 'grouped':
+            (mb,) = dims
+
+            def grouped_fn(Xp, w, n_valid, groups):
+                s = jnp.where(jnp.arange(mb) < n_valid, Xp @ w, -jnp.inf)
+                # two stable sorts compose into the lexicographic order
+                # (group asc, score desc, index asc): padded rows carry
+                # s = -inf AND the max-int32 sentinel group, so both
+                # passes push them to the tail.
+                by_score = jnp.argsort(s, stable=True, descending=True)
+                by_group = jnp.argsort(groups[by_score], stable=True)
+                return by_score[by_group]
+
+            return jax.jit(grouped_fn, donate_argnums=self._donate)
+        raise AssertionError(f'unknown program kind {kind!r}')

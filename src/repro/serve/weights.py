@@ -1,0 +1,96 @@
+"""Versioned weight slots with atomic hot-swap (DESIGN.md §10).
+
+A deployed ranking service must pick up a newly trained weight vector —
+a `RankSVM.path()` selection, a retrained model, the reward-model score
+head — without blocking traffic and without ever mixing two models in
+one response. `WeightStore` holds the current `(version, w)` pair as a
+single immutable tuple: readers snapshot it once per device launch
+(`get()`, a lock-free atomic tuple read under CPython), and `swap()`
+prepares the incoming vector OFF the hot path (float32 cast, device
+transfer, `block_until_ready`) before flipping the slot pointer under a
+lock. In-flight batches keep the snapshot they started with, so every
+response is produced entirely by exactly one weight version — the old
+model serves until the instant the new one is fully installed.
+"""
+
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+import jax
+
+
+def _prepare_weights(w) -> jax.Array:
+    """Validate + stage a weight vector for serving: 1-D, finite,
+    float32, resident on the default device before anyone can read it."""
+    if hasattr(w, 'w_'):            # fitted RankSVM estimator
+        w = w.w_
+    if hasattr(w, 'w') and not isinstance(w, np.ndarray):
+        w = w.w                     # PathPoint from RankSVM.path()
+    if w is None:
+        raise ValueError('weights are None — fit the estimator first')
+    w = np.asarray(w, np.float32)
+    if w.ndim != 1 or w.size == 0:
+        raise ValueError('weights must be a non-empty 1-D vector; got '
+                         f'shape {w.shape}')
+    if not np.all(np.isfinite(w)):
+        raise ValueError('weights contain non-finite entries')
+    wd = jax.device_put(w)
+    wd.block_until_ready()
+    return wd
+
+
+class WeightStore:
+    """Atomic versioned weight slot for the serving hot path.
+
+    Args:
+      weights: initial model — a 1-D array-like, a fitted `RankSVM`
+        (its `w_` is taken), or a `PathPoint` from `RankSVM.path()`.
+
+    `get()` returns the current `(version, w_device)` snapshot; callers
+    use BOTH halves from the same call so a concurrent `swap()` can
+    never split a launch across versions. Versions start at 0 and
+    increment by 1 per successful swap.
+    """
+
+    def __init__(self, weights):
+        wd = _prepare_weights(weights)
+        self._lock = threading.Lock()
+        self._slot = (0, wd)
+
+    @property
+    def version(self) -> int:
+        return self._slot[0]
+
+    @property
+    def n_features(self) -> int:
+        return int(self._slot[1].shape[0])
+
+    def get(self):
+        """Current `(version, w_device)` — one atomic snapshot. Use both
+        halves of the SAME call for any one device launch."""
+        return self._slot
+
+    def swap(self, weights) -> int:
+        """Install new weights; returns the new version.
+
+        The expensive work (validation, f32 cast, device transfer, a
+        `block_until_ready` barrier) happens BEFORE the pointer flip, so
+        the swap itself is one tuple assignment: concurrent `get()`
+        callers see either the old complete slot or the new complete
+        slot, never a partial state, and are never blocked waiting on a
+        transfer. Feature-dimension changes are rejected — a serving
+        process scores fixed-width candidates.
+        """
+        wd = _prepare_weights(weights)
+        with self._lock:
+            version, cur = self._slot
+            if wd.shape != cur.shape:
+                raise ValueError(
+                    f'weight shape {wd.shape} does not match the served '
+                    f'model {cur.shape}; a new feature space needs a new '
+                    'service')
+            self._slot = (version + 1, wd)
+            return version + 1

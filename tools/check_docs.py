@@ -14,9 +14,9 @@ problems (empty = pass):
    at files that exist, and `#anchor` fragments must match a heading slug
    of the target (mkdocs-style slugification).
 
-3. `check_export_coverage` — every symbol exported from
-   `repro.core/__init__.py` and `repro.data/__init__.py` must be covered
-   by a mkdocstrings `::: identifier` directive somewhere under docs/:
+3. `check_export_coverage` — every symbol exported from the
+   `repro.core`, `repro.data` and `repro.serve` `__init__.py` files must
+   be covered by a mkdocstrings `::: identifier` directive under docs/:
    either the symbol itself, its defining module, or (for re-exported
    modules) the module. This is the acceptance bar for the generated API
    reference: a new public export without a reference page fails CI.
@@ -194,7 +194,7 @@ def check_export_coverage(root: str = ROOT) -> list:
 def _check_export_coverage(root: str) -> list:
     directives = _doc_directives(root)
     problems = []
-    for pkg_name in ('repro.core', 'repro.data'):
+    for pkg_name in ('repro.core', 'repro.data', 'repro.serve'):
         pkg = importlib.import_module(pkg_name)
         init = os.path.join(root, 'src', *pkg_name.split('.'),
                             '__init__.py')

@@ -1,0 +1,105 @@
+"""Incremental-retraining benchmark: warm refit vs cold full fit under
+distribution drift (DESIGN.md §11, EXPERIMENTS §Incremental).
+
+The PR-9 tentpole claim to verify: after appending a Δ-row drifted block
+to an m-row fitted model, `RankSVM.refit(mode='ledger')` — revalidate
+every retained cutting plane over Δ only (O(planes·Δ) oracle work), then
+re-enter the device driver with the full plane buffer + previous dual —
+reaches the same eps as a cold fit of the merged m+Δ rows in a fraction
+of its iterations AND wall-clock. The `mode='w-only'` fallback (drop the
+planes, warm-start from w alone) sits between the two: zero revalidation
+cost, more solve iterations.
+
+The interesting number is the CROSSOVER: revalidation work grows with
+the plane count while its savings shrink as Δ grows (a big-enough block
+moves the optimum far from the old planes' tangent points), so at some
+appended fraction the cold fit wins back. The grid sweeps Δ/m from 1% to
+25% and the CSV records whichever way each lands.
+
+Timing honesty: everything is CPU wall-clock on this container; compile
+caches are warmed per (m, Δ) shape pair with a throwaway
+fit-refit-coldfit round before anything is timed, so the numbers compare
+steady-state retraining, not jit compilation. Data is
+`data.synthetic.cadata_drift`: the appended block shares the base
+utility function but its covariates are mean-shifted — real drift, not
+just more of the same rows.
+
+    PYTHONPATH=src python -m benchmarks.incremental [--full]
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.ranksvm import RankSVM
+from repro.data import cadata_drift
+
+from .common import Reporter
+
+EPS, MAX_ITER = 1e-3, 400
+FRACS = (0.01, 0.05, 0.10, 0.25)
+
+
+def _svm():
+    return RankSVM(method='tree', eps=EPS, max_iter=MAX_ITER)
+
+
+def _fit_base(base):
+    return _svm().fit(base.X, base.y)
+
+
+def _row(rep, m, frac, seed=0):
+    base, Xd, yd = cadata_drift(m=m, m_delta=max(8, int(round(m * frac))),
+                                seed=seed)
+    Xm = np.concatenate([np.asarray(base.X), Xd])
+    ym = np.concatenate([base.y, yd])
+
+    # Warm every compile cache this row's timed calls can hit: the base
+    # fit (m rows), the delta-block partials (Δ rows), the merged solve
+    # (m+Δ rows) and the cold fit share shapes with the throwaway round.
+    _fit_base(base).refit(Xd, yd, mode='ledger')
+    _svm().fit(Xm, ym)
+
+    def timed_refit(mode):
+        svm = _fit_base(base)
+        t0 = time.perf_counter()
+        r = svm.refit(Xd, yd, mode=mode)
+        return r, time.perf_counter() - t0
+
+    r_led, led_s = timed_refit('ledger')
+    r_won, won_s = timed_refit('w-only')
+
+    t0 = time.perf_counter()
+    cold = _svm().fit(Xm, ym)
+    cold_s = time.perf_counter() - t0
+
+    assert r_led.fit.converged and r_won.fit.converged
+    assert cold.report_.converged
+    obj_rel = (abs(r_led.fit.objective - cold.report_.objective)
+               / max(abs(cold.report_.objective), 1e-12))
+    rep.row(m, r_led.delta_rows, frac, cold.report_.iterations,
+            round(cold_s, 4), r_led.fit.iterations, round(led_s, 4),
+            round(r_led.revalidate_seconds, 4), r_won.fit.iterations,
+            round(won_s, 4),
+            round(r_led.fit.iterations / cold.report_.iterations, 3),
+            round(led_s / cold_s, 3), format(obj_rel, '.2e'))
+
+
+def main(full: bool = False):
+    rep = Reporter('incremental',
+                   ['m', 'm_delta', 'frac', 'cold_it', 'cold_s',
+                    'ledger_it', 'ledger_s', 'revalidate_s', 'wonly_it',
+                    'wonly_s', 'ledger_it_ratio', 'ledger_wall_ratio',
+                    'ledger_cold_obj_rel_diff'])
+    sizes = [2000] + ([8000] if full else [])
+    for m in sizes:
+        for frac in FRACS:
+            _row(rep, m, frac)
+    return rep
+
+
+if __name__ == '__main__':
+    import sys
+    main(full='--full' in sys.argv).save()

@@ -21,6 +21,12 @@ iteration savings dominate (large K over a wide lambda range, serial CPU
 backend). The CSV records whichever way it lands (EXPERIMENTS §Path
 sweep).
 
+PR 9 adds the two-phase 'hybrid' sweep to the grid: sequential-warm the
+first `hybrid_prefix` lambdas, then broadcast the tightest plane buffer
+as every remaining lambda's initial batched state — the batched sweep's
+parallel width with part of the sequential sweep's iteration saving
+(`hybrid_it` between `seq_it` and `vmap_it` is the expected signature).
+
 Reported per (m, K): wall seconds for the three strategies (compile
 excluded: caches warmed by a first run), total BMRM iterations, and the
 max vmap-vs-sequential relative objective difference. On this wide grid
@@ -74,29 +80,41 @@ def _row(rep, m, X, y, k):
         return bmrm_path(oracle, lams, mode='vmap', eps=EPS,
                          max_iter=MAX_ITER)
 
-    for fn in (cold, seq, vmap):       # compile + warm every chunk length
+    def hybrid():
+        return bmrm_path(oracle, lams, mode='hybrid', eps=EPS,
+                         max_iter=MAX_ITER)
+
+    for fn in (cold, seq, vmap, hybrid):  # compile + warm every chunk len
         fn()
     cold_s = timeit(cold, repeats=3, warmup=0)
     seq_s = timeit(seq, repeats=3, warmup=0)
     vmap_s = timeit(vmap, repeats=3, warmup=0)
+    hyb_s = timeit(hybrid, repeats=3, warmup=0)
 
     cold_res = cold()
     cold_it = sum(r.stats.iterations for r in cold_res)
     seq_it, seq_obj, seq_conv = _sweep_stats(oracle, lams, 'sequential')
     vmap_it, vmap_obj, vmap_conv = _sweep_stats(oracle, lams, 'vmap')
+    hyb_it, hyb_obj, hyb_conv = _sweep_stats(oracle, lams, 'hybrid')
     rel = max(abs(a - b) / max(abs(b), 1e-12)
               for a, b in zip(vmap_obj, seq_obj))
+    hyb_rel = max(abs(a - b) / max(abs(b), 1e-12)
+                  for a, b in zip(hyb_obj, seq_obj))
     rep.row(m, k, round(cold_s, 4), round(seq_s, 4), round(vmap_s, 4),
-            round(cold_s / vmap_s, 2), round(seq_s / vmap_s, 2),
-            cold_it, seq_it, vmap_it, format(rel, '.2e'),
-            int(seq_conv), int(vmap_conv))
+            round(hyb_s, 4), round(cold_s / vmap_s, 2),
+            round(seq_s / vmap_s, 2), round(seq_s / hyb_s, 2),
+            cold_it, seq_it, vmap_it, hyb_it, format(rel, '.2e'),
+            format(hyb_rel, '.2e'), int(seq_conv), int(vmap_conv),
+            int(hyb_conv))
 
 
 def main(full: bool = False):
     rep = Reporter('path_sweep',
-                   ['m', 'K', 'cold_s', 'seq_s', 'vmap_s', 'cold_over_vmap',
-                    'seq_over_vmap', 'cold_it', 'seq_it', 'vmap_it',
-                    'vmap_seq_obj_rel_diff', 'seq_conv', 'vmap_conv'])
+                   ['m', 'K', 'cold_s', 'seq_s', 'vmap_s', 'hybrid_s',
+                    'cold_over_vmap', 'seq_over_vmap', 'seq_over_hybrid',
+                    'cold_it', 'seq_it', 'vmap_it', 'hybrid_it',
+                    'vmap_seq_obj_rel_diff', 'hybrid_seq_obj_rel_diff',
+                    'seq_conv', 'vmap_conv', 'hybrid_conv'])
     sizes = [500, 2000] + ([8000] if full else [])
     cad = cadata_like(m=max(sizes), m_test=10)
     for m in sizes:

@@ -13,8 +13,8 @@ import time
 
 from . import (fig1_iteration_cost, fig2_runtimes, fig3_memory,
                fig4_test_error, fig5_crossover, fig6_rlevels,
-               roofline_table, scaling_loglog, serving_latency,
-               solver_overhead, streaming_oracle)
+               incremental, path_sweep, roofline_table, scaling_loglog,
+               serving_latency, solver_overhead, streaming_oracle)
 
 ALL = {
     'fig1': fig1_iteration_cost,
@@ -28,6 +28,8 @@ ALL = {
     'solver': solver_overhead,
     'streaming': streaming_oracle,
     'serving': serving_latency,
+    'path': path_sweep,
+    'incremental': incremental,
 }
 
 

@@ -5,7 +5,10 @@
 #  - qp/bmrm:   bundle-method optimizer (Algorithm 1)
 #  - oracle:    the BMRM oracle layer (tree/pairs/auto/grouped/sharded/stream)
 #  - ranksvm:   TreeRSVM / PairRSVM estimators (thin oracle selectors)
-from . import counts, joachims, oracle, ref, rank_loss, qp, bmrm, ranksvm  # noqa: F401
+from . import (counts, incremental, joachims, oracle, ref,  # noqa: F401
+               rank_loss, qp, bmrm, ranksvm)
+from .incremental import (IncrementalFit, PlaneLedger,  # noqa: F401
+                          RefitReport, block_partials, refit_chunk_step)
 from .oracle import (GroupedOracle, PairwiseOracle, RankOracle,  # noqa: F401
                      ShardedOracle, StreamingOracle, TreeOracle, make_oracle)
 from .rank_loss import pairwise_hinge_loss, ranking_error  # noqa: F401

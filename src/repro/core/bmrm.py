@@ -359,6 +359,14 @@ class BundleState(NamedTuple):
     planes actually inserted so far (slots [0, n_active) — inserts fill
     sequentially, and past capacity the smallest-alpha slot is overwritten
     in place, so the active set is always a prefix).
+
+    `S` records, per plane slot, the support iterate the plane was cut at
+    (plane i is the tangent of R_emp at S[i]). The solver itself never
+    reads it back — it exists for the data-warm-start contract
+    (`core.incremental`, DESIGN.md §11): knowing each plane's tangent
+    point lets a refit revalidate the plane for appended rows by
+    evaluating the NEW rows' loss at S[i] only, O(planes·Δ) instead of
+    O(planes·m).
     """
 
     w: jnp.ndarray         # (n,)   current iterate w_t
@@ -371,6 +379,7 @@ class BundleState(NamedTuple):
     n_active: jnp.ndarray  # ()     int32 planes in buffer
     gap: jnp.ndarray       # ()     J(w_best) - D(alpha)
     done: jnp.ndarray      # ()     bool, gap < eps reached
+    S: jnp.ndarray         # (K, n) support iterate each plane was cut at
 
 
 def init_bundle_state(dim: int, max_planes: int,
@@ -383,7 +392,60 @@ def init_bundle_state(dim: int, max_planes: int,
         A=jnp.zeros((K, dim), f32), b=jnp.zeros((K,), f32),
         G=jnp.zeros((K, K), f32), alpha=jnp.zeros((K,), f32),
         n_active=jnp.asarray(0, jnp.int32),
-        gap=jnp.asarray(np.inf, f32), done=jnp.asarray(False))
+        gap=jnp.asarray(np.inf, f32), done=jnp.asarray(False),
+        S=jnp.zeros((K, dim), f32))
+
+
+def bundle_state_from_planes(A, b, S, dim: int, max_planes: int,
+                             w0=None, alpha=None) -> BundleState:
+    """Rebuild a warm-startable `BundleState` from bare planes.
+
+    The inverse of "read (A, b, S) off a fitted state": `core.incremental`
+    revalidates retained planes for changed data on the host and re-enters
+    the device driver through here. The P <= max_planes planes land in
+    slots [0, P); the Gram block is recomputed (A is f32 already, so
+    A A^T matches what incremental insertion would have produced), and
+    `alpha` (default uniform over the P planes) seeds the first masked QP.
+    Scalar statistics start reset exactly like a lambda warm start: the
+    first bundle_step cuts a fresh tangent at w0 and the QP immediately
+    optimizes over old + new planes together.
+    """
+    A = np.asarray(A, np.float32)
+    b = np.asarray(b, np.float32).ravel()
+    S = np.asarray(S, np.float32)
+    K = int(max_planes)
+    P = len(b)
+    if A.shape != (P, int(dim)) or S.shape != (P, int(dim)):
+        raise ValueError(f'planes A{A.shape}/S{S.shape} do not match '
+                         f'({P}, {int(dim)})')
+    if P > K:
+        raise ValueError(f'{P} planes exceed the max_planes={K} buffer; '
+                         'trim to the highest-dual-weight planes first')
+    st = init_bundle_state(dim, K, w0)
+    if P == 0:
+        return st
+    if alpha is None:
+        al = np.full(P, 1.0 / P, np.float32)
+    else:
+        al = np.asarray(alpha, np.float32).ravel()
+        if al.shape != (P,):
+            raise ValueError(f'alpha has shape {al.shape}, expected ({P},)')
+        s = float(al.sum())
+        al = al / s if s > 0 else np.full(P, 1.0 / P, np.float32)
+    A_buf = np.zeros((K, int(dim)), np.float32)
+    A_buf[:P] = A
+    S_buf = np.zeros((K, int(dim)), np.float32)
+    S_buf[:P] = S
+    b_buf = np.zeros(K, np.float32)
+    b_buf[:P] = b
+    al_buf = np.zeros(K, np.float32)
+    al_buf[:P] = al
+    G = np.zeros((K, K), np.float32)
+    G[:P, :P] = A @ A.T
+    return st._replace(
+        A=jnp.asarray(A_buf), b=jnp.asarray(b_buf), S=jnp.asarray(S_buf),
+        G=jnp.asarray(G), alpha=jnp.asarray(al_buf),
+        n_active=jnp.asarray(P, jnp.int32))
 
 
 def bundle_state_shardings(mesh, batched: bool = False) -> BundleState:
@@ -407,10 +469,11 @@ def bundle_state_shardings(mesh, batched: bool = False) -> BundleState:
     """
     rep = NamedSharding(mesh, P())
     a_spec = P(None, None, 'model') if batched else P(None, 'model')
+    kn = NamedSharding(mesh, a_spec)     # the two O(K n) buffers: A and S
     return BundleState(
         w=rep, w_best=rep, j_best=rep,
-        A=NamedSharding(mesh, a_spec), b=rep, G=rep, alpha=rep,
-        n_active=rep, gap=rep, done=rep)
+        A=kn, b=rep, G=rep, alpha=rep,
+        n_active=rep, gap=rep, done=rep, S=kn)
 
 
 def abstract_bundle_state(dim: int, max_planes: int) -> BundleState:
@@ -422,7 +485,7 @@ def abstract_bundle_state(dim: int, max_planes: int) -> BundleState:
         w=s((dim,), f32), w_best=s((dim,), f32), j_best=s((), f32),
         A=s((K, dim), f32), b=s((K,), f32), G=s((K, K), f32),
         alpha=s((K,), f32), n_active=s((), jnp.int32),
-        gap=s((), f32), done=s((), jnp.bool_))
+        gap=s((), f32), done=s((), jnp.bool_), S=s((K, dim), f32))
 
 
 def _bundle_step(s: BundleState, step_fn, lam, eps, qp_iters: int):
@@ -445,6 +508,10 @@ def _bundle_step(s: BundleState, step_fn, lam, eps, qp_iters: int):
     slot = jnp.where(full, jnp.argmin(masked_alpha).astype(jnp.int32),
                      s.n_active)
     A = jax.lax.dynamic_update_slice(s.A, a[None, :], (slot, 0))
+    # The slot's support iterate: the plane just inserted is R_emp's
+    # tangent at s.w — recorded so data warm starts (core.incremental)
+    # can revalidate the plane for appended rows at exactly this point.
+    S = jax.lax.dynamic_update_slice(s.S, s.w[None, :], (slot, 0))
     cross = A @ a                    # rows >= n_active are zero-filled
     G = s.G.at[slot, :].set(cross).at[:, slot].set(cross)
     b = s.b.at[slot].set(r_emp - wa)
@@ -465,16 +532,68 @@ def _bundle_step(s: BundleState, step_fn, lam, eps, qp_iters: int):
     done = s.done | (gap < eps)
     return BundleState(w=w, w_best=w_best, j_best=j_best, A=A, b=b, G=G,
                        alpha=alpha, n_active=n_active, gap=gap,
-                       done=done), r_emp
+                       done=done, S=S), r_emp
 
 
-# Compiled chunk cache: per-oracle (the traced step_fn closes over its
-# arrays), keyed by the static config. lam/eps are traced arguments, so one
-# compilation serves a whole regularization-path sweep.
+# Compiled chunk caches. `_CHUNK_CACHE` is per-oracle (the traced step_fn
+# closes over its arrays), keyed by the static config; lam/eps are traced
+# arguments, so one compilation serves a whole regularization-path sweep.
+# `_SHARED_CHUNKS` is the cross-instance cache for oracles exposing the
+# `step_parts` split (the fused single-device oracles): the data pytree is
+# a traced ARGUMENT there, so a fresh oracle over fresh data — every
+# incremental refit builds one — reuses the compiled chunk of any earlier
+# same-signature oracle instead of paying seconds of retrace/recompile
+# per call (jit still re-traces on genuinely new data shapes).
 _CHUNK_CACHE: weakref.WeakKeyDictionary = weakref.WeakKeyDictionary()
+_SHARED_CHUNKS: dict = {}
+
+
+def _shared_chunk(oracle, key, build):
+    """Cross-instance chunk lookup: returns a `(state, *scalars)` callable
+    with the oracle's data pytree bound, or None when the oracle cannot
+    share (no `step_parts`, or a mesh oracle whose state shardings are
+    pinned per instance)."""
+    parts = getattr(oracle, 'step_parts', None)
+    if not callable(parts) or _oracle_state_shardings(oracle) is not None:
+        return None
+    fn, data = parts()
+    key = (oracle.step_signature(),) + key
+    jitted = _SHARED_CHUNKS.get(key)
+    if jitted is None:
+        jitted = _SHARED_CHUNKS[key] = jax.jit(build(fn))
+    return lambda state, *scalars: jitted(state, *scalars, data)
+
+
+def _scan_chunk(step_fn, lam, eps, qp_iters, sync_every, state):
+    """`sync_every` fused bundle steps as one lax.scan (skipping once
+    done) — the traced body both chunk caches jit."""
+    def body(s, _):
+        def run(s):
+            s2, r = _bundle_step(s, step_fn, lam, eps, qp_iters)
+            return s2, (r, s2.gap, jnp.asarray(True))
+
+        def skip(s):
+            return s, (jnp.asarray(np.nan, f32), s.gap,
+                       jnp.asarray(False))
+
+        return jax.lax.cond(s.done, skip, run, s)
+
+    return jax.lax.scan(body, state, None, length=sync_every)
 
 
 def _device_chunk(oracle, max_planes: int, sync_every: int, qp_iters: int):
+    def build(fn):
+        def chunk(state: BundleState, lam, eps, data):
+            return _scan_chunk(lambda w: fn(w, data), lam, eps, qp_iters,
+                               sync_every, state)
+
+        return chunk
+
+    shared = _shared_chunk(oracle, (max_planes, sync_every, qp_iters),
+                           build)
+    if shared is not None:
+        return shared
+
     try:
         per = _CHUNK_CACHE.setdefault(oracle, {})
     except TypeError:              # non-weakrefable oracle: build uncached
@@ -484,18 +603,8 @@ def _device_chunk(oracle, max_planes: int, sync_every: int, qp_iters: int):
         step_fn = oracle.step_fn()
 
         def chunk(state: BundleState, lam, eps):
-            def body(s, _):
-                def run(s):
-                    s2, r = _bundle_step(s, step_fn, lam, eps, qp_iters)
-                    return s2, (r, s2.gap, jnp.asarray(True))
-
-                def skip(s):
-                    return s, (jnp.asarray(np.nan, f32), s.gap,
-                               jnp.asarray(False))
-
-                return jax.lax.cond(s.done, skip, run, s)
-
-            return jax.lax.scan(body, state, None, length=sync_every)
+            return _scan_chunk(step_fn, lam, eps, qp_iters, sync_every,
+                               state)
 
         sh = _oracle_state_shardings(oracle)
         if sh is None:
@@ -613,7 +722,13 @@ def _bmrm_device(oracle, dim, lam, eps, max_iter, w0, max_planes, callback,
 # ------------------------------------------------------ batched path sweep
 
 
-PATH_MODES = ('vmap', 'sequential', 'auto')
+PATH_MODES = ('vmap', 'sequential', 'hybrid', 'auto')
+
+# Default sequential-warm prefix of mode='hybrid': two fits are enough to
+# fill the bundle with tight planes of the risk surface (the first fit
+# does the heavy lifting; the second starts warm and converges in a few
+# steps) while keeping the forfeited parallel width minimal.
+DEFAULT_HYBRID_PREFIX = 2
 
 
 def _validate_path_mode(mode: str) -> str:
@@ -674,7 +789,7 @@ def path_state_gib(n_lams: int, dim: int, max_planes: int | None = None,
     the per-device number is smaller.
     """
     planes = int(max_planes) if max_planes is not None else DEFAULT_MAX_PLANES
-    per_lam = 4.0 * (planes * dim         # plane buffer A
+    per_lam = 4.0 * (2 * planes * dim     # plane buffer A + iterate buffer S
                      + 2 * dim            # w, w_best
                      + planes * planes    # Gram
                      + 3 * planes + 8     # b, alpha, masks, scalars
@@ -683,11 +798,29 @@ def path_state_gib(n_lams: int, dim: int, max_planes: int | None = None,
 
 
 def init_path_state(dim: int, max_planes: int, n_lams: int,
-                    w0=None) -> BundleState:
+                    w0=None, state: 'BundleState | None' = None
+                    ) -> BundleState:
     """A (n_lams, ...)-leading `BundleState`: slice k along the first axis
-    of every leaf is lambda k's independent bundle state (all start cold
-    from the shared w0)."""
-    s = init_bundle_state(dim, max_planes, w0)
+    of every leaf is lambda k's independent bundle state.
+
+    Without `state` every lambda starts cold from the shared w0. With
+    `state` (a scalar `BundleState`, e.g. the final state of a
+    sequential-warm prefix — the two-phase hybrid sweep) every lambda's
+    slice starts from THAT state's plane buffer instead: planes
+    under-estimate R_emp independently of lambda, so they are valid
+    cuts for every lambda in the batch, and only the lam-dependent
+    scalar statistics reset (same rule as `bmrm(..., state=)`)."""
+    if state is None:
+        s = init_bundle_state(dim, max_planes, w0)
+    else:
+        if tuple(state.A.shape) != (int(max_planes), int(dim)):
+            raise ValueError(f'seed state has buffer '
+                             f'{tuple(state.A.shape)}, expected '
+                             f'{(int(max_planes), int(dim))}')
+        s = state._replace(
+            w=state.w if w0 is None else jnp.asarray(np.asarray(w0), f32),
+            w_best=state.w, j_best=jnp.asarray(np.inf, f32),
+            gap=jnp.asarray(np.inf, f32), done=jnp.asarray(False))
     return jax.tree_util.tree_map(
         lambda x: jnp.broadcast_to(x[None], (int(n_lams),) + x.shape), s)
 
@@ -704,11 +837,46 @@ def _bundle_step_masked(s: BundleState, step_fn, lam, eps, qp_iters: int):
             jnp.logical_not(s.done))
 
 
+def _path_scan_chunk(step_fn, lams, eps, n_lams, qp_iters, sync_every,
+                     state):
+    """`sync_every` vmapped bundle steps as one lax.scan — the batched
+    analogue of `_scan_chunk`, carrying the (n_lams, ...) state."""
+    def body(s, _):
+        def run(s):
+            s2, r, act = jax.vmap(
+                lambda sk, lamk: _bundle_step_masked(
+                    sk, step_fn, lamk, eps, qp_iters))(s, lams)
+            return s2, (r, s2.gap, act)
+
+        def skip(s):
+            return s, (jnp.full((n_lams,), np.nan, f32), s.gap,
+                       jnp.zeros((n_lams,), bool))
+
+        # Scalar predicate (ALL lambdas done) -> a real cond: the
+        # per-lambda freeze happens inside the vmapped step.
+        return jax.lax.cond(jnp.all(s.done), skip, run, s)
+
+    return jax.lax.scan(body, state, None, length=sync_every)
+
+
 def _path_chunk(oracle, n_lams: int, max_planes: int, sync_every: int,
                 qp_iters: int):
     """Compiled `sync_every`-step chunk of the BATCHED path sweep: the
     vmapped analogue of `_device_chunk`, carrying the (n_lams, ...) state.
-    Cached per oracle alongside the scalar chunks (disjoint keys)."""
+    Shared across same-signature oracles when possible, else cached per
+    oracle alongside the scalar chunks (disjoint keys)."""
+    def build(fn):
+        def chunk(state: BundleState, lams, eps, data):
+            return _path_scan_chunk(lambda w: fn(w, data), lams, eps,
+                                    n_lams, qp_iters, sync_every, state)
+
+        return chunk
+
+    shared = _shared_chunk(oracle, ('path', n_lams, max_planes,
+                                    sync_every, qp_iters), build)
+    if shared is not None:
+        return shared
+
     try:
         per = _CHUNK_CACHE.setdefault(oracle, {})
     except TypeError:              # non-weakrefable oracle: build uncached
@@ -718,22 +886,8 @@ def _path_chunk(oracle, n_lams: int, max_planes: int, sync_every: int,
         step_fn = oracle.step_fn()
 
         def chunk(state: BundleState, lams, eps):
-            def body(s, _):
-                def run(s):
-                    s2, r, act = jax.vmap(
-                        lambda sk, lamk: _bundle_step_masked(
-                            sk, step_fn, lamk, eps, qp_iters))(s, lams)
-                    return s2, (r, s2.gap, act)
-
-                def skip(s):
-                    return s, (jnp.full((n_lams,), np.nan, f32), s.gap,
-                               jnp.zeros((n_lams,), bool))
-
-                # Scalar predicate (ALL lambdas done) -> a real cond: the
-                # per-lambda freeze happens inside the vmapped step.
-                return jax.lax.cond(jnp.all(s.done), skip, run, s)
-
-            return jax.lax.scan(body, state, None, length=sync_every)
+            return _path_scan_chunk(step_fn, lams, eps, n_lams, qp_iters,
+                                    sync_every, state)
 
         sh = _oracle_state_shardings(oracle, batched=True)
         if sh is None:
@@ -746,7 +900,9 @@ def _path_chunk(oracle, n_lams: int, max_planes: int, sync_every: int,
 
 
 def _bmrm_path_vmap(oracle, lams, dim, eps, max_iter, w0, max_planes,
-                    sync_every, qp_iters, callback) -> 'list[BMRMResult]':
+                    sync_every, qp_iters, callback,
+                    init_state: 'BundleState | None' = None
+                    ) -> 'list[BMRMResult]':
     """The batched path driver: ONE device program sweeps every lambda.
 
     The (K, ...)-leading `BundleState` runs through the same chunked
@@ -761,7 +917,7 @@ def _bmrm_path_vmap(oracle, lams, dim, eps, max_iter, w0, max_planes,
     auto_sync = sync_every == 'auto'
     cur_sync = AUTO_SYNC_INIT if auto_sync else max(1, int(sync_every))
 
-    state = init_path_state(dim, K, n_lams, w0)
+    state = init_path_state(dim, K, n_lams, w0, state=init_state)
     sh = _oracle_state_shardings(oracle, batched=True)
     if sh is not None:
         state = jax.device_put(state, sh)
@@ -836,6 +992,7 @@ def bmrm_path(oracle, lams, *, mode: str = 'auto', eps: float = 1e-3,
               max_planes: int | None = None, solver: str = 'auto',
               sync_every: 'int | str' = 8, qp_iters: int = 128,
               memory_budget: float | None = None,
+              hybrid_prefix: int = DEFAULT_HYBRID_PREFIX,
               callback: Callable | None = None) -> 'list[BMRMResult]':
     """Sweep a regularization path over `lams`; one BMRMResult per lambda.
 
@@ -844,7 +1001,7 @@ def bmrm_path(oracle, lams, *, mode: str = 'auto', eps: float = 1e-3,
         not accepted here — use `bmrm` per lambda.
       lams: lambda values, any order; each must be finite and > 0
         (`_validate_lams`). Duplicates are allowed.
-      mode: 'vmap' | 'sequential' | 'auto' —
+      mode: 'vmap' | 'sequential' | 'hybrid' | 'auto' —
         * 'vmap': ONE batched device program trains all K lambdas
           simultaneously over a (K, ...)-leading `BundleState` (DESIGN.md
           §7). Requires an oracle whose traced step batches
@@ -853,6 +1010,14 @@ def bmrm_path(oracle, lams, *, mode: str = 'auto', eps: float = 1e-3,
         * 'sequential': one fit per lambda in order, warm-starting each
           from the previous (bundle state on the device driver, w0 on the
           host driver).
+        * 'hybrid': two phases — sequential-warm the first
+          `hybrid_prefix` lambdas, then broadcast the LAST prefix fit's
+          plane buffer as every remaining lambda's initial state
+          (`init_path_state(state=)`) and batch the rest as one vmap
+          program. Recovers (part of) the warm-start iteration saving
+          the pure batched sweep forfeits while keeping its parallel
+          width for the grid's tail; requirements are vmap's (batchable
+          oracle, device solver). Results come back in `lams` order.
         * 'auto' (default): vmap when the oracle supports it, the
           configured `solver` allows the device driver, eps is at or above
           the f32 floor, the backend is not the serial CPU (where the
@@ -876,10 +1041,17 @@ def bmrm_path(oracle, lams, *, mode: str = 'auto', eps: float = 1e-3,
         (same unit as `RankSVM(memory_budget=)`). Exceeding it falls back
         to sequential with a RuntimeWarning — even under mode='vmap', on
         the grounds that an explicit budget outranks an explicit mode
-        (pass memory_budget=None to force vmap regardless).
+        (pass memory_budget=None to force vmap regardless). For
+        mode='hybrid' the projection covers only the batched phase's
+        `len(lams) - hybrid_prefix` lambdas.
+      hybrid_prefix: mode='hybrid' only — how many leading lambdas run
+        sequentially warm before the batched phase (default
+        DEFAULT_HYBRID_PREFIX = 2). A prefix >= len(lams) degenerates to
+        the pure sequential sweep.
       callback: per-sync callback. Sequential: forwarded to each `bmrm`
         call unchanged. vmap: called as callback(total_steps, W, J, G)
-        with (K, ...)-shaped batched values.
+        with (K, ...)-shaped batched values. Hybrid: each phase's
+        convention in turn.
     """
     _validate_path_mode(mode)
     if solver not in SOLVERS:
@@ -894,17 +1066,17 @@ def bmrm_path(oracle, lams, *, mode: str = 'auto', eps: float = 1e-3,
     dim = int(oracle.n)
     batchable = bool(getattr(oracle, 'supports_path_vmap', False))
 
-    if mode == 'vmap':
+    if mode in ('vmap', 'hybrid'):
         if not batchable:
             raise ValueError(
-                f"mode='vmap' needs an oracle whose traced step batches "
+                f"mode={mode!r} needs an oracle whose traced step batches "
                 f'over lambda (supports_path_vmap); {type(oracle).__name__}'
                 ' does not — the streaming oracle pulls host row blocks '
                 'through pure_callback, which cannot vmap. Use '
                 "mode='sequential' (or 'auto')")
         if solver == 'host':
-            raise ValueError("mode='vmap' is a device-driver program; it "
-                             "cannot run under solver='host' — pass "
+            raise ValueError(f"mode={mode!r} runs a device-driver program;"
+                             " it cannot run under solver='host' — pass "
                              "solver='auto'/'device' or mode='sequential'")
         if eps < F32_EPS_FLOOR:
             # Same semantics as an explicit solver='device' below the
@@ -916,6 +1088,68 @@ def bmrm_path(oracle, lams, *, mode: str = 'auto', eps: float = 1e-3,
                 'lockstep sweep would then spin to max_iter — use '
                 f"mode='sequential' for eps < {F32_EPS_FLOOR:g}",
                 RuntimeWarning, stacklevel=2)
+    if mode == 'hybrid':
+        if not (isinstance(hybrid_prefix, (int, np.integer))
+                and not isinstance(hybrid_prefix, bool)
+                and int(hybrid_prefix) >= 1):
+            raise ValueError('hybrid_prefix must be a positive int; got '
+                             f'{hybrid_prefix!r}')
+
+    def _over_budget(n_batched: int) -> bool:
+        if memory_budget is None:
+            return False
+        projected = path_state_gib(n_batched, dim, max_planes,
+                                   m=int(getattr(oracle, 'm', 0)))
+        if projected > float(memory_budget):
+            warnings.warn(
+                f'batched path sweep over {n_batched} lambdas projects '
+                f'~{projected:.3g} GiB of per-lambda bundle state + oracle '
+                f'working set (path_state_gib), over the '
+                f'{float(memory_budget):g} GiB memory_budget — falling '
+                'back to the sequential warm-started sweep. Raise the '
+                'budget, lower max_planes, or split the lambda grid to '
+                'batch it.', RuntimeWarning, stacklevel=3)
+            return True
+        return False
+
+    def _sequential(seq_lams, state=None, w_prev=None):
+        results = []
+        for lam in seq_lams:
+            t0 = time.perf_counter()
+            res = bmrm(oracle, lam=lam, eps=eps, max_iter=max_iter,
+                       w0=w_prev, max_planes=max_planes, callback=callback,
+                       solver=solver, sync_every=sync_every,
+                       qp_iters=qp_iters, state=state)
+            res.stats.seconds = time.perf_counter() - t0
+            state = res.state        # None on the host driver
+            w_prev = res.w
+            results.append(res)
+        return results
+
+    if mode == 'hybrid':
+        prefix = min(int(hybrid_prefix), len(lams))
+        head = _sequential(lams[:prefix], w_prev=w0)
+        tail_lams = lams[prefix:]
+        if not tail_lams:
+            return head
+        seed = head[-1].state
+        if seed is None or _over_budget(len(tail_lams)):
+            # seed is None when solver='auto' resolved the prefix fits to
+            # the host driver (e.g. a CPU-CSR oracle): there is no plane
+            # buffer to broadcast, so finish the sweep sequentially-warm
+            # (same warm quality, no batched phase).
+            if seed is None:
+                warnings.warn(
+                    "mode='hybrid': the sequential prefix ran on the host "
+                    'driver (no bundle state to broadcast) — finishing '
+                    'the sweep sequentially', RuntimeWarning, stacklevel=2)
+            return head + _sequential(tail_lams, state=seed,
+                                      w_prev=head[-1].w)
+        return head + _bmrm_path_vmap(
+            oracle, tail_lams, dim=dim, eps=eps, max_iter=max_iter,
+            w0=None, max_planes=max_planes, sync_every=sync_every,
+            qp_iters=qp_iters, callback=callback, init_state=seed)
+
     # Measured backend exception (EXPERIMENTS §Path sweep, the path-mode
     # analogue of the oracle layer's csr_rmatvec rule): on the serial CPU
     # backend the batched sweep loses 2-8x to sequential-warm — no
@@ -926,19 +1160,8 @@ def bmrm_path(oracle, lams, *, mode: str = 'auto', eps: float = 1e-3,
         mode == 'auto' and batchable and solver != 'host'
         and getattr(oracle, 'prefer_device_solver', True)
         and eps >= F32_EPS_FLOOR and not cpu_backend)
-    if use_vmap and memory_budget is not None:
-        projected = path_state_gib(len(lams), dim, max_planes,
-                                   m=int(getattr(oracle, 'm', 0)))
-        if projected > float(memory_budget):
-            warnings.warn(
-                f'batched path sweep over {len(lams)} lambdas projects '
-                f'~{projected:.3g} GiB of per-lambda bundle state + oracle '
-                f'working set (path_state_gib), over the '
-                f'{float(memory_budget):g} GiB memory_budget — falling '
-                'back to the sequential warm-started sweep. Raise the '
-                'budget, lower max_planes, or split the lambda grid to '
-                'batch it.', RuntimeWarning, stacklevel=2)
-            use_vmap = False
+    if use_vmap and _over_budget(len(lams)):
+        use_vmap = False
 
     if use_vmap:
         return _bmrm_path_vmap(oracle, lams, dim=dim, eps=eps,
@@ -946,15 +1169,4 @@ def bmrm_path(oracle, lams, *, mode: str = 'auto', eps: float = 1e-3,
                                max_planes=max_planes, sync_every=sync_every,
                                qp_iters=qp_iters, callback=callback)
 
-    results = []
-    state, w_prev = None, w0
-    for lam in lams:
-        t0 = time.perf_counter()
-        res = bmrm(oracle, lam=lam, eps=eps, max_iter=max_iter, w0=w_prev,
-                   max_planes=max_planes, callback=callback, solver=solver,
-                   sync_every=sync_every, qp_iters=qp_iters, state=state)
-        res.stats.seconds = time.perf_counter() - t0
-        state = res.state            # None on the host driver
-        w_prev = res.w
-        results.append(res)
-    return results
+    return _sequential(lams, w_prev=w0)

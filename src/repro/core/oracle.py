@@ -402,6 +402,36 @@ class _FusedOracle(RankOracle):
 
         return fn
 
+    def step_parts(self):
+        """The `step_fn` trace split into (static fn, data pytree) for
+        bmrm's SHARED chunk cache: `fn(w, data)` closes over hashable
+        config only, the device arrays travel as the `data` argument.
+        Two oracles with equal `step_signature()` therefore reuse ONE
+        jitted chunk (jax re-traces per data shape, not per instance) —
+        the fixed seconds of retrace/compile an incremental refit's
+        fresh merged oracle would otherwise pay on every call
+        (DESIGN.md §11)."""
+        feats = self._feats
+        cfg = dict(engine=self._engine, block=self._block, kind=feats.kind,
+                   uniform=getattr(feats, '_uniform', False), n=self.n,
+                   device_rmatvec=True)
+
+        def fn(w, data):
+            arrays, y, g, inv_n = data
+            return _fused_step_impl(w, arrays, y, g, inv_n, **cfg)
+
+        return fn, (feats.arrays, self._y, self._g, self._inv_n_dev)
+
+    def step_signature(self):
+        """Hashable key under which `step_parts` traces are
+        interchangeable: everything `fn` closes over statically. Data
+        shapes are deliberately NOT part of the key — the shared jit
+        re-traces per shape on its own."""
+        feats = self._feats
+        return (type(self).__name__, self._engine, self._block,
+                feats.kind, bool(getattr(feats, '_uniform', False)),
+                self.n, self._g is None)
+
 
 class TreeOracle(_FusedOracle):
     """The paper's method: merge-sort-tree counts, O(ms + m log^2 m)/iter."""

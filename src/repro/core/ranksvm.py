@@ -68,12 +68,16 @@ import numpy as np
 import jax.numpy as jnp
 
 from . import rank_loss as _rank_loss
+from ..data.rowblocks import BlockStore, projected_resident_gib
 from ..data.rowblocks import _validate_block_rows as _validate_block
 from ..data.rowblocks import _validate_prefetch
-from .bmrm import (SOLVERS, _validate_lams, _validate_path_mode, bmrm,
-                   bmrm_path)
+from .bmrm import (DEFAULT_MAX_PLANES, SOLVERS, _validate_lams,
+                   _validate_path_mode, bmrm, bmrm_path)
 from .counts import _validate_engine
+from .incremental import IncrementalFit, RefitReport, block_partials
 from .oracle import METHODS, make_oracle
+
+REFIT_MODES = ('ledger', 'w-only', 'auto')
 
 
 def _matvec(X, w):
@@ -214,12 +218,22 @@ class RankSVM:
         self.w_: np.ndarray | None = None
         self.report_: FitReport | None = None
         self.oracle_ = None
+        self.incremental_: IncrementalFit | None = None
+        self.refit_report_: RefitReport | None = None
 
     # -- public API --------------------------------------------------------
 
-    def fit(self, X, y, groups=None):
-        """Learn w from features X (m, n) and real-valued utility scores y."""
-        oracle = self._make_oracle(X, y, groups)
+    def fit(self, X, y=None, groups=None):
+        """Learn w from features X (m, n) and real-valued utility scores y.
+
+        X may also be a `data.rowblocks.BlockStore` (y/groups omitted —
+        the store carries them); either way the fit leaves an
+        `incremental_` handle behind, so `refit()` can later append or
+        retire row blocks and warm-start from this solution instead of
+        training cold (DESIGN.md §11)."""
+        store, y, groups = self._as_store(X, y, groups)
+        oracle = self._make_oracle(X if not isinstance(X, BlockStore)
+                                   else store, y, groups)
         self.oracle_ = oracle
 
         t0 = time.perf_counter()
@@ -228,10 +242,12 @@ class RankSVM:
 
         self.w_ = res.w
         self.report_ = self._report(res, dt)
+        self.incremental_ = IncrementalFit(store, res.state, oracle.n_pairs,
+                                           partials_fn=self._partials)
         return self
 
-    def path(self, X, y, lams, groups=None,
-             mode: str = 'auto') -> list[PathPoint]:
+    def path(self, X, y, lams, groups=None, mode: str = 'auto',
+             hybrid_prefix: int | None = None) -> list[PathPoint]:
         """Fit a regularization path over `lams`; one PathPoint per lambda.
 
         Args:
@@ -248,6 +264,12 @@ class RankSVM:
               solver carries the bundle state across lambdas (cutting
               planes under-estimate R_emp independently of lambda), the
               host solver seeds each fit with the previous w.
+            * 'hybrid': sequential-warm the first `hybrid_prefix`
+              lambdas (default core.bmrm.DEFAULT_HYBRID_PREFIX = 2),
+              then broadcast the last prefix fit's plane buffer as every
+              remaining lambda's initial batched state — the batched
+              sweep's parallel width WITH (part of) the sequential
+              sweep's warm-start saving (EXPERIMENTS §Path sweep).
             * 'auto' (default): vmap for fused device-solver oracles
               (tree/pairs/grouped/sharded above the f32 eps floor) on
               accelerator backends, whose projected batched state fits
@@ -270,14 +292,19 @@ class RankSVM:
         # the PathPoint zip below.
         _validate_path_mode(mode)
         lams = _validate_lams(lams)
-        oracle = self._make_oracle(X, y, groups)
+        store, y, groups = self._as_store(X, y, groups)
+        oracle = self._make_oracle(X if not isinstance(X, BlockStore)
+                                   else store, y, groups)
         self.oracle_ = oracle
 
+        from .bmrm import DEFAULT_HYBRID_PREFIX
         results = bmrm_path(
             oracle, lams, mode=mode, eps=self.eps, max_iter=self.max_iter,
             max_planes=self.max_planes, solver=self.solver,
             sync_every=self.sync_every, qp_iters=self.qp_iters,
             memory_budget=self.memory_budget,
+            hybrid_prefix=(DEFAULT_HYBRID_PREFIX if hybrid_prefix is None
+                           else int(hybrid_prefix)),
             callback=(lambda t, w, j, g:
                       print(f'  bmrm it={t} J_best={np.asarray(j)} '
                             f'gap={np.asarray(g)}'))
@@ -288,7 +315,128 @@ class RankSVM:
         last = points[-1]
         self.w_, self.report_ = last.w, last.report
         self.lam = last.lam
+        self.incremental_ = IncrementalFit(store, results[-1].state,
+                                           oracle.n_pairs,
+                                           partials_fn=self._partials)
         return points
+
+    def refit(self, X=None, y=None, groups=None, *, retire=(),
+              mode: str = 'auto', weight_store=None) -> RefitReport:
+        """Incrementally retrain after a data change (DESIGN.md §11).
+
+        Appends one row block (X, y[, groups]) and/or retires previously
+        appended blocks by id, then re-solves WARM instead of cold:
+
+          mode='ledger'  revalidate every retained cutting plane against
+                         the changed rows only (O(planes·Δ) oracle work,
+                         `core.incremental.PlaneLedger`) and re-enter the
+                         device driver with the full plane buffer + the
+                         previous dual. Requires a device-driver fit (the
+                         host driver keeps no bundle state).
+          mode='w-only'  drop the planes; warm-start from the previous
+                         weight vector alone. Cheaper per refit call
+                         (zero revalidation work), more solve iterations.
+          mode='auto'    (default) 'ledger' when a ledger exists, the
+                         merged oracle can run the device driver, and no
+                         retired block belongs to the base component
+                         (whose planes are not per-block subtractable);
+                         'w-only' otherwise.
+
+        Returns a `RefitReport`; also refreshes `w_` / `report_` /
+        `refit_report_` and, when `weight_store` is given (a
+        `serve.WeightStore` or a `serve.RankingService`), atomically
+        hot-swaps the refreshed weights into it — the full
+        train→refit→serve loop in one call.
+        """
+        if self.incremental_ is None:
+            raise RuntimeError('fit() first — refit() continues a fitted '
+                               'model')
+        if mode not in REFIT_MODES:
+            raise ValueError(f'unknown refit mode {mode!r}; expected one '
+                             f'of {REFIT_MODES}')
+        inc = self.incremental_
+        retire = ((int(retire),) if isinstance(retire, (int, np.integer))
+                  else tuple(int(b) for b in retire))
+        if X is None and not retire:
+            raise ValueError('refit() needs a block to append (X, y) '
+                             'and/or block ids to retire')
+        if (X is None) != (y is None):
+            raise ValueError('append needs both X and y')
+
+        resolved = mode
+        if resolved != 'w-only' and inc.ledger is None:
+            if resolved == 'ledger':
+                raise ValueError(
+                    "mode='ledger' needs a device-driver fitted bundle "
+                    'state (the host driver keeps none); refit with '
+                    "mode='w-only' or fit with solver='device'")
+            resolved = 'w-only'
+        if resolved == 'auto':
+            if any(b in inc.ledger.base_bids for b in retire):
+                # Base-component planes are not per-block subtractable;
+                # mode='ledger' would rebuild partials over every
+                # survivor (O(planes·m_surviving)) — under 'auto' the
+                # w-only warm start is the better default.
+                resolved = 'w-only'
+            else:
+                resolved = 'ledger'
+        if resolved == 'w-only':
+            inc.ledger = None          # drop the planes: w-only contract
+
+        inc.revalidate_seconds = 0.0
+        for bid in retire:
+            inc.retire(bid)
+        appended, delta_rows = (), 0
+        if X is not None:
+            bid = inc.append(X, y, groups)
+            appended = (bid,)
+            delta_rows = inc.store.member(bid).source.m
+        if not inc.store.block_ids:
+            raise ValueError('refit retired every block; nothing left to '
+                             'train on')
+
+        store = inc.store
+        oracle = self._make_oracle(store, store.y, store.groups)
+        self.oracle_ = oracle
+
+        if resolved == 'ledger' and not self._device_solvable(oracle):
+            if mode == 'ledger':
+                raise ValueError(
+                    "mode='ledger' needs the device driver, but the "
+                    f'merged {type(oracle).__name__} cannot run it under '
+                    f"solver={self.solver!r} (eps={self.eps:g}); use "
+                    "mode='w-only'")
+            resolved = 'w-only'
+            inc.ledger = None
+
+        K = (int(self.max_planes) if self.max_planes is not None
+             else DEFAULT_MAX_PLANES)
+        t0 = time.perf_counter()
+        if resolved == 'ledger':
+            state = inc.warm_state(int(oracle.n), K, w0=self.w_)
+            if state is None:           # e.g. the ledger lost all pairs
+                resolved = 'w-only'
+        if resolved == 'ledger':
+            n_planes = int(state.n_active)
+            res = self._solve(oracle, self.lam, state=state)
+        else:
+            n_planes = 0
+            res = self._solve(oracle, self.lam, w0=self.w_)
+        dt = time.perf_counter() - t0
+
+        inc.commit(res.state, oracle.n_pairs)
+        self.w_ = res.w
+        self.report_ = self._report(res, dt)
+        self.refit_report_ = RefitReport(
+            mode=resolved, appended=appended, retired=retire,
+            n_planes=n_planes, delta_rows=delta_rows,
+            revalidate_seconds=inc.revalidate_seconds, fit=self.report_)
+        if weight_store is not None:
+            if hasattr(weight_store, 'swap_weights'):   # RankingService
+                weight_store.swap_weights(self)
+            else:                                       # WeightStore
+                weight_store.swap(self)
+        return self.refit_report_
 
     def decision_function(self, X) -> np.ndarray:
         if self.w_ is None:
@@ -352,7 +500,54 @@ class RankSVM:
 
     # -- internals ---------------------------------------------------------
 
+    def _as_store(self, X, y, groups):
+        """Normalize fit input to (BlockStore, y, groups). A raw X
+        becomes block 0 of a fresh store (sources wrap without copying);
+        a BlockStore passes through and carries its own y/groups."""
+        if isinstance(X, BlockStore):
+            if y is not None or groups is not None:
+                raise ValueError('a BlockStore carries its own y/groups; '
+                                 'do not pass them separately')
+            if not X.block_ids:
+                raise ValueError('cannot fit an empty BlockStore')
+            return X, X.y, X.groups
+        if y is None:
+            raise ValueError('y is required (omit it only when X is a '
+                             'BlockStore)')
+        store = BlockStore()
+        store.append(X, y, groups)
+        return store, y, groups
+
+    def _partials(self, Xb, yb, gb, S):
+        """Per-block plane partials with this estimator's engine knobs
+        (the `IncrementalFit` revalidation hook)."""
+        return block_partials(Xb, yb, gb, S, engine=self.engine,
+                              pair_block=self.pair_block)
+
+    def _device_solvable(self, oracle) -> bool:
+        """Would `_solve` run this oracle on the device driver? Mirrors
+        `core.bmrm.bmrm`'s dispatch — plane-ledger warm starts are
+        bundle-state warm starts, which only the device driver accepts."""
+        from .bmrm import F32_EPS_FLOOR
+        capable = bool(getattr(oracle, 'supports_device_solver', False))
+        if self.solver == 'device':
+            return capable
+        return (self.solver == 'auto' and capable
+                and getattr(oracle, 'prefer_device_solver', True)
+                and self.eps >= F32_EPS_FLOOR)
+
     def _make_oracle(self, X, y, groups):
+        if isinstance(X, BlockStore):
+            # Fused methods need one materialized X; method='auto' keeps
+            # the store streaming only when it projects over budget
+            # (mirroring make_oracle's own budget rule — a small in-RAM
+            # store merges into the faster fused oracle).
+            if self.method in ('tree', 'pairs') or (
+                    self.method == 'auto' and not X.disk_backed and (
+                        self.memory_budget is None
+                        or projected_resident_gib(X)
+                        <= self.memory_budget)):
+                X = X.materialize()
         return make_oracle(X, y, groups=groups, method=self.method,
                            engine=self.engine,
                            pair_block=self.pair_block, mesh=self.mesh,

@@ -1,7 +1,8 @@
-from .rowblocks import (CSRBlockSource, DenseBlockSource,  # noqa: F401
-                        MemmapBlockSource, RowBlock, RowBlockSource,
-                        as_row_block_source, projected_resident_gib)
+from .rowblocks import (BlockStore, CSRBlockSource,  # noqa: F401
+                        DenseBlockSource, MemmapBlockSource, RowBlock,
+                        RowBlockSource, as_row_block_source,
+                        projected_resident_gib)
 from .sparse import CSRMatrix, random_tfidf  # noqa: F401
-from .synthetic import (RankingData, cadata_like, grouped_queries,  # noqa: F401
-                        ordinal_like, reuters_like)
+from .synthetic import (RankingData, cadata_drift, cadata_like,  # noqa: F401
+                        grouped_queries, ordinal_like, reuters_like)
 from .tokens import RewardPipeline, TokenPipeline, TokenPipelineConfig  # noqa: F401

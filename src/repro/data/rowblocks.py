@@ -9,7 +9,7 @@ the matching y/group slices) are produced on demand, and the streaming
 oracle (`core.oracle.StreamingOracle`) consumes them in two chunked passes
 with peak memory O(block·n + m) regardless of m.
 
-Three implementations cover the storage layouts the oracles accept:
+Four implementations cover the storage layouts the oracles accept:
 
   `DenseBlockSource`   in-RAM row-major ndarray (blocks are views)
   `CSRBlockSource`     `repro.data.sparse.CSRMatrix` or scipy CSR
@@ -17,6 +17,11 @@ Three implementations cover the storage layouts the oracles accept:
   `MemmapBlockSource`  `np.memmap` over a file on disk — the genuinely
                        out-of-core case: only the touched blocks are paged
                        in, so m is bounded by disk, not RAM
+  `BlockStore`         a mutable ordered collection of the above: append/
+                       retire whole row blocks under stable ids with the
+                       aligned y/groups slices kept alongside — the data
+                       substrate of incremental retraining
+                       (`core.incremental`, DESIGN.md §11)
 
 `as_row_block_source` dispatches on the input type; `projected_resident_gib`
 is the memory model behind `make_oracle`'s fused-vs-streaming budget
@@ -103,7 +108,8 @@ def resolve_prefetch(source: 'RowBlockSource', prefetch) -> int:
     """Effective read-ahead depth for `source`.
 
     Explicit integers pass through (validated); None/'auto' resolves by
-    layout: 1 (double buffering) for the disk-backed memmap source, whose
+    layout: 1 (double buffering) when the source is disk-backed (the
+    memmap source, or a `BlockStore` holding any memmap member), whose
     per-window file reads are the latency worth hiding behind compute;
     0 (synchronous) for the in-RAM dense/CSR sources, where a fetch is a
     view or an O(nnz_block) slice and the thread handoff can only add
@@ -113,7 +119,7 @@ def resolve_prefetch(source: 'RowBlockSource', prefetch) -> int:
     """
     depth = _validate_prefetch(prefetch)
     if depth is None:
-        depth = 1 if source.kind == 'memmap' else 0
+        depth = 1 if source.disk_backed else 0
     return depth
 
 
@@ -316,6 +322,13 @@ class RowBlockSource:
         (4·n). Sparse sources override with their layout-native cost."""
         return 4 * self.n
 
+    @property
+    def disk_backed(self) -> bool:
+        """True when block fetches touch disk (drives `resolve_prefetch`'s
+        auto double-buffering). Base rule: only the memmap layout; the
+        composite `BlockStore` overrides with any-member-disk-backed."""
+        return self.kind == 'memmap'
+
 
 class DenseBlockSource(RowBlockSource):
     """Row-major in-RAM ndarray; blocks are cheap row views."""
@@ -488,6 +501,246 @@ class CSRBlockSource(RowBlockSource):
         return max(1, int(12 * avg_nnz))
 
 
+class _StoreMember(NamedTuple):
+    """One retained block of a `BlockStore`: stable id, the wrapped
+    source holding its rows, and the aligned per-row arrays."""
+
+    bid: int
+    source: RowBlockSource
+    y: np.ndarray
+    groups: 'np.ndarray | None'
+
+
+class BlockStore(RowBlockSource):
+    """Mutable ordered collection of row blocks with aligned labels.
+
+    The data substrate of incremental retraining (`core.incremental`,
+    DESIGN.md §11): training data arrives and leaves as whole blocks —
+    `append(X, y, groups)` assigns a stable integer id (monotone counter,
+    never reused), `retire(bid)` removes a block — while the store stays
+    a full `RowBlockSource`, so every existing consumer (streaming
+    oracle, prefetched iteration, budget sizing) reads the concatenation
+    of the retained blocks in insertion order without copying them into
+    one array. `y` / `groups` return the concatenated aligned slices in
+    the same order, so (store, store.y, store.groups) is always a
+    consistent training set.
+
+    Group ids are global: a group id reused across two blocks means one
+    query whose documents span blocks. That is legal here and for the
+    oracles, but the incremental plane ledger cannot attribute such
+    cross-block pairs to either block — its revalidated planes drop them
+    (valid but looser bounds; see DESIGN.md §11). Keep groups within
+    blocks when refit tightness matters.
+
+    Members keep their native layouts (dense / CSR / memmap) and their
+    layout-native per-block kernels; a block or payload spanning a member
+    boundary is assembled from the members it touches. `materialize()`
+    produces the single-X form the fused oracles need: a merged
+    `CSRMatrix` when every member is CSR (O(nnz)), else dense f32.
+    """
+
+    kind = 'blocks'
+
+    def __init__(self, n: 'int | None' = None):
+        self._n = None if n is None else int(n)
+        self._members: dict[int, _StoreMember] = {}
+        self._next_id = 0
+
+    # -- mutation ---------------------------------------------------------
+
+    def append(self, X, y, groups=None) -> int:
+        """Add a block; returns its stable id. X is wrapped per layout
+        (`as_row_block_source`); y (and groups, if the store uses groups)
+        must align with X's rows. Grouping is all-or-none across the
+        whole store — mixing grouped and ungrouped blocks would silently
+        change pair semantics between refits."""
+        src = as_row_block_source(X)
+        if isinstance(src, BlockStore):
+            raise ValueError('BlockStore members must be leaf sources; '
+                             'nesting a BlockStore is not supported')
+        if self._n is not None and src.n != self._n:
+            raise ValueError(f'appended block has {src.n} features but the '
+                             f'store holds {self._n}-feature rows')
+        y = np.asarray(y)
+        if y.shape != (src.m,):
+            raise ValueError(f'y has shape {y.shape} but the appended '
+                             f'block has {src.m} rows')
+        if groups is not None:
+            groups = np.asarray(groups)
+            if groups.shape != (src.m,):
+                raise ValueError(f'groups has shape {groups.shape} but the '
+                                 f'appended block has {src.m} rows')
+        if self._members:
+            grouped = next(iter(
+                self._members.values())).groups is not None
+            if grouped != (groups is not None):
+                raise ValueError(
+                    'grouping is all-or-none across a BlockStore: the '
+                    f'store holds {"grouped" if grouped else "ungrouped"} '
+                    'blocks but the appended block is '
+                    f'{"grouped" if groups is not None else "ungrouped"}')
+        bid = self._next_id
+        self._next_id += 1
+        self._members[bid] = _StoreMember(bid, src, y, groups)
+        if self._n is None:
+            self._n = src.n
+        return bid
+
+    def retire(self, bid: int):
+        """Remove block `bid`; its rows leave `y`/`groups`/`block()` and
+        its id is never reused."""
+        if bid not in self._members:
+            raise ValueError(f'no block {bid!r} in the store; retained '
+                             f'ids: {sorted(self._members)}')
+        del self._members[bid]
+
+    # -- inventory --------------------------------------------------------
+
+    @property
+    def block_ids(self) -> tuple:
+        """Retained block ids, in concatenation (insertion) order."""
+        return tuple(self._members)
+
+    def member(self, bid: int) -> _StoreMember:
+        if bid not in self._members:
+            raise ValueError(f'no block {bid!r} in the store; retained '
+                             f'ids: {sorted(self._members)}')
+        return self._members[bid]
+
+    def member_range(self, bid: int) -> tuple[int, int]:
+        """Row span [lo, hi) of block `bid` in the current concatenated
+        order (shifts when earlier blocks are retired)."""
+        lo = 0
+        for mem in self._members.values():
+            if mem.bid == bid:
+                return lo, lo + mem.source.m
+            lo += mem.source.m
+        raise ValueError(f'no block {bid!r} in the store; retained '
+                         f'ids: {sorted(self._members)}')
+
+    @property
+    def m(self) -> int:
+        return sum(mem.source.m for mem in self._members.values())
+
+    @property
+    def n(self) -> int:
+        return 0 if self._n is None else self._n
+
+    @property
+    def y(self) -> np.ndarray:
+        """Labels of the retained blocks, concatenated in block order."""
+        parts = [mem.y for mem in self._members.values()]
+        return np.concatenate(parts) if parts else np.zeros(0)
+
+    @property
+    def groups(self) -> 'np.ndarray | None':
+        """Group ids concatenated in block order; None for an ungrouped
+        store."""
+        parts = [mem.groups for mem in self._members.values()]
+        if not parts or parts[0] is None:
+            return None
+        return np.concatenate(parts)
+
+    # -- RowBlockSource surface -------------------------------------------
+
+    def _spans(self):
+        lo = 0
+        for mem in self._members.values():
+            yield lo, mem
+            lo += mem.source.m
+
+    def _pieces(self, lo: int, hi: int):
+        """(member, member-local lo, member-local hi) for the members a
+        global row range touches."""
+        for mlo, mem in self._spans():
+            mhi = mlo + mem.source.m
+            a, b = max(lo, mlo), min(hi, mhi)
+            if a < b:
+                yield mem, a - mlo, b - mlo
+
+    def block(self, lo: int, hi: int) -> np.ndarray:
+        lo, hi = self._check_range(lo, hi)
+        parts = [mem.source.block(a, b) for mem, a, b in
+                 self._pieces(lo, hi)]
+        if not parts:
+            return np.zeros((0, self.n), np.float32)
+        return parts[0] if len(parts) == 1 else np.concatenate(parts)
+
+    def matvec_block(self, lo: int, hi: int, w) -> np.ndarray:
+        lo, hi = self._check_range(lo, hi)
+        parts = [mem.source.matvec_block(a, b, w) for mem, a, b in
+                 self._pieces(lo, hi)]
+        if not parts:
+            return np.zeros(0)
+        return parts[0] if len(parts) == 1 else np.concatenate(parts)
+
+    def rmatvec_block(self, lo: int, hi: int, v) -> np.ndarray:
+        lo, hi = self._check_range(lo, hi)
+        v = np.asarray(v, np.float64)
+        # Pieces cover [lo, hi) contiguously in order, so a running
+        # offset into v addresses each member's slice.
+        out, at = np.zeros(self.n), 0
+        for mem, a, b in self._pieces(lo, hi):
+            out += mem.source.rmatvec_block(a, b, v[at:at + (b - a)])
+            at += b - a
+        return out
+
+    def _payload(self, lo: int, hi: int):
+        # Composite payload: each touched member's layout-native slab,
+        # tagged with its source so the payload kernels stay native
+        # (CSR members keep O(nnz_block) host products).
+        return [(mem.source, mem.source._payload(a, b))
+                for mem, a, b in self._pieces(lo, hi)]
+
+    def _payload_matvec(self, payload, w) -> np.ndarray:
+        parts = [src._payload_matvec(p, w) for src, p in payload]
+        if not parts:
+            return np.zeros(0)
+        return parts[0] if len(parts) == 1 else np.concatenate(parts)
+
+    def _payload_rmatvec(self, payload, v) -> np.ndarray:
+        v = np.asarray(v, np.float64)
+        out, at = np.zeros(self.n), 0
+        for src, p in payload:
+            nrows = p.shape[0]
+            out += src._payload_rmatvec(p, v[at:at + nrows])
+            at += nrows
+        return out
+
+    def materialize(self):
+        """The single-X form the fused oracle paths need: a merged
+        `CSRMatrix` when every member is CSR (O(nnz) concatenation),
+        else a dense f32 (m, n) array."""
+        if not self._members:
+            raise ValueError('cannot materialize an empty BlockStore')
+        srcs = [mem.source for mem in self._members.values()]
+        if all(isinstance(s, CSRBlockSource) for s in srcs):
+            mats = [s._X for s in srcs]
+            indptrs = [np.asarray(mats[0].indptr)]
+            off = int(indptrs[0][-1])
+            for mm in mats[1:]:
+                ip = np.asarray(mm.indptr)
+                indptrs.append(ip[1:] + off)
+                off += int(ip[-1])
+            return CSRMatrix(
+                np.concatenate([np.asarray(mm.data) for mm in mats]),
+                np.concatenate([np.asarray(mm.indices) for mm in mats]),
+                np.concatenate(indptrs), (self.m, self.n))
+        return self.block(0, self.m)
+
+    def row_bytes(self) -> int:
+        if not self._members:
+            return 4 * self.n
+        total = sum(mem.source.row_bytes() * mem.source.m
+                    for mem in self._members.values())
+        return max(1, total // self.m)
+
+    @property
+    def disk_backed(self) -> bool:
+        return any(mem.source.disk_backed
+                   for mem in self._members.values())
+
+
 def _is_csr_like(X) -> bool:
     return (hasattr(X, 'data') and hasattr(X, 'indices')
             and hasattr(X, 'indptr'))
@@ -513,6 +766,9 @@ def projected_resident_gib(X) -> float:
     m·n f32; CSR costs its data+indices (+ the row vector when ragged).
     The O(m) score/label vectors are charged to both paths and omitted.
     """
+    if isinstance(X, BlockStore):
+        return sum(projected_resident_gib(mem.source)
+                   for mem in X._members.values())
     if isinstance(X, CSRBlockSource):
         X = X._X
     elif isinstance(X, RowBlockSource):

@@ -56,6 +56,38 @@ def cadata_like(m: int = 16000, m_test: int = 4000, seed: int = 0,
     return RankingData(X[:m], y[:m], X[m:], y[m:], 'cadata-like')
 
 
+def cadata_drift(m: int = 16000, m_delta: int = 1600, shift: float = 0.5,
+                 seed: int = 0, noise: float = 0.1
+                 ) -> 'tuple[RankingData, np.ndarray, np.ndarray]':
+    """Base cadata-like data plus a covariate-shifted delta block — the
+    synthetic distribution shift behind the incremental-retraining drift
+    benchmark (`benchmarks/incremental.py`, EXPERIMENTS.md §Incremental).
+
+    Returns `(base, X_delta, y_delta)`: `base` is `cadata_like(m, ...)`
+    unchanged (bit-identical for equal (m, seed, noise), so appending the
+    delta to a model fitted on `base` is a true continuation), and the
+    delta block's features are drawn from the same process with every
+    covariate mean shifted by `shift` standard deviations — fresh traffic
+    whose feature distribution drifted while the utility function stayed
+    fixed. Same utility surface => the refit moves the optimum, not the
+    task.
+    """
+    m_test = 4000
+    base = cadata_like(m, m_test, seed=seed, noise=noise)
+    # Recover the base's utility weights by replaying its stream: w is
+    # the draw right after the (total, 8) feature draw.
+    base_rng = np.random.default_rng(seed)
+    base_rng.normal(size=(m + m_test, 8))
+    w = base_rng.normal(size=8)
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 0xD41F]))
+    X_delta = rng.normal(size=(m_delta, 8)) + shift
+    y_delta = (X_delta @ w
+               + 0.5 * np.sin(2.0 * X_delta[:, 0]) * X_delta[:, 1]
+               + 0.3 * X_delta[:, 2] ** 2
+               + noise * rng.normal(size=m_delta))
+    return base, X_delta, y_delta
+
+
 def reuters_like(m: int = 64000, m_test: int = 20000, n: int = 49152,
                  nnz_per_row: int = 50, seed: int = 0) -> RankingData:
     """Sparse tf-idf + similarity-to-target utilities — the Reuters stand-in.

@@ -84,6 +84,16 @@ class MicroBatcher:
         worst-case queueing latency added at low arrival rates.
       max_queue: bound on queued-but-unflushed requests (default 256);
         `submit` blocks while the queue is full (backpressure).
+      adaptive_delay: when True, the flush window tightens at low
+        arrival rates: an EWMA of inter-arrival gaps (updated per
+        submit, samples clamped to 4x the window so idle spells recover
+        fast) shrinks the effective window to
+        max(0, max_delay - gap_ewma). Sparse traffic — gaps at or past
+        the window, where waiting cannot coalesce anything — flushes
+        immediately and recovers the per-request p50 the fixed window
+        taxes; dense traffic (gaps << window) keeps the full coalescing
+        window and its throughput amortization (EXPERIMENTS §Serving,
+        the low-rate rows). Default False: the fixed-window behavior.
 
     `submit(X, k=None)` returns a `ServeFuture`; `scores`/`top_k` are
     blocking conveniences over it. `close()` flushes everything already
@@ -92,7 +102,8 @@ class MicroBatcher:
     """
 
     def __init__(self, scorer: Scorer, *, max_batch: int = 32,
-                 max_delay_ms: float = 2.0, max_queue: int = 256):
+                 max_delay_ms: float = 2.0, max_queue: int = 256,
+                 adaptive_delay: bool = False):
         if not (isinstance(max_batch, int) and max_batch >= 1):
             raise ValueError(f'max_batch must be a positive int; got '
                              f'{max_batch!r}')
@@ -107,6 +118,9 @@ class MicroBatcher:
         self._max_batch = max_batch
         self._max_delay = float(max_delay_ms) / 1e3
         self._max_queue = max_queue
+        self._adaptive = bool(adaptive_delay)
+        self._gap_ewma: 'float | None' = None   # seconds between arrivals
+        self._last_arrival: 'float | None' = None
         self._cond = threading.Condition()
         self._queue: 'deque[tuple[_Pending, float]]' = deque()
         self._closed = False
@@ -130,7 +144,18 @@ class MicroBatcher:
                 self._cond.wait()
             if self._closed:
                 raise RuntimeError('MicroBatcher is closed')
-            self._queue.append((req, time.monotonic()))
+            now = time.monotonic()
+            if self._adaptive:
+                if self._last_arrival is not None:
+                    # Clamp the sample so one idle spell doesn't poison
+                    # the estimate for many subsequent arrivals — 4x the
+                    # window already means "flush immediately".
+                    gap = min(now - self._last_arrival,
+                              4.0 * self._max_delay)
+                    self._gap_ewma = (gap if self._gap_ewma is None else
+                                      0.7 * self._gap_ewma + 0.3 * gap)
+                self._last_arrival = now
+            self._queue.append((req, now))
             self.n_requests += 1
             self._cond.notify_all()
         return ServeFuture(req)
@@ -150,6 +175,20 @@ class MicroBatcher:
     def mean_batch(self) -> float:
         """Mean coalesced launch size so far (1.0 = no amortization)."""
         return self.n_requests / self.n_batches if self.n_batches else 0.0
+
+    def _effective_delay(self) -> float:
+        """The flush window in effect right now (seconds). Fixed-window
+        batchers return max_delay; adaptive ones shrink it by the
+        observed inter-arrival EWMA. Call under `self._cond`."""
+        if not self._adaptive or self._gap_ewma is None:
+            return self._max_delay
+        return max(0.0, self._max_delay - self._gap_ewma)
+
+    @property
+    def effective_delay_ms(self) -> float:
+        """Current effective coalescing window, for introspection."""
+        with self._cond:
+            return self._effective_delay() * 1e3
 
     def close(self):
         """Flush already-queued requests, then stop the worker."""
@@ -175,10 +214,12 @@ class MicroBatcher:
                     return      # closed and drained
                 # Coalescing window: the OLDEST request's enqueue time
                 # anchors the deadline, so a request never waits more
-                # than max_delay regardless of when the worker freed up.
-                deadline = self._queue[0][1] + self._max_delay
+                # than the window regardless of when the worker freed
+                # up. Recomputed each wait turn: adaptive batchers can
+                # tighten (or relax) the window as arrivals come in.
                 while (len(self._queue) < self._max_batch
                        and not self._closed):
+                    deadline = self._queue[0][1] + self._effective_delay()
                     left = deadline - time.monotonic()
                     if left <= 0:
                         break

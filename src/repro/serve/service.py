@@ -33,6 +33,11 @@ class RankingService:
         baseline the benchmark compares against.
       max_batch / max_delay_ms / max_queue: `MicroBatcher` knobs
         (defaults 32 / 2.0 / 256).
+      adaptive_delay: `MicroBatcher` knob (default False) — tighten the
+        coalescing window at low arrival rates (an EWMA of inter-arrival
+        gaps shrinks the effective flush delay), recovering the
+        per-request p50 where there is nothing to coalesce while keeping
+        the full window under dense traffic.
       min_bucket / donate: `Scorer` knobs (defaults 64 / 'auto').
 
     `scores`/`top_k` block for their result (through the queue when
@@ -44,7 +49,8 @@ class RankingService:
 
     def __init__(self, weights, *, micro_batch: bool = True,
                  max_batch: int = 32, max_delay_ms: float = 2.0,
-                 max_queue: int = 256, min_bucket: int = MIN_BUCKET,
+                 max_queue: int = 256, adaptive_delay: bool = False,
+                 min_bucket: int = MIN_BUCKET,
                  donate: 'bool | str' = 'auto'):
         self.store = (weights if isinstance(weights, WeightStore)
                       else WeightStore(weights))
@@ -52,7 +58,8 @@ class RankingService:
                              donate=donate)
         self.batcher = (MicroBatcher(self.scorer, max_batch=max_batch,
                                      max_delay_ms=max_delay_ms,
-                                     max_queue=max_queue)
+                                     max_queue=max_queue,
+                                     adaptive_delay=adaptive_delay)
                         if micro_batch else None)
 
     # -- serving -----------------------------------------------------------

@@ -327,4 +327,95 @@ def test_masked_qp_vmaps_per_lambda():
 
 
 def test_path_modes_constant():
-    assert PATH_MODES == ('vmap', 'sequential', 'auto')
+    assert PATH_MODES == ('vmap', 'sequential', 'hybrid', 'auto')
+
+
+# ------------------------------------------------------------ hybrid mode
+
+
+def test_hybrid_prefix_matches_sequential_exactly():
+    """Phase one IS the sequential sweep: the first `hybrid_prefix`
+    results must be bit-compatible with mode='sequential' (same code
+    path, same warm chain)."""
+    X, y, _ = _dataset()
+    orc = O.make_oracle(X, y, method='tree')
+    rh = bmrm_path(orc, LAMS, mode='hybrid', hybrid_prefix=2, eps=1e-3,
+                   max_iter=400)
+    rs = bmrm_path(orc, LAMS, mode='sequential', eps=1e-3, max_iter=400)
+    assert len(rh) == len(LAMS)
+    for a, b in zip(rh[:2], rs[:2]):
+        assert a.stats.iterations == b.stats.iterations
+        assert a.stats.obj_best == pytest.approx(b.stats.obj_best, rel=1e-6)
+        np.testing.assert_array_equal(a.w, b.w)
+
+
+def test_hybrid_tail_objectives_match_and_warm_start_helps():
+    """Phase two solves the remaining lambdas to the same objectives as
+    the cold batched sweep, in no more (lockstep) iterations — the
+    broadcast prefix planes are a valid head start."""
+    X, y, _ = _dataset()
+    orc = O.make_oracle(X, y, method='tree')
+    rh = bmrm_path(orc, LAMS, mode='hybrid', hybrid_prefix=2, eps=1e-3,
+                   max_iter=400)
+    rv = bmrm_path(orc, LAMS, mode='vmap', eps=1e-3, max_iter=400)
+    for a, b in zip(rh, rv):
+        assert a.stats.converged
+        rel = abs(a.stats.obj_best - b.stats.obj_best) / abs(b.stats.obj_best)
+        assert rel < 1e-3
+    assert rh[2].stats.solver == 'vmap'
+    assert rh[2].stats.iterations <= rv[2].stats.iterations
+
+
+def test_hybrid_prefix_covering_grid_degenerates_to_sequential():
+    X, y, _ = _dataset()
+    orc = O.make_oracle(X, y, method='tree')
+    rh = bmrm_path(orc, LAMS, mode='hybrid', hybrid_prefix=10, eps=1e-3,
+                   max_iter=400)
+    rs = bmrm_path(orc, LAMS, mode='sequential', eps=1e-3, max_iter=400)
+    for a, b in zip(rh, rs):
+        assert a.stats.solver == 'device'
+        assert a.stats.iterations == b.stats.iterations
+        np.testing.assert_array_equal(a.w, b.w)
+
+
+def test_hybrid_validation():
+    X, y, _ = _dataset()
+    orc = O.make_oracle(X, y, method='tree')
+    stream = O.make_oracle(X, y, method='stream', stream_block=64)
+    with pytest.raises(ValueError, match='hybrid'):
+        bmrm_path(stream, LAMS, mode='hybrid')          # not batchable
+    with pytest.raises(ValueError, match='host'):
+        bmrm_path(orc, LAMS, mode='hybrid', solver='host')
+    for bad in (0, -1, 1.5, True):
+        with pytest.raises(ValueError, match='hybrid_prefix'):
+            bmrm_path(orc, LAMS, mode='hybrid', hybrid_prefix=bad)
+
+
+def test_hybrid_over_budget_finishes_sequentially():
+    """An explicit memory budget outranks the batched phase: the tail
+    falls back to the sequential-warm sweep with a loud warning, results
+    staying parity-close."""
+    X, y, _ = _dataset()
+    orc = O.make_oracle(X, y, method='tree')
+    with pytest.warns(RuntimeWarning, match='memory_budget'):
+        rh = bmrm_path(orc, LAMS, mode='hybrid', hybrid_prefix=1,
+                       eps=1e-3, max_iter=400, memory_budget=1e-9)
+    rs = bmrm_path(orc, LAMS, mode='sequential', eps=1e-3, max_iter=400)
+    for a, b in zip(rh, rs):
+        assert a.stats.solver == 'device'
+        assert a.stats.obj_best == pytest.approx(b.stats.obj_best, rel=1e-6)
+
+
+def test_hybrid_through_estimator():
+    X, y, _ = _dataset()
+    svm = RankSVM(eps=1e-3, method='tree', max_iter=400)
+    pts = svm.path(X, y, LAMS, mode='hybrid', hybrid_prefix=1)
+    assert [p.lam for p in pts] == LAMS
+    assert all(p.report.converged for p in pts)
+    assert pts[-1].report.solver == 'vmap'
+    assert svm.lam == LAMS[-1]
+    np.testing.assert_allclose(svm.w_, pts[-1].w)
+    # refit continues from a hybrid sweep too: path() records the warm
+    # incremental handle off the last lambda's batched state slice
+    assert svm.incremental_ is not None
+    assert svm.incremental_.ledger is not None

@@ -465,3 +465,83 @@ def test_scorer_thread_safety_direct():
     for t in threads:
         t.join(60.0)
     assert not errors
+
+
+# -- adaptive coalescing window ----------------------------------------------
+
+
+def test_fixed_window_is_the_default():
+    """Without adaptive_delay the effective window never moves off
+    max_delay, however sparse the arrivals."""
+    _, w = _problem(1)
+    X, _ = _problem(3)
+    with MicroBatcher(Scorer(w), max_delay_ms=20.0) as mb:
+        assert mb.effective_delay_ms == 20.0
+        for _ in range(3):
+            mb.scores(X)
+            time.sleep(0.05)
+        assert mb.effective_delay_ms == 20.0
+
+
+def test_adaptive_window_collapses_under_sparse_traffic():
+    """Arrival gaps past the window mean waiting cannot coalesce
+    anything: the EWMA drives the effective window to zero (immediate
+    flush, per-request p50 recovered)."""
+    _, w = _problem(1)
+    X, _ = _problem(3)
+    with MicroBatcher(Scorer(w), max_delay_ms=20.0,
+                      adaptive_delay=True) as mb:
+        assert mb.effective_delay_ms == 20.0    # no samples yet
+        for _ in range(4):
+            mb.scores(X)
+            time.sleep(0.08)                    # gap = 4x the window
+        assert mb.effective_delay_ms == 0.0
+
+
+def test_adaptive_window_stays_open_under_dense_traffic():
+    """Back-to-back arrivals (gaps << window) must keep (nearly) the
+    whole coalescing window — dense traffic is what the window is FOR."""
+    _, w = _problem(1)
+    sc = Scorer(w)
+    X, _ = _problem(3)
+    with MicroBatcher(sc, max_batch=64, max_delay_ms=50.0,
+                      adaptive_delay=True) as mb:
+        futures = [mb.submit(X) for _ in range(30)]     # one tight burst
+        eff = mb.effective_delay_ms
+        for f in futures:
+            f.result(30.0)
+        assert eff > 0.8 * 50.0
+        assert mb.mean_batch > 1.0              # the burst still coalesced
+
+
+def test_adaptive_window_recovers_after_idle_spell():
+    """The 4x-window clamp bounds how far one long idle gap can push the
+    estimate: a dense burst after an idle spell reopens the window within
+    a handful of arrivals instead of tens."""
+    _, w = _problem(1)
+    X, _ = _problem(2)
+    with MicroBatcher(Scorer(w), max_delay_ms=20.0,
+                      adaptive_delay=True) as mb:
+        mb.scores(X)
+        time.sleep(0.5)                         # idle; clamped to 80 ms
+        mb.scores(X)
+        assert mb.effective_delay_ms == 0.0
+        futures = [mb.submit(X) for _ in range(12)]     # dense burst
+        eff = mb.effective_delay_ms
+        for f in futures:
+            f.result(30.0)
+        assert eff > 0.5 * 20.0
+
+
+def test_adaptive_service_serves_correctly():
+    """End to end through RankingService: adaptive coalescing changes
+    latency, never results."""
+    X, w = _problem(40, seed=21)
+    with RankingService(w, adaptive_delay=True, max_delay_ms=5.0) as svc:
+        np.testing.assert_allclose(svc.scores(X), X @ w, rtol=1e-5,
+                                   atol=1e-5)
+        vals, idx = svc.top_k(X, 7)
+        s = svc.scores(X)
+        ref = np.argsort(-s, kind='stable')[:7]
+        np.testing.assert_array_equal(idx, ref)
+        assert svc.batcher.effective_delay_ms <= 5.0

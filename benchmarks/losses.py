@@ -1,0 +1,74 @@
+"""Per-iteration oracle cost of the loss axis: toppush / poshinge vs hinge.
+
+What the numbers should show (DESIGN.md §12): all three losses keep the
+linearithmic per-iteration shape of Theorem 2 —
+
+  * 'hinge'    one counting pass + two matvecs (the baseline);
+  * 'toppush'  ~the same or slightly CHEAPER: one lexsort + two
+    associative scans, no frequency-vector queries at all;
+  * 'poshinge' ~the same or slightly more: the weighted counting pass
+    carries one extra f32 accumulator through the merge tree.
+
+So the honest expectation is ratios near 1x across the m sweep — the
+loss axis is free at the oracle level; anything drifting super-linear
+would mean a loss broke the O(m log m) structure. The CSV records
+per-call medians of the FUSED oracle step (matvec -> counts -> loss ->
+subgradient, one host round-trip included) on warmed jit caches.
+
+    PYTHONPATH=src python -m benchmarks.losses [--full|--smoke]
+
+--smoke is the CI fast-lane entry: one tiny m, one repeat, asserts every
+loss produces finite (loss, subgradient) through the fused step.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.oracle import LOSSES, make_oracle
+
+from .common import Reporter, timeit
+
+SIZES = (1_000, 10_000)
+SIZES_FULL = (1_000, 10_000, 100_000)
+N_FEATURES = 32
+N_GROUPS = 50
+
+
+def _problem(m: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((m, N_FEATURES)).astype(np.float32)
+    y = rng.integers(0, 5, m).astype(np.float32)
+    g = np.sort(rng.integers(0, N_GROUPS, m)).astype(np.int32)
+    w = rng.standard_normal(N_FEATURES).astype(np.float32)
+    return X, y, g, w
+
+
+def _row(rep, m: int, repeats: int, baseline: dict):
+    X, y, g, w = _problem(m)
+    for loss in LOSSES:
+        oracle = make_oracle(X, y, groups=g, method='tree', loss=loss)
+        val, a = oracle.loss_and_subgrad(w)     # warm the jit cache
+        assert np.isfinite(float(val)) and np.all(np.isfinite(a)), loss
+        sec = timeit(lambda: oracle.loss_and_subgrad(w), repeats=repeats)
+        if loss == 'hinge':
+            baseline[m] = sec
+        rep.row(m, loss, oracle.name, format(float(val), '.4e'),
+                round(sec * 1e3, 4),
+                round(sec / baseline[m], 3))
+
+
+def main(full: bool = False, smoke: bool = False):
+    rep = Reporter('losses', ['m', 'loss', 'oracle', 'R_emp',
+                              'step_ms', 'vs_hinge'])
+    sizes = (400,) if smoke else (SIZES_FULL if full else SIZES)
+    repeats = 1 if smoke else 5
+    baseline: dict = {}
+    for m in sizes:
+        _row(rep, m, repeats, baseline)
+    return rep
+
+
+if __name__ == '__main__':
+    import sys
+    main(full='--full' in sys.argv, smoke='--smoke' in sys.argv).save()

@@ -13,8 +13,9 @@ import time
 
 from . import (fig1_iteration_cost, fig2_runtimes, fig3_memory,
                fig4_test_error, fig5_crossover, fig6_rlevels,
-               incremental, path_sweep, roofline_table, scaling_loglog,
-               serving_latency, solver_overhead, streaming_oracle)
+               incremental, losses, path_sweep, roofline_table,
+               scaling_loglog, serving_latency, solver_overhead,
+               streaming_oracle)
 
 ALL = {
     'fig1': fig1_iteration_cost,
@@ -30,6 +31,7 @@ ALL = {
     'serving': serving_latency,
     'path': path_sweep,
     'incremental': incremental,
+    'losses': losses,
 }
 
 

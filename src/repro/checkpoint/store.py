@@ -64,7 +64,8 @@ def _step_dir(root: str, step: int) -> str:
 
 
 def save(root: str, step: int, tree, *, n_shards: int = 1,
-         shard_filter=None, compression: str = 'auto') -> str:
+         shard_filter=None, compression: str = 'auto',
+         meta_extra: dict | None = None) -> str:
     """Write `tree` (pytree of arrays) as checkpoint `step` under `root`.
 
     Args:
@@ -76,8 +77,20 @@ def save(root: str, step: int, tree, *, n_shards: int = 1,
       compression: 'zstd' | 'none' | 'auto' ('zstd' when the optional
         zstandard package is installed, else 'none'). 'zstd' without the
         package raises a clear ModuleNotFoundError.
+      meta_extra: optional dict of JSON-serializable entries merged into
+        meta.json (e.g. {'loss': 'toppush'} so a resumed training run
+        re-validates its objective against the checkpoint's — `restore`
+        hands the merged meta back). Keys used by the store itself
+        ('step', 'n_shards', 'compression', 'leaves') are reserved and
+        rejected rather than silently clobbered.
     Returns the checkpoint directory.
     """
+    if meta_extra:
+        clash = {'step', 'n_shards', 'compression',
+                 'leaves'} & set(meta_extra)
+        if clash:
+            raise ValueError(f'meta_extra may not override reserved meta '
+                             f'keys {sorted(clash)}')
     if compression == 'auto':
         compression = 'zstd' if zstandard is not None else 'none'
     if compression not in ('zstd', 'none'):
@@ -92,6 +105,8 @@ def save(root: str, step: int, tree, *, n_shards: int = 1,
     arrays = [np.asarray(jax.device_get(x)) for x in leaves]
     meta = {'step': int(step), 'n_shards': int(n_shards),
             'compression': compression, 'leaves': []}
+    if meta_extra:
+        meta.update(meta_extra)
 
     shards = [[] for _ in range(n_shards)]   # per-shard list of chunk records
     for li, (p, a) in enumerate(zip(paths, arrays)):

@@ -7,9 +7,12 @@
 #  - ranksvm:   TreeRSVM / PairRSVM estimators (thin oracle selectors)
 from . import (counts, incremental, joachims, oracle, ref,  # noqa: F401
                rank_loss, qp, bmrm, ranksvm)
-from .incremental import (IncrementalFit, PlaneLedger,  # noqa: F401
-                          RefitReport, block_partials, refit_chunk_step)
-from .oracle import (GroupedOracle, PairwiseOracle, RankOracle,  # noqa: F401
-                     ShardedOracle, StreamingOracle, TreeOracle, make_oracle)
-from .rank_loss import pairwise_hinge_loss, ranking_error  # noqa: F401
+from .incremental import (IncrementalFit, LEDGER_LOSSES,  # noqa: F401
+                          PlaneLedger, RefitReport, block_partials,
+                          refit_chunk_step)
+from .oracle import (LOSSES, GroupedOracle, PairwiseOracle,  # noqa: F401
+                     RankOracle, ShardedOracle, StreamingOracle,
+                     TopPushOracle, TreeOracle, empirical_risk, make_oracle)
+from .rank_loss import (pairwise_hinge_loss, poshinge_weights,  # noqa: F401
+                        position_weighted_error, ranking_error, top1_error)
 from .ranksvm import RankSVM  # noqa: F401

@@ -83,6 +83,78 @@ def _tree_levels(y_pad: jnp.ndarray) -> dict:
     return levels
 
 
+def _tree_levels_weighted(y_pad: jnp.ndarray, v_pad: jnp.ndarray):
+    """`_tree_levels` plus per-level inclusive prefix sums of the weights
+    in each block's sorted-y order — the ONE extra weighted prefix-sum the
+    position-weighted hinge needs (DESIGN.md §12): a weighted rank query
+    becomes `block total - prefix sum at the binary-search position`, so
+    the query structure of `_prefix_query` carries over unchanged.
+
+    The sorted y values are identical to `_tree_levels` (same per-block
+    sort keys), so unweighted queries still run against these levels.
+    """
+    mpad = y_pad.shape[0]
+    nlev = mpad.bit_length() - 1
+    levels, wsums = {}, {}
+    for b in range(1, nlev + 1):
+        block = 1 << b
+        y2 = y_pad.reshape(mpad // block, block)
+        order = jnp.argsort(y2, axis=1)
+        v2 = jnp.take_along_axis(v_pad.reshape(mpad // block, block),
+                                 order, axis=1)
+        levels[b] = jnp.take_along_axis(y2, order, axis=1).reshape(-1)
+        wsums[b] = jnp.cumsum(v2, axis=1).reshape(-1)
+    return levels, wsums
+
+
+def _prefix_weighted_gt(levels: dict, wsums: dict, y_pad: jnp.ndarray,
+                        v_pad: jnp.ndarray, prefix_len: jnp.ndarray,
+                        thresholds: jnp.ndarray) -> jnp.ndarray:
+    """Weighted 'gt' prefix query: for each query i,
+        sum of v_seq[k] over {k < prefix_len[i] : y_seq[k] > thresholds[i]}
+    against levels/wsums from `_tree_levels_weighted`. Same aligned-block
+    decomposition as `_prefix_query`; each block contributes its total
+    weight minus the weight prefix at the `count <= t` search position."""
+    mpad = y_pad.shape[0]
+    nlev = mpad.bit_length() - 1
+    mmax = mpad - 1
+    total = jnp.zeros(thresholds.shape, jnp.float32)
+    for b in range(nlev + 1):
+        block = 1 << b
+        bit = (prefix_len >> b) & 1
+        base = (prefix_len >> (b + 1)) << (b + 1)   # bits <= b cleared
+        if block == 1:
+            idx = jnp.minimum(base, mmax)
+            w = jnp.where(jnp.take(y_pad, idx) > thresholds,
+                          jnp.take(v_pad, idx), 0.0)
+        else:
+            pos = _count_le_in_block(levels[b], base, thresholds, block)
+            tot = jnp.take(wsums[b], jnp.minimum(base + block - 1, mmax))
+            lo = jnp.take(wsums[b],
+                          jnp.clip(base + pos - 1, 0, mmax))
+            w = tot - jnp.where(pos > 0, lo, 0.0)
+        total = total + jnp.where(bit == 1, w, 0.0)
+    return total
+
+
+def _prefix_weighted_greater(y_seq: jnp.ndarray, v_seq: jnp.ndarray,
+                             prefix_len: jnp.ndarray,
+                             thresholds: jnp.ndarray) -> jnp.ndarray:
+    """For each query i: sum of v_seq[k] over
+    {k < prefix_len[i] : y_seq[k] > thresholds[i]} — the weighted analogue
+    of `_prefix_count_greater` (used by the position-weighted ranking
+    metric, core.rank_loss.position_weighted_error)."""
+    m = y_seq.shape[0]
+    if m == 0:
+        return jnp.zeros((0,), jnp.float32)
+    mpad = _next_pow2(m)
+    y_pad = jnp.pad(y_seq, (0, mpad - m), constant_values=jnp.inf)
+    v_pad = jnp.pad(v_seq.astype(jnp.float32), (0, mpad - m))
+    levels, wsums = _tree_levels_weighted(y_pad, v_pad)
+    return _prefix_weighted_gt(levels, wsums, y_pad, v_pad, prefix_len,
+                               thresholds)
+
+
 def _prefix_query(levels: dict, y_pad: jnp.ndarray, prefix_len: jnp.ndarray,
                   thresholds: jnp.ndarray, mode: str,
                   constrain=None) -> jnp.ndarray:
@@ -219,6 +291,87 @@ def counts_grouped_fused(p: jnp.ndarray, y: jnp.ndarray, g: jnp.ndarray):
     return counts_fused(pg, yg)
 
 
+@jax.jit
+def counts_weighted_fused(p: jnp.ndarray, y: jnp.ndarray, v: jnp.ndarray):
+    """(c~, d) for the position-weighted hinge: ONE sort, ONE weighted tree.
+
+        c~_i = sum of v_j over {j : y_j > y_i  and  p_j < p_i + 1}  (float32)
+        d_i  = |{j : y_j < y_i  and  p_j > p_i - 1}|                (int32)
+
+    A weighted pair (i, j) (y_i < y_j inside the margin) carries the weight
+    v_j of its higher-utility side, so only the c-side query is weighted —
+    the d-side contribution of example j is its OWN weight v_j times the
+    ordinary count d_j, applied by the caller (core.oracle, loss='poshinge').
+    The weighted levels carry the sorted-y blocks of `counts_fused`'s tree,
+    so d reuses the exact complement trick (same tie semantics bit-for-bit);
+    c~ replaces the block counts with block weight sums (`_prefix_weighted_
+    gt`). Work stays O(m log^2 m): one cumsum per level on top of the sorts.
+    """
+    p = p.astype(jnp.float32) if p.dtype == jnp.float64 else p
+    m = p.shape[0]
+    if m == 0:
+        return jnp.zeros((0,), jnp.float32), jnp.zeros((0,), jnp.int32)
+    order = jnp.argsort(p)
+    ps = jnp.take(p, order)
+    ys = jnp.take(y, order)
+    vs = jnp.take(v.astype(jnp.float32), order)
+    mpad = _next_pow2(m)
+    y_pad = jnp.pad(ys, (0, mpad - m), constant_values=jnp.inf)
+    v_pad = jnp.pad(vs, (0, mpad - m))
+    levels, wsums = _tree_levels_weighted(y_pad, v_pad)
+
+    one = jnp.asarray(1.0, ps.dtype)
+    frontier = jnp.searchsorted(ps, ps + one, side='left').astype(jnp.int32)
+    cw_sorted = _prefix_weighted_gt(levels, wsums, y_pad, v_pad, frontier,
+                                    ys)
+    inner = jnp.searchsorted(ps, ps - one, side='right').astype(jnp.int32)
+    lt_inner = _prefix_query(levels, y_pad, inner, ys, 'lt')
+    glt = jnp.searchsorted(jnp.sort(y), ys, side='left').astype(jnp.int32)
+    d_sorted = glt - lt_inner
+
+    zi = jnp.zeros((m,), jnp.int32)
+    return (jnp.zeros((m,), jnp.float32).at[order].set(cw_sorted),
+            zi.at[order].set(d_sorted))
+
+
+@jax.jit
+def counts_weighted_grouped_fused(p: jnp.ndarray, y: jnp.ndarray,
+                                  g: jnp.ndarray, v: jnp.ndarray):
+    """Grouped (c~, d) via the key-offset trick: cross-group elements are
+    pushed outside the margin/preference conditions (`_group_offsets`), so
+    their weights contribute exactly zero to every c~ query; the weights
+    themselves ride along unchanged."""
+    pg, yg = _group_offsets(p, y, g)
+    return counts_weighted_fused(pg, yg, v)
+
+
+@functools.partial(jax.jit, static_argnames=('block',))
+def counts_blocked_weighted(p, y, v, block: int = 2048):
+    """O(m^2) weighted pairwise (c~, d) with O(m*block) memory — the
+    blocked-engine counterpart of `counts_weighted_fused` (differential
+    anchor + large-m fallback, same role `counts_blocked_host` plays for
+    the uniform hinge)."""
+    m = p.shape[0]
+    nblk = -(-m // block)
+    pp = jnp.pad(p, (0, nblk * block - m))
+    yp = jnp.pad(y, (0, nblk * block - m), constant_values=jnp.nan)
+    vp = jnp.pad(v.astype(jnp.float32), (0, nblk * block - m))
+
+    def body(carry, blk):
+        pj, yj, vj = blk  # (block,)
+        cw = jnp.sum(jnp.where((yj[None, :] > y[:, None])
+                               & (pj[None, :] < p[:, None] + 1.0),
+                               vj[None, :], 0.0), axis=1)
+        d = jnp.sum((yj[None, :] < y[:, None])
+                    & (pj[None, :] > p[:, None] - 1.0), axis=1)
+        return carry, (cw, d.astype(jnp.int32))
+
+    _, (cs, ds) = jax.lax.scan(
+        body, None, (pp.reshape(nblk, block), yp.reshape(nblk, block),
+                     vp.reshape(nblk, block)))
+    return jnp.sum(cs, axis=0), jnp.sum(ds, axis=0)
+
+
 ENGINES = ('tree', 'blocked', 'pallas', 'auto')
 
 
@@ -232,7 +385,8 @@ def _validate_engine(engine: str) -> None:
                          f'expected one of {ENGINES}')
 
 
-def counts_dispatch(p, y, g, engine: str = 'tree', block: int = 2048):
+def counts_dispatch(p, y, g, engine: str = 'tree', block: int = 2048,
+                    v=None):
     """Trace-time dispatch over counting engines — THE counting core every
     oracle shares (fused `_FusedOracle` and chunked `StreamingOracle`
     alike; previously forked inside the oracle layer).
@@ -246,6 +400,15 @@ def counts_dispatch(p, y, g, engine: str = 'tree', block: int = 2048):
     Pallas pairwise for small m on TPU, Pallas rank-counts above it,
     tree lowering elsewhere).
 
+    v (optional, per-example float weights) switches to WEIGHTED counting
+    for the position-weighted hinge: returns (c~, d) with c~ the weighted
+    higher-utility-side sums (`counts_weighted_fused`) instead of the
+    integer c. The 'tree' engine runs the weighted tree, 'blocked' the
+    weighted pairwise pass; the Pallas kernels carry no weighted variant,
+    so 'pallas' and 'auto' fall back to the weighted tree (DESIGN.md §12
+    — the honest dispatch: on CPU 'auto' resolves to the tree anyway, and
+    a silent unweighted kernel would compute the wrong objective).
+
     engine and block are validated up front: `engine` against `ENGINES`
     and, for the one engine that consumes it, `block` through the same
     `_validate_block_rows` gate as every other block-sized knob — a
@@ -258,6 +421,15 @@ def counts_dispatch(p, y, g, engine: str = 'tree', block: int = 2048):
         # core counting module stays importable without it
         from ..data.rowblocks import _validate_block_rows
         block = _validate_block_rows(block, 'counts_dispatch block')
+    if v is not None:
+        if engine == 'blocked':
+            if g is not None:
+                p, y = _group_offsets(p, y, g)
+            return counts_blocked_weighted(p, y, v, block=block)
+        # 'tree', and the documented 'pallas'/'auto' weighted fallback
+        if g is None:
+            return counts_weighted_fused(p, y, v)
+        return counts_weighted_grouped_fused(p, y, g, v)
     if engine == 'tree':
         if g is None:
             return counts_fused(p, y)

@@ -55,6 +55,24 @@ from ..data import rowblocks as _rowblocks
 
 f32 = jnp.float32
 
+# The mesh oracle bodies implement only the uniform pairwise hinge: the
+# partitioned counting path has no weighted-prefix or segmented-running-max
+# lowering, and silently computing the wrong objective at pod scale is the
+# worst possible failure mode. `validate_sharded_loss` is the single gate —
+# ShardedOracle and make_oracle both call it BEFORE any densify, padding,
+# or device transfer (DESIGN.md §12).
+SHARDED_LOSSES = ('hinge',)
+
+
+def validate_sharded_loss(loss: str) -> None:
+    """Reject losses the sharded mesh bodies do not implement, up front."""
+    if loss not in SHARDED_LOSSES:
+        raise ValueError(
+            f'the sharded mesh oracle supports only loss in '
+            f'{SHARDED_LOSSES}, got {loss!r}; train this loss with '
+            "method='tree'/'pairs'/'auto'/'stream' instead (the fused and "
+            'streaming oracles implement every loss in oracle.LOSSES)')
+
 
 @dataclasses.dataclass(frozen=True)
 class RankSVMShapeConfig:

@@ -55,7 +55,21 @@ import jax.numpy as jnp
 from ..data.rowblocks import BlockStore
 from .bmrm import (DEFAULT_MAX_PLANES, BundleState, _device_chunk,
                    bundle_state_from_planes, f32)
-from .oracle import _exact_pairs, make_oracle
+from .oracle import (_loss_norm_weights, _validate_loss, make_oracle)
+
+# Losses whose planes ARE per-block decomposable (the ledger contract):
+# the component tangent must lower-bound the component's UNNORMALIZED
+# merged-risk contribution. True for 'hinge' (a block's pairs are a
+# subset of the merged pairs, pair losses nonnegative) and for 'toppush'
+# (merging only grows each anchored example's strictly-lower set, and a
+# running max over a superset is no smaller — block terms only
+# underestimate). FALSE for 'poshinge': its weights v_i = 1/log2(1+rank)
+# depend on the example's utility rank WITHIN THE MERGED GROUP, and a
+# block-local rank is an underestimate, so block-local weights
+# overestimate the merged ones — block planes would over-bound the
+# merged risk. `RankSVM(loss='poshinge')` therefore keeps no ledger and
+# refits w-only (DESIGN.md §12).
+LEDGER_LOSSES = ('hinge', 'toppush')
 
 
 class BaseRetireError(ValueError):
@@ -80,30 +94,44 @@ class LedgerBlock:
 
 
 def block_partials(X, y, groups, S, *, engine=None,
-                   pair_block: int = 2048) -> LedgerBlock:
+                   pair_block: int = 2048,
+                   loss: str = 'hinge') -> LedgerBlock:
     """Evaluate one block's `LedgerBlock` at the P stored iterates.
 
     This is the O(planes·Δ) revalidation kernel: P oracle evaluations
     over ONLY this block's rows. A pairless block (constant y within
-    every group) contributes zeros without building an oracle.
+    every group) contributes zeros without building an oracle. The
+    partials scale by the block's LOSS NORMALIZER (N for the hinge, the
+    anchored count N+ for 'toppush' — `oracle._loss_norm_weights`), the
+    quantity the ledger's invariant sums over components; 'poshinge' has
+    no per-block decomposition (`LEDGER_LOSSES`) and is rejected here.
     """
+    _validate_loss(loss)
+    if loss not in LEDGER_LOSSES:
+        raise ValueError(
+            f'loss {loss!r} has no per-block plane decomposition '
+            f'(LEDGER_LOSSES = {LEDGER_LOSSES}): its position weights '
+            'depend on merged within-group utility ranks, so block-local '
+            "partials would over-bound the merged risk; refit with "
+            "mode='w-only'")
     y = np.asarray(y)
     S = np.asarray(S, np.float64)
     P, n = S.shape
-    n_pairs = _exact_pairs(y, groups)
-    if n_pairs == 0 or P == 0:
-        return LedgerBlock(np.zeros(P), np.zeros((P, n)), int(n_pairs))
+    norm, _ = _loss_norm_weights(y, groups, loss)
+    norm = int(norm)
+    if norm == 0 or P == 0:
+        return LedgerBlock(np.zeros(P), np.zeros((P, n)), norm)
     # method='auto' keeps in-RAM blocks on the fused oracle and streams
     # RowBlockSource members (memmap blocks never materialize).
-    oracle = make_oracle(X, y, groups, method='auto',
+    oracle = make_oracle(X, y, groups, method='auto', loss=loss,
                          engine=engine, pair_block=pair_block)
     ell = np.zeros(P)
     g = np.zeros((P, n))
     for i in range(P):
-        loss, a = oracle.loss_and_subgrad(S[i])
-        ell[i] = n_pairs * float(loss)
-        g[i] = n_pairs * np.asarray(a, np.float64)
-    return LedgerBlock(ell, g, int(n_pairs))
+        loss_i, a = oracle.loss_and_subgrad(S[i])
+        ell[i] = norm * float(loss_i)
+        g[i] = norm * np.asarray(a, np.float64)
+    return LedgerBlock(ell, g, norm)
 
 
 class PlaneLedger:

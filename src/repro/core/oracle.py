@@ -54,6 +54,85 @@ from ..kernels.platform import device_platform as _device_platform
 f32 = jnp.float32
 
 
+# ------------------------------------------------------------------ losses
+
+
+LOSSES = ('hinge', 'toppush', 'poshinge')
+
+
+def _validate_loss(loss: str) -> None:
+    """Reject typo'd loss names at the dispatch boundary (same contract as
+    `counts._validate_engine`): an unknown loss must fail before any oracle
+    construction, densify, or device transfer happens."""
+    if loss not in LOSSES:
+        raise ValueError(f'unknown loss {loss!r}; '
+                         f'expected one of {LOSSES}')
+
+
+def _toppush_norm(y: np.ndarray, groups) -> int:
+    """Exact host count of ANCHORED examples — those with at least one
+    strictly-lower-utility example in their group — the TopPush loss
+    normalizer (each anchored example contributes one hinge term)."""
+    y = np.asarray(y)
+    if y.size == 0:
+        return 0
+    if groups is None:
+        return int(np.sum(y > y.min()))
+    groups = np.asarray(groups)
+    return int(sum(np.sum(y[groups == u] > y[groups == u].min())
+                   for u in np.unique(groups)))
+
+
+def _poshinge_weights_norm(y: np.ndarray, groups):
+    """(v, W) for the position-weighted hinge, exact on host.
+
+    v_i = 1 / log2(1 + rank_i) with rank_i = |{k in group : y_k > y_i}| + 1
+    — the DCG-style decay of example i's UTILITY rank (a static function
+    of y, which is what keeps the loss convex in w; a score-rank weight
+    would not be). W = sum over preference pairs (i, j), y_i < y_j, of the
+    higher-utility side's weight v_j — the normalizer that replaces N.
+    O(m log m): one sort + two searchsorteds per group.
+    """
+    y = np.asarray(y, np.float64)
+    m = y.shape[0]
+    v = np.zeros(m)
+    W = 0.0
+    gs = (np.zeros(m, np.int64) if groups is None
+          else np.asarray(groups, np.int64))
+    for u in np.unique(gs):
+        mask = gs == u
+        yy = y[mask]
+        ys = np.sort(yy)
+        rank = (yy.shape[0]
+                - np.searchsorted(ys, yy, side='right')) + 1
+        vv = 1.0 / np.log2(1.0 + rank)
+        v[mask] = vv
+        lower = np.searchsorted(ys, yy, side='left')   # strictly-lower count
+        W += float(np.sum(vv * lower))
+    return v, W
+
+
+def _loss_norm_weights(y, groups, loss: str):
+    """(norm, v): the loss normalizer (exact, host) and the per-example
+    weight vector (None except for 'poshinge').
+
+      loss        norm                              weights
+      'hinge'     N  = exact preference-pair count  —
+      'toppush'   N+ = anchored-example count       —
+      'poshinge'  W  = sum of pair weights v_j      v (float64)
+
+    For any fixed (y, groups) the three norms are zero simultaneously
+    (each needs at least one within-group strict-utility pair), so the
+    oracles' no-pairs gate applies to every loss unchanged.
+    """
+    if loss == 'toppush':
+        return _toppush_norm(y, groups), None
+    if loss == 'poshinge':
+        v, W = _poshinge_weights_norm(y, groups)
+        return W, v
+    return _exact_pairs(y, groups), None
+
+
 # --------------------------------------------------------------- interface
 
 
@@ -64,6 +143,11 @@ class RankOracle:
       m: number of training examples (rows of X).
       n: feature dimension (= dim of w and of the subgradient).
       n_pairs: exact number of preference pairs N (host int).
+      norm: the LOSS normalizer (host scalar): N for the uniform hinge,
+        the anchored-example count N+ for 'toppush', the pair-weight sum
+        W for 'poshinge' (`_loss_norm_weights`). Equals n_pairs for the
+        hinge; the plane ledger scales by THIS, not n_pairs
+        (core.incremental).
       device_resident: True when the subgradient comes out of a fused jitted
         step — bmrm then keeps its cutting-plane bookkeeping on device.
       supports_device_solver: True when `step_fn` yields a traced step that
@@ -88,9 +172,11 @@ class RankOracle:
     supports_device_solver = False
     prefer_device_solver = False
     supports_path_vmap = False
+    loss = 'hinge'
     m: int
     n: int
     n_pairs: int
+    norm: float
 
     def loss_and_subgrad(self, w):
         """R_emp(w) and a subgradient of R_emp at w (Lemmas 1-2)."""
@@ -265,33 +351,127 @@ def _features(X, csr_rmatvec: str = 'auto'):
 # dispatch — so fused and streaming oracles share ONE counting core.
 
 
-def _loss_and_coeffs(p, y, g, inv_n, *, engine: str = 'tree',
-                     block: int = 0):
-    """The shared counting core: scores -> (R_emp, pair-count coefficients).
+def _toppush_loss_coeffs(p, y, g, inv_n):
+    """TopPush-style top-rank loss + subgradient coefficients, one sorted
+    pass — NO frequency vectors (DESIGN.md §12).
+
+    Each ANCHORED example i (one with a strictly-lower-utility example in
+    its group) is penalized by its margin against the maximum score of
+    that strictly-lower set:
+
+        R(w) = (1/N+) sum_i hinge(1 + M_i - p_i),
+        M_i  = max{p_k : g_k = g_i, y_k < y_i}
+
+    — for binary y this is exactly TopPush (each positive vs the top
+    negative, arxiv 1410.1462), generalized to arbitrary real utilities.
+    One stable sort by (g, y) makes every strictly-lower set a prefix of
+    its group segment; M comes from a segmented running max
+    (`associative_scan`), and the frontier/segment starts from running
+    maxima over change-point indices. O(m log m), trivially vmappable.
+
+    The subgradient puts -1 on each active example and +1 on the LEFTMOST
+    attaining argmax of its lower set (first new-max event of the
+    segmented scan) — a deterministic tie-break reproducible in numpy
+    (stable lexsort + first-occurrence argmax), which is what the
+    differential tests pin. Returns (loss, coeffs) with
+    subgrad = X^T (coeffs * inv_n), the same contract as the counting
+    losses.
+    """
+    m = p.shape[0]
+    pf = p.astype(f32)
+    yf = y.astype(f32)
+    gi = jnp.zeros((m,), jnp.int32) if g is None else g.astype(jnp.int32)
+    order = jnp.lexsort((yf, gi))          # stable: ties in original order
+    gs = jnp.take(gi, order)
+    ys = jnp.take(yf, order)
+    ps = jnp.take(pf, order)
+    idx = jnp.arange(m, dtype=jnp.int32)
+    g_change = jnp.concatenate(
+        [jnp.ones((1,), bool), gs[1:] != gs[:-1]]) if m else jnp.zeros(
+            (0,), bool)
+    key_change = g_change | jnp.concatenate(
+        [jnp.ones((1,), bool),
+         ys[1:] != ys[:-1]]) if m else g_change
+    seg_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(g_change, idx, -1))
+    run_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(key_change, idx, -1))
+
+    def seg_max(a, b):
+        sa, va = a
+        sb, vb = b
+        return sb, jnp.where(sa == sb, jnp.maximum(va, vb), vb)
+
+    _, running = jax.lax.associative_scan(seg_max, (gs, ps))
+    # first index attaining the CURRENT segment max: the last new-max
+    # event at or before t (running is nondecreasing within a segment,
+    # so ties keep the earliest attaining index)
+    prev_run = jnp.concatenate([ps[:1], running[:-1]]) if m else running
+    new_max = g_change | (ps > prev_run)
+    attain = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(new_max, idx, -1))
+
+    fr = run_start                 # strictly-lower prefix is [seg_start, fr)
+    anchored = fr > seg_start
+    safe = jnp.maximum(fr - 1, 0)
+    M = jnp.take(running, safe)
+    margin = 1.0 + M - ps
+    active = anchored & (margin > 0)
+    loss = jnp.sum(jnp.where(active, margin, 0.0)) * inv_n
+    amax = jnp.take(attain, safe)
+    act = active.astype(f32)
+    coeffs = (-act).at[jnp.where(active, amax, 0)].add(act)
+    return loss, jnp.zeros((m,), f32).at[order].set(coeffs)
+
+
+def _loss_and_coeffs(p, y, g, inv_n, v=None, *, engine: str = 'tree',
+                     block: int = 0, loss: str = 'hinge'):
+    """The shared counting core: scores -> (R_emp, subgradient coefficients).
 
     Every oracle — fused (`_fused_step_impl`) and streaming
     (`StreamingOracle`, which arrives here with a chunk-accumulated score
-    vector) — reduces to this O(m)-resident computation: one counting pass
-    (engine-dispatched; grouped via the key-offset trick) followed by the
-    Lemma 1/2 loss formula. Returns (loss, c - d as f32); the subgradient
-    is X^T ((c - d) / N), finished by whichever matvec the caller owns.
+    vector) — reduces to this O(m)-resident computation, per loss:
+
+      'hinge'     one counting pass (engine-dispatched; grouped via the
+                  key-offset trick) + the Lemma 1/2 formula; coeffs c - d.
+      'poshinge'  the weighted counting pass (`counts_dispatch(v=)`):
+                  R*W = sum_i ((c~_i - v_i d_i) p_i + c~_i), coeffs
+                  c~ - v*d — the Lemma 1/2 identity with the c-side query
+                  weighted by the higher-utility side's position decay and
+                  the d-side scaled by the example's OWN weight.
+      'toppush'   no frequency vectors at all: the one-sorted-pass
+                  running-max step (`_toppush_loss_coeffs`); `engine` is
+                  inert for it.
+
+    Returns (loss, coeffs as f32); the subgradient is
+    X^T (coeffs * inv_n), finished by whichever matvec the caller owns.
+    `inv_n` is 1/norm for the oracle's loss (`_loss_norm_weights`); `v`
+    is the per-example weight vector (poshinge only, else None).
     """
+    if loss == 'toppush':
+        return _toppush_loss_coeffs(p, y, g, inv_n)
+    if loss == 'poshinge':
+        cw, d = _counts.counts_dispatch(p, y, g, engine=engine,
+                                        block=block, v=v)
+        cd = cw - v.astype(f32) * d.astype(f32)
+        return jnp.sum(cd * p + cw) * inv_n, cd
     c, d = _counts.counts_dispatch(p, y, g, engine=engine, block=block)
     cd = (c - d).astype(f32)
-    loss = jnp.sum(cd * p + c.astype(f32)) * inv_n
-    return loss, cd
+    return jnp.sum(cd * p + c.astype(f32)) * inv_n, cd
 
 
-def _fused_step_impl(w, arrays, y, g, inv_n, *, engine: str, block: int,
-                     kind: str, uniform: bool, n: int, device_rmatvec: bool):
+def _fused_step_impl(w, arrays, y, g, inv_n, pw=None, *, engine: str,
+                     block: int, kind: str, uniform: bool, n: int,
+                     device_rmatvec: bool, loss: str = 'hinge'):
     """The fused device step: matvec -> counts -> loss -> subgradient.
 
     Unjitted body so it composes INSIDE a larger traced program — bmrm's
     device driver inlines it into its jitted bundle_step via
     `_FusedOracle.step_fn`. `_fused_step` below is the jitted entry point
     for standalone per-call use (`loss_and_subgrad`). When device_rmatvec
-    is False the step returns (loss, c - d) and the caller finishes the
-    transpose-matvec on host (see _CSRFeatures).
+    is False the step returns (loss, coeffs) and the caller finishes the
+    transpose-matvec on host (see _CSRFeatures). `pw` is the poshinge
+    per-example weight vector (None for the other losses).
     """
     m = y.shape[0]
     if kind == 'dense':
@@ -302,23 +482,24 @@ def _fused_step_impl(w, arrays, y, g, inv_n, *, engine: str, block: int,
         p = jax.ops.segment_sum(arrays['data'] * w[arrays['idx']],
                                 arrays['rows'], num_segments=m,
                                 indices_are_sorted=True)
-    loss, cd = _loss_and_coeffs(p, y, g, inv_n, engine=engine, block=block)
+    loss_val, cd = _loss_and_coeffs(p, y, g, inv_n, pw, engine=engine,
+                                    block=block, loss=loss)
     if not device_rmatvec:
-        return loss, cd                      # host finishes the rmatvec
+        return loss_val, cd                  # host finishes the rmatvec
     v = cd * inv_n
     if kind == 'dense':
-        return loss, arrays['X'].T @ v
+        return loss_val, arrays['X'].T @ v
     if uniform:
-        return loss, jax.ops.segment_sum(
+        return loss_val, jax.ops.segment_sum(
             (arrays['data2'] * v[:, None]).reshape(-1),
             arrays['idx2'].reshape(-1), num_segments=n)
-    return loss, jax.ops.segment_sum(arrays['data'] * v[arrays['rows']],
-                                     arrays['idx'], num_segments=n)
+    return loss_val, jax.ops.segment_sum(arrays['data'] * v[arrays['rows']],
+                                         arrays['idx'], num_segments=n)
 
 
 _fused_step = functools.partial(jax.jit, static_argnames=(
     'engine', 'block', 'kind', 'uniform', 'n',
-    'device_rmatvec'))(_fused_step_impl)
+    'device_rmatvec', 'loss'))(_fused_step_impl)
 
 
 class _FusedOracle(RankOracle):
@@ -337,11 +518,16 @@ class _FusedOracle(RankOracle):
     _block = 0          # only meaningful for the blocked engine
 
     def __init__(self, X, y, groups=None, csr_rmatvec: str = 'auto',
-                 engine: str | None = None, engine_block: int = 2048):
+                 engine: str | None = None, engine_block: int = 2048,
+                 loss: str = 'hinge'):
+        _validate_loss(loss)
+        self.loss = loss
         if engine is not None:
             _counts._validate_engine(engine)
             self._engine = engine
             self.name = f'{self.name}[{engine}]'
+        if loss != 'hinge':
+            self.name = f'{self.name}/{loss}'
         y = np.asarray(y, np.float32)
         self._feats = _features(X, csr_rmatvec=csr_rmatvec)
         self.m, self.n = self._feats.m, self._feats.n
@@ -357,7 +543,15 @@ class _FusedOracle(RankOracle):
             raise ValueError('training data induces no preference pairs')
         self._y = jnp.asarray(y)
         self._g = None if groups is None else jnp.asarray(groups)
-        self._inv_n = 1.0 / float(self.n_pairs)
+        if loss == 'hinge':
+            self.norm, pw = float(self.n_pairs), None
+        else:
+            # N+/W are zero exactly when n_pairs is, so the gate above
+            # already guarantees a positive normalizer here.
+            norm, pw = _loss_norm_weights(y, groups, loss)
+            self.norm = float(norm)
+        self._pw = None if pw is None else jnp.asarray(pw, f32)
+        self._inv_n = 1.0 / self.norm
         self._inv_n_dev = jnp.asarray(self._inv_n, f32)
         if engine is not None:
             # an explicit engine override also owns the block: only the
@@ -374,9 +568,10 @@ class _FusedOracle(RankOracle):
         feats = self._feats
         loss, out = _fused_step(
             jnp.asarray(w, f32), feats.arrays, self._y, self._g,
-            self._inv_n_dev, engine=self._engine, block=self._block,
-            kind=feats.kind, uniform=getattr(feats, '_uniform', False),
-            n=self.n, device_rmatvec=feats.device_rmatvec)
+            self._inv_n_dev, self._pw, engine=self._engine,
+            block=self._block, kind=feats.kind,
+            uniform=getattr(feats, '_uniform', False),
+            n=self.n, device_rmatvec=feats.device_rmatvec, loss=self.loss)
         if feats.device_rmatvec:
             return loss, out
         cd = np.asarray(out, np.float64)
@@ -391,14 +586,14 @@ class _FusedOracle(RankOracle):
         to the host driver only.
         """
         feats = self._feats
-        y, g, inv_n = self._y, self._g, self._inv_n_dev
+        y, g, inv_n, pw = self._y, self._g, self._inv_n_dev, self._pw
         cfg = dict(engine=self._engine, block=self._block, kind=feats.kind,
                    uniform=getattr(feats, '_uniform', False), n=self.n,
-                   device_rmatvec=True)
+                   device_rmatvec=True, loss=self.loss)
         arrays = feats.arrays
 
         def fn(w):
-            return _fused_step_impl(w, arrays, y, g, inv_n, **cfg)
+            return _fused_step_impl(w, arrays, y, g, inv_n, pw, **cfg)
 
         return fn
 
@@ -414,13 +609,14 @@ class _FusedOracle(RankOracle):
         feats = self._feats
         cfg = dict(engine=self._engine, block=self._block, kind=feats.kind,
                    uniform=getattr(feats, '_uniform', False), n=self.n,
-                   device_rmatvec=True)
+                   device_rmatvec=True, loss=self.loss)
 
         def fn(w, data):
-            arrays, y, g, inv_n = data
-            return _fused_step_impl(w, arrays, y, g, inv_n, **cfg)
+            arrays, y, g, inv_n, pw = data
+            return _fused_step_impl(w, arrays, y, g, inv_n, pw, **cfg)
 
-        return fn, (feats.arrays, self._y, self._g, self._inv_n_dev)
+        return fn, (feats.arrays, self._y, self._g, self._inv_n_dev,
+                    self._pw)
 
     def step_signature(self):
         """Hashable key under which `step_parts` traces are
@@ -430,7 +626,7 @@ class _FusedOracle(RankOracle):
         feats = self._feats
         return (type(self).__name__, self._engine, self._block,
                 feats.kind, bool(getattr(feats, '_uniform', False)),
-                self.n, self._g is None)
+                self.n, self._g is None, self.loss)
 
 
 class TreeOracle(_FusedOracle):
@@ -440,6 +636,28 @@ class TreeOracle(_FusedOracle):
     _engine = 'tree'
 
 
+class TopPushOracle(_FusedOracle):
+    """The TopPush-style top-rank oracle as a first-class method: each
+    anchored example is penalized by its margin against the MAX-scoring
+    strictly-lower-utility example in its group (`_toppush_loss_coeffs`,
+    DESIGN.md §12 — one sorted pass, no frequency vectors, so the
+    counting `engine=` knob is inert and accepted only for interface
+    parity). Equivalent to `TreeOracle(..., loss='toppush')` /
+    `make_oracle(loss='toppush')`; this class is the explicit spelling."""
+
+    name = 'toppush'
+    _engine = 'tree'
+
+    def __init__(self, X, y, groups=None, csr_rmatvec: str = 'auto',
+                 engine: str | None = None, engine_block: int = 2048):
+        super().__init__(X, y, groups=groups, csr_rmatvec=csr_rmatvec,
+                         engine=engine, engine_block=engine_block,
+                         loss='toppush')
+        # the base __init__ suffixes '/toppush' onto every non-hinge
+        # oracle; this class IS the toppush oracle, so drop the echo
+        self.name = self.name.replace('/toppush', '', 1)
+
+
 class PairwiseOracle(_FusedOracle):
     """O(m^2) counting engines: the VMEM-blocked dense pass (PairRSVM
     baseline) or, with dispatch='auto', `kernels.pairwise_rank.counts_auto`
@@ -447,14 +665,14 @@ class PairwiseOracle(_FusedOracle):
 
     def __init__(self, X, y, groups=None, block: int = 2048,
                  dispatch: str = 'blocked', csr_rmatvec: str = 'auto',
-                 engine: str | None = None):
+                 engine: str | None = None, loss: str = 'hinge'):
         if dispatch not in ('blocked', 'auto'):
             raise ValueError(f'unknown dispatch {dispatch!r}')
         block = _validate_block(block, 'PairwiseOracle block')
         self._engine = 'blocked' if dispatch == 'blocked' else 'auto'
         self.name = 'pairs' if dispatch == 'blocked' else 'auto'
         super().__init__(X, y, groups=groups, csr_rmatvec=csr_rmatvec,
-                         engine=engine, engine_block=block)
+                         engine=engine, engine_block=block, loss=loss)
         if engine is None:
             self._block = min(block, self.m) if dispatch == 'blocked' else 0
 
@@ -467,7 +685,8 @@ class GroupedOracle(_FusedOracle):
     name = 'grouped'
 
     def __init__(self, X, y, groups, inner: str = 'tree', block: int = 2048,
-                 csr_rmatvec: str = 'auto', engine: str | None = None):
+                 csr_rmatvec: str = 'auto', engine: str | None = None,
+                 loss: str = 'hinge'):
         if groups is None:
             raise ValueError('GroupedOracle requires group ids')
         if inner not in ('tree', 'pairs', 'auto'):
@@ -477,7 +696,7 @@ class GroupedOracle(_FusedOracle):
                         'auto': 'auto'}[inner]
         self.name = f'grouped/{inner}'
         super().__init__(X, y, groups=groups, csr_rmatvec=csr_rmatvec,
-                         engine=engine, engine_block=block)
+                         engine=engine, engine_block=block, loss=loss)
         if engine is None:
             self._block = min(block, self.m) if inner == 'pairs' else 0
 
@@ -493,7 +712,7 @@ class GroupedOracle(_FusedOracle):
 # lowering on CPU (bit-identical to the old hardwired 'tree'), Pallas
 # kernels on TPU.
 _stream_counts = functools.partial(
-    jax.jit, static_argnames=('engine', 'block'))(_loss_and_coeffs)
+    jax.jit, static_argnames=('engine', 'block', 'loss'))(_loss_and_coeffs)
 
 DEFAULT_STREAM_BLOCK = 8192
 
@@ -584,7 +803,10 @@ class StreamingOracle(RankOracle):
 
     def __init__(self, X, y, groups=None, block_rows: int | None = None,
                  memory_budget: float | None = None,
-                 engine: str = 'auto', prefetch=None):
+                 engine: str = 'auto', prefetch=None,
+                 loss: str = 'hinge'):
+        _validate_loss(loss)
+        self.loss = loss
         _counts._validate_engine(engine)
         self._engine = engine
         self._cblock = 2048 if engine == 'blocked' else 0
@@ -614,9 +836,17 @@ class StreamingOracle(RankOracle):
         self._nblk = self._src.n_blocks(self._B)
         self._y = jnp.asarray(y)
         self._g = None if groups is None else jnp.asarray(groups)
-        self._inv_n = 1.0 / float(self.n_pairs)
+        if loss == 'hinge':
+            self.norm, pw = float(self.n_pairs), None
+        else:
+            norm, pw = _loss_norm_weights(y, groups, loss)
+            self.norm = float(norm)
+        self._pw = None if pw is None else jnp.asarray(pw, f32)
+        self._inv_n = 1.0 / self.norm
         self._inv_n_dev = jnp.asarray(self._inv_n, f32)
         self.name = f'stream/{self._src.kind}'
+        if loss != 'hinge':
+            self.name = f'{self.name}/{loss}'
         # The traced step densifies one (block, n) slab per fetch; for CSR
         # sources the host-chunk passes instead run layout-native on the
         # sparse row slices (O(nnz_block), no densification), so
@@ -653,8 +883,9 @@ class StreamingOracle(RankOracle):
         for lo, hi, payload in src.iter_payloads(B, prefetch=depth):
             p[lo:hi] = src._payload_matvec(payload, w64)
         loss, cd = _stream_counts(jnp.asarray(p), self._y, self._g,
-                                  self._inv_n_dev, engine=self._engine,
-                                  block=self._cblock)
+                                  self._inv_n_dev, self._pw,
+                                  engine=self._engine, block=self._cblock,
+                                  loss=self.loss)
         v = np.asarray(cd, np.float64) * self._inv_n
         a = np.zeros(self.n, np.float64)
         for lo, hi, payload in src.iter_payloads(B, prefetch=depth):
@@ -668,8 +899,8 @@ class StreamingOracle(RankOracle):
         so the driver's weak-keyed chunk cache can release the oracle
         (same discipline as `_FusedOracle.step_fn`)."""
         B, n, m, nblk = self._B, self.n, self.m, self._nblk
-        y, g, inv_n = self._y, self._g, self._inv_n_dev
-        engine, cblock = self._engine, self._cblock
+        y, g, inv_n, pw = self._y, self._g, self._inv_n_dev, self._pw
+        engine, cblock, loss_name = self._engine, self._cblock, self.loss
         fetch = functools.partial(_fetch_padded, self._src, B, m, n)
         if self._prefetch and nblk > 1:
             # Wraparound read-ahead: while the device multiplies block i,
@@ -691,8 +922,8 @@ class StreamingOracle(RankOracle):
             _, ps = jax.lax.scan(score_blk, jnp.zeros((), f32),
                                  jnp.arange(nblk))
             p = ps.reshape(-1)[:m] if pad else ps.reshape(-1)
-            loss, cd = _loss_and_coeffs(p, y, g, inv_n, engine=engine,
-                                        block=cblock)
+            loss, cd = _loss_and_coeffs(p, y, g, inv_n, pw, engine=engine,
+                                        block=cblock, loss=loss_name)
             v = cd * inv_n
             vb = (jnp.pad(v, (0, pad)) if pad else v).reshape(nblk, B)
 
@@ -762,7 +993,13 @@ class ShardedOracle(RankOracle):
 
     def __init__(self, X, y, groups=None, mesh: Mesh | None = None,
                  variant: str = 'base', engine: str = 'tree',
-                 block_rows: int | None = None, prefetch=None):
+                 block_rows: int | None = None, prefetch=None,
+                 loss: str = 'hinge'):
+        # loss gate FIRST: an unsupported loss must fail before any
+        # densify, padding, or device transfer below touches X.
+        _validate_loss(loss)
+        _dist.validate_sharded_loss(loss)
+        self.loss = loss
         _counts._validate_engine(engine)
         _validate_prefetch(prefetch)
         y = np.asarray(y, np.float32)
@@ -795,6 +1032,7 @@ class ShardedOracle(RankOracle):
         self.n_pairs = _exact_pairs(y, groups)
         if self.n_pairs == 0:
             raise ValueError('training data induces no preference pairs')
+        self.norm = float(self.n_pairs)   # hinge-only (the gate above)
         self._mesh = mesh if mesh is not None else _default_mesh()
         rows = [a for a in ('pod', 'data') if a in self._mesh.axis_names]
         rsize = int(np.prod([self._mesh.shape[a] for a in rows]))
@@ -944,7 +1182,7 @@ METHODS = ('tree', 'pairs', 'auto', 'sharded', 'stream')
 
 
 def make_oracle(X, y, groups=None, method: str = 'tree', *,
-                engine: str | None = None,
+                loss: str = 'hinge', engine: str | None = None,
                 pair_block: int = 2048, mesh: Mesh | None = None,
                 variant: str = 'base', csr_rmatvec: str = 'auto',
                 memory_budget: float | None = None,
@@ -1042,6 +1280,12 @@ def make_oracle(X, y, groups=None, method: str = 'tree', *,
     if method not in METHODS:
         raise ValueError(f'unknown oracle method {method!r}; '
                          f'expected one of {METHODS}')
+    _validate_loss(loss)
+    if method == 'sharded':
+        # reject BEFORE construction: ShardedOracle.__init__ would densify
+        # / pad / device_put X, and an unsupported loss must never get
+        # that far (the acceptance contract of DESIGN.md §12).
+        _dist.validate_sharded_loss(loss)
     if engine is not None:
         _counts._validate_engine(engine)
     _validate_prefetch(prefetch)
@@ -1053,11 +1297,12 @@ def make_oracle(X, y, groups=None, method: str = 'tree', *,
         return StreamingOracle(X, y, groups=groups, block_rows=stream_block,
                                memory_budget=memory_budget,
                                engine=engine if engine is not None
-                               else 'auto', prefetch=prefetch)
+                               else 'auto', prefetch=prefetch, loss=loss)
     if method == 'sharded':
         return ShardedOracle(X, y, groups=groups, mesh=mesh, variant=variant,
                              engine=engine if engine is not None else 'tree',
-                             block_rows=stream_block, prefetch=prefetch)
+                             block_rows=stream_block, prefetch=prefetch,
+                             loss=loss)
     if isinstance(X, _rowblocks.RowBlockSource):
         raise ValueError(
             f"method={method!r} needs materialized features, but X is a "
@@ -1066,11 +1311,39 @@ def make_oracle(X, y, groups=None, method: str = 'tree', *,
             'such sources)')
     if groups is not None:
         return GroupedOracle(X, y, groups, inner=method, block=pair_block,
-                             csr_rmatvec=csr_rmatvec, engine=engine)
+                             csr_rmatvec=csr_rmatvec, engine=engine,
+                             loss=loss)
     if method == 'tree':
         return TreeOracle(X, y, csr_rmatvec=csr_rmatvec, engine=engine,
-                          engine_block=pair_block)
+                          engine_block=pair_block, loss=loss)
     return PairwiseOracle(
         X, y, block=pair_block,
         dispatch='auto' if method == 'auto' else 'blocked',
-        csr_rmatvec=csr_rmatvec, engine=engine)
+        csr_rmatvec=csr_rmatvec, engine=engine, loss=loss)
+
+
+def empirical_risk(scores, utilities, groups=None, loss: str = 'hinge'):
+    """R_emp for precomputed scores — the loss-generic evaluation helper.
+
+    The same normalized risk the training oracles minimize ('hinge' = the
+    mean pairwise hinge over N preference pairs; 'toppush' = the mean
+    anchored top-rank margin over N+; 'poshinge' = the position-weighted
+    pair hinge over weight mass W), evaluated from a score vector instead
+    of (X, w) — what `RankSVM.objective` and the differential tests use.
+    Returns a host float; 0.0 when the data induces no preference pairs
+    (all three normalizers vanish together, see `_loss_norm_weights`).
+    """
+    _validate_loss(loss)
+    y = np.asarray(utilities, np.float32)
+    if groups is not None:
+        groups = _validate_groups(groups, y.shape[0])
+    norm, pw = _loss_norm_weights(y, groups, loss)
+    if norm == 0:
+        return 0.0
+    p = jnp.asarray(np.asarray(scores, np.float32))
+    g = None if groups is None else jnp.asarray(groups)
+    val, _ = _stream_counts(
+        p, jnp.asarray(y), g, jnp.asarray(1.0 / float(norm), f32),
+        None if pw is None else jnp.asarray(pw, f32),
+        engine='tree', block=0, loss=loss)
+    return float(val)

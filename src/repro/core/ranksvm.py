@@ -74,8 +74,9 @@ from ..data.rowblocks import _validate_prefetch
 from .bmrm import (DEFAULT_MAX_PLANES, SOLVERS, _validate_lams,
                    _validate_path_mode, bmrm, bmrm_path)
 from .counts import _validate_engine
-from .incremental import IncrementalFit, RefitReport, block_partials
-from .oracle import METHODS, make_oracle
+from .incremental import (IncrementalFit, LEDGER_LOSSES, RefitReport,
+                          block_partials)
+from .oracle import METHODS, _validate_loss, empirical_risk, make_oracle
 
 REFIT_MODES = ('ledger', 'w-only', 'auto')
 
@@ -122,6 +123,19 @@ class RankSVM:
       method: oracle selector — 'tree' | 'pairs' | 'auto' | 'sharded' |
         'stream' (see module docstring; core.oracle.make_oracle holds the
         full dispatch table).
+      loss: training objective — 'hinge' (default; the paper's uniform
+        pairwise hinge over N preference pairs) | 'toppush' (each
+        anchored example's margin against the MAX-scoring strictly-lower
+        example in its group, normalized by the anchored count N+) |
+        'poshinge' (pairwise hinge where pair (i, j) carries the
+        higher-utility side's position-decay weight 1/log2(1+rank),
+        normalized by the weight mass W) — DESIGN.md §12; validated at
+        construction; every method composes except 'sharded', whose mesh
+        bodies implement only the hinge and reject other losses up front
+        (core.distributed.SHARDED_LOSSES). 'poshinge' additionally keeps
+        no plane ledger (its position weights are not per-block
+        decomposable — core.incremental.LEDGER_LOSSES), so `refit`
+        warm-starts from w alone.
       engine: counting-engine override for the selected oracle
         (None | 'tree' | 'blocked' | 'pallas' | 'auto'), orthogonal to
         `method`'s memory model and validated at construction:
@@ -183,10 +197,13 @@ class RankSVM:
                  sync_every: 'int | str' = 8, qp_iters: int = 128,
                  memory_budget: float | None = None,
                  stream_block: int | None = None,
-                 engine: str | None = None, prefetch=None):
+                 engine: str | None = None, prefetch=None,
+                 loss: str = 'hinge'):
         if method not in METHODS:
             raise ValueError(f'unknown method {method!r}; '
                              f'expected one of {METHODS}')
+        _validate_loss(loss)
+        self.loss = loss
         if engine is not None:
             _validate_engine(engine)
         self.engine = engine
@@ -242,7 +259,8 @@ class RankSVM:
 
         self.w_ = res.w
         self.report_ = self._report(res, dt)
-        self.incremental_ = IncrementalFit(store, res.state, oracle.n_pairs,
+        self.incremental_ = IncrementalFit(store, res.state,
+                                           self._ledger_norm(oracle),
                                            partials_fn=self._partials)
         return self
 
@@ -316,7 +334,7 @@ class RankSVM:
         self.w_, self.report_ = last.w, last.report
         self.lam = last.lam
         self.incremental_ = IncrementalFit(store, results[-1].state,
-                                           oracle.n_pairs,
+                                           self._ledger_norm(oracle),
                                            partials_fn=self._partials)
         return points
 
@@ -354,6 +372,13 @@ class RankSVM:
         if mode not in REFIT_MODES:
             raise ValueError(f'unknown refit mode {mode!r}; expected one '
                              f'of {REFIT_MODES}')
+        if mode == 'ledger' and self.loss not in LEDGER_LOSSES:
+            raise ValueError(
+                f"mode='ledger' is unavailable for loss={self.loss!r}: "
+                'its position weights depend on merged within-group '
+                'utility ranks, so retained planes are not per-block '
+                'revalidatable (core.incremental.LEDGER_LOSSES); refit '
+                "with mode='w-only' (mode='auto' does so automatically)")
         inc = self.incremental_
         retire = ((int(retire),) if isinstance(retire, (int, np.integer))
                   else tuple(int(b) for b in retire))
@@ -424,7 +449,7 @@ class RankSVM:
             res = self._solve(oracle, self.lam, w0=self.w_)
         dt = time.perf_counter() - t0
 
-        inc.commit(res.state, oracle.n_pairs)
+        inc.commit(res.state, self._ledger_norm(oracle))
         self.w_ = res.w
         self.report_ = self._report(res, dt)
         self.refit_report_ = RefitReport(
@@ -491,12 +516,12 @@ class RankSVM:
                                               g))
 
     def objective(self, X, y, groups=None) -> float:
-        p = jnp.asarray(self.decision_function(X), jnp.float32)
-        g = None if groups is None else jnp.asarray(
-            np.asarray(groups, np.int32))
-        loss, _ = _rank_loss.loss_and_subgradient(
-            p, jnp.asarray(y, jnp.float32), g)
-        return float(loss) + self.lam * float(self.w_ @ self.w_)
+        """J(w) = R_emp(w) + lam ||w||^2 under THIS estimator's loss
+        (`core.oracle.empirical_risk`)."""
+        p = self.decision_function(X)
+        g = None if groups is None else np.asarray(groups, np.int32)
+        return (empirical_risk(p, y, g, loss=self.loss)
+                + self.lam * float(self.w_ @ self.w_))
 
     # -- internals ---------------------------------------------------------
 
@@ -519,10 +544,19 @@ class RankSVM:
         return store, y, groups
 
     def _partials(self, Xb, yb, gb, S):
-        """Per-block plane partials with this estimator's engine knobs
-        (the `IncrementalFit` revalidation hook)."""
+        """Per-block plane partials with this estimator's engine/loss
+        knobs (the `IncrementalFit` revalidation hook)."""
         return block_partials(Xb, yb, gb, S, engine=self.engine,
-                              pair_block=self.pair_block)
+                              pair_block=self.pair_block, loss=self.loss)
+
+    def _ledger_norm(self, oracle) -> int:
+        """The normalizer `IncrementalFit` keys its plane ledger on: the
+        oracle's loss norm (N / N+), or 0 for losses with no per-block
+        plane decomposition — which disables the ledger entirely, so
+        refits warm-start from w alone (LEDGER_LOSSES)."""
+        if self.loss not in LEDGER_LOSSES:
+            return 0
+        return int(oracle.norm)
 
     def _device_solvable(self, oracle) -> bool:
         """Would `_solve` run this oracle on the device driver? Mirrors
@@ -549,7 +583,7 @@ class RankSVM:
                         <= self.memory_budget)):
                 X = X.materialize()
         return make_oracle(X, y, groups=groups, method=self.method,
-                           engine=self.engine,
+                           loss=self.loss, engine=self.engine,
                            pair_block=self.pair_block, mesh=self.mesh,
                            memory_budget=self.memory_budget,
                            stream_block=self.stream_block,

@@ -1,0 +1,206 @@
+"""Brute-force loss references for the differential test layer.
+
+Plain O(m^2) / O(m * #lower) numpy enumerations of every training
+objective the oracle layer implements, with explicit subgradients —
+deliberately framework-independent: this module must NEVER import jax
+(pinned by a guard test in test_loss_dispatch.py), so the references
+stay meaningful even if the device stack is miscompiled or absent.
+
+Conventions shared by all three refs (mirroring `core.oracle`):
+
+  * inputs: scores p (m,), utilities y (m,), optional int group ids
+    g (m,) — pairs/anchors never cross groups; everything is upcast to
+    float64.
+  * returns (loss, sub): the NORMALIZED empirical risk (divided by the
+    loss's own normalizer — pair count N, anchored count N+, or weight
+    mass W) and its subgradient WITH RESPECT TO THE SCORES, also
+    normalized. The subgradient w.r.t. the weights of a linear model is
+    then X.T @ sub (what `differential` test assertions compute).
+  * no preference pairs => (0.0, zeros) — the refs mirror the norms
+    vanishing together rather than raising, so generators can emit
+    degenerate cases.
+
+Tie-break contract (the one deliberate point of coordination with the
+device implementation): where the subgradient is set-valued, the refs
+pick the SAME element the traced oracles pick, so differential tests can
+assert exact equality instead of set membership. Concretely, toppush's
+argmax over the strictly-lower set resolves score ties to the candidate
+with the smallest (utility, original index) — the first attainer in the
+stable (group, utility) sort order the oracle's segmented scan walks.
+
+`differential_fit_cases()` yields datasets QUANTIZED so that f32 and
+f64 arithmetic agree bit-for-bit on every score (features and weights
+are small multiples of 0.5/0.25, utilities small ints): cross-framework
+score comparisons are then exact, which makes the tie-break parity
+above deterministic instead of luck.
+"""
+
+import numpy as np
+
+LOSSES_REF = ('hinge', 'toppush', 'poshinge')
+
+
+def _groups_of(m, g):
+    return np.zeros(m, np.int64) if g is None else np.asarray(g, np.int64)
+
+
+def pairwise_loss_ref(p, y, g=None):
+    """O(m^2) uniform pairwise hinge: eq. (4) of the paper, and Lemma 2's
+    subgradient, by explicit pair enumeration."""
+    p = np.asarray(p, np.float64)
+    y = np.asarray(y, np.float64)
+    m = p.shape[0]
+    g = _groups_of(m, g)
+    loss, sub, n = 0.0, np.zeros(m), 0
+    for i in range(m):
+        for j in range(m):
+            if g[i] == g[j] and y[i] < y[j]:
+                n += 1
+                if p[j] < p[i] + 1.0:
+                    loss += 1.0 + p[i] - p[j]
+                    sub[i] += 1.0
+                    sub[j] -= 1.0
+    if n == 0:
+        return 0.0, sub
+    return loss / n, sub / n
+
+
+def toppush_ref(p, y, g=None):
+    """O(m * #lower) top-rank (TopPush-style) loss: each ANCHORED example
+    (one with a strictly-lower-utility example in its group) pays
+    hinge(1 + max_lower_score - own_score), normalized by the anchored
+    count N+. Subgradient: -1/N+ on each active example, +1/N+ on the
+    attaining argmax of its lower set — ties resolved to the smallest
+    (utility, index) candidate (see module docstring)."""
+    p = np.asarray(p, np.float64)
+    y = np.asarray(y, np.float64)
+    m = p.shape[0]
+    g = _groups_of(m, g)
+    loss, sub, n_anch = 0.0, np.zeros(m), 0
+    for i in range(m):
+        lower = np.where((g == g[i]) & (y < y[i]))[0]
+        if lower.size == 0:
+            continue
+        n_anch += 1
+        best = p[lower].max()
+        margin = 1.0 + best - p[i]
+        if margin > 0:
+            cand = lower[p[lower] == best]
+            j = cand[np.lexsort((cand, y[cand]))[0]]
+            loss += margin
+            sub[i] -= 1.0
+            sub[j] += 1.0
+    if n_anch == 0:
+        return 0.0, sub
+    return loss / n_anch, sub / n_anch
+
+
+def poshinge_weights_ref(y, g=None):
+    """(v, W): position-decay weights v_i = 1/log2(1 + utility rank of i
+    within its group) and the pair-weight mass W = sum over preference
+    pairs of the higher-utility side's weight."""
+    y = np.asarray(y, np.float64)
+    m = y.shape[0]
+    g = _groups_of(m, g)
+    v = np.array([1.0 / np.log2(2.0 + np.sum((g == g[j]) & (y > y[j])))
+                  for j in range(m)])
+    W = sum(v[j] for i in range(m) for j in range(m)
+            if g[i] == g[j] and y[i] < y[j])
+    return v, float(W)
+
+
+def poshinge_ref(p, y, g=None):
+    """O(m^2) position-weighted pairwise hinge: pair (i, j) with
+    y_i < y_j carries weight v_j = 1/log2(1 + utility rank of j),
+    normalized by the total pair-weight mass W."""
+    p = np.asarray(p, np.float64)
+    y = np.asarray(y, np.float64)
+    m = p.shape[0]
+    g = _groups_of(m, g)
+    v, W = poshinge_weights_ref(y, g)
+    loss, sub = 0.0, np.zeros(m)
+    for i in range(m):
+        for j in range(m):
+            if g[i] == g[j] and y[i] < y[j] and p[j] < p[i] + 1.0:
+                loss += v[j] * (1.0 + p[i] - p[j])
+                sub[i] += v[j]
+                sub[j] -= v[j]
+    if W == 0.0:
+        return 0.0, sub
+    return loss / W, sub / W
+
+
+LOSS_REFS = {'hinge': pairwise_loss_ref, 'toppush': toppush_ref,
+             'poshinge': poshinge_ref}
+
+
+def ref_fit_objective(X, y, g, loss, lam, w):
+    """J(w) = R_emp(w) + lam ||w||^2 evaluated entirely by the reference
+    path (float64 numpy end to end)."""
+    X = np.asarray(X, np.float64)
+    w = np.asarray(w, np.float64)
+    val, _ = LOSS_REFS[loss](X @ w, y, g)
+    return val + float(lam) * float(w @ w)
+
+
+def quantized_weights(rng, n, k=1):
+    """Random weight vectors on the 0.25 grid — exact in f32, so scores
+    from f32 and f64 matvecs agree bit-for-bit on quantized features."""
+    w = rng.integers(-8, 9, size=(k, n)).astype(np.float64) * 0.25
+    return w[0] if k == 1 else w
+
+
+def differential_fit_cases(seed=0):
+    """Yield (name, X, y, groups) datasets for the differential suite.
+
+    All features are multiples of 0.5 and utilities small ints (see
+    module docstring: exact f32/f64 score agreement => deterministic
+    tie-breaks), with adversarial amounts of tying in both y and the
+    induced scores. Every case induces at least one preference pair.
+    """
+    rng = np.random.default_rng(seed)
+
+    def grid(m, n, lo=-4, hi=5):
+        return rng.integers(lo, hi, size=(m, n)).astype(np.float64) * 0.5
+
+    # dense utilities, no groups
+    X = grid(40, 5)
+    y = rng.integers(0, 5, 40).astype(np.float64)
+    yield 'ungrouped-mixed', X, y, None
+
+    # binary utilities — the classic TopPush setting (positives vs top
+    # negative), still no groups
+    X = grid(48, 4)
+    y = (rng.random(48) < 0.3).astype(np.float64)
+    if y.sum() == 0:
+        y[0] = 1.0
+    yield 'ungrouped-binary', X, y, None
+
+    # tie-heavy: three utility levels, features from a tiny grid so many
+    # examples share exact scores at quantized w's
+    X = grid(36, 3, lo=-1, hi=2)
+    y = rng.integers(0, 3, 36).astype(np.float64)
+    yield 'ungrouped-tieheavy', X, y, None
+
+    # grouped: several queries, one of them pairless (constant y)
+    m = 45
+    X = grid(m, 5)
+    g = np.sort(rng.integers(0, 5, m)).astype(np.int64)
+    y = rng.integers(0, 4, m).astype(np.float64)
+    y[g == g.max()] = 2.0          # a pairless group must contribute zero
+    yield 'grouped-with-pairless', X, y, g
+
+    # grouped, singleton groups mixed in (never anchored, never paired)
+    m = 30
+    X = grid(m, 4)
+    g = np.arange(m) // 3
+    g[-4:] = np.arange(4) + 100    # four singletons
+    y = rng.integers(0, 3, m).astype(np.float64)
+    y[0], y[1] = 0.0, 1.0          # guarantee one pair in group 0
+    yield 'grouped-singletons', X, y, g.astype(np.int64)
+
+    # minimal sizes: the smallest data with any pairs at all
+    yield 'two-rows', grid(2, 2), np.array([0.0, 1.0]), None
+    yield ('two-groups-of-two', grid(4, 2),
+           np.array([0.0, 1.0, 1.0, 0.0]),
+           np.array([0, 0, 1, 1], np.int64))

@@ -1,0 +1,134 @@
+"""Loss-axis dispatch validation: rejection paths, up-front sharded
+guards, checkpoint round-trips, and the framework-independence of the
+brute-force reference module.
+
+The contract under test (core.oracle._validate_loss and friends): an
+unknown or unsupported `loss=` must fail at the DISPATCH BOUNDARY — a
+clear ValueError naming the admissible values, raised before any oracle
+construction, densify, or device transfer happens — through every entry
+point that accepts the knob.
+"""
+
+import subprocess
+import sys
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import store as ckpt
+from repro.core import (LEDGER_LOSSES, LOSSES, RankSVM, block_partials,
+                        make_oracle)
+from repro.core.distributed import SHARDED_LOSSES, validate_sharded_loss
+from repro.core.oracle import ShardedOracle, empirical_risk
+
+_X = np.array([[1.0, 0.0], [0.0, 1.0], [1.0, 1.0], [0.5, 0.0]])
+_Y = np.array([0.0, 1.0, 2.0, 1.0])
+
+
+# ----------------------------------------------------- typo'd loss names
+
+@pytest.mark.parametrize('entry', ('make_oracle', 'ranksvm', 'refit-kernel',
+                                   'empirical_risk'))
+def test_unknown_loss_rejected_everywhere(entry):
+    call = {
+        'make_oracle': lambda: make_oracle(_X, _Y, loss='topush'),
+        'ranksvm': lambda: RankSVM(loss='topush'),
+        'refit-kernel': lambda: block_partials(
+            _X, _Y, None, np.zeros((1, 2)), loss='topush'),
+        'empirical_risk': lambda: empirical_risk(
+            _X[:, 0], _Y, loss='topush'),
+    }[entry]
+    with pytest.raises(ValueError, match="unknown loss 'topush'"):
+        call()
+    # and the error names the admissible values so the typo is fixable
+    with pytest.raises(ValueError, match='toppush'):
+        call()
+
+
+def test_unknown_loss_rejected_before_fit_work():
+    """RankSVM(loss=typo) fails at CONSTRUCTION — fit is never reached,
+    so no features are densified or moved."""
+    with pytest.raises(ValueError):
+        RankSVM(loss='hinge2')
+
+
+# ------------------------------------------- sharded mesh oracle guards
+
+@pytest.mark.parametrize('loss', [l for l in LOSSES
+                                  if l not in SHARDED_LOSSES])
+def test_sharded_rejects_unsupported_loss_up_front(loss):
+    """The mesh oracle supports only SHARDED_LOSSES; anything else must
+    be rejected BEFORE the features are touched. X here is a bare
+    object() — any densify/shard/transfer attempt would blow up with a
+    TypeError instead of the contract's ValueError."""
+    untouchable = object()
+    with pytest.raises(ValueError, match='sharded mesh oracle'):
+        make_oracle(untouchable, _Y, method='sharded', loss=loss)
+    with pytest.raises(ValueError, match='sharded mesh oracle'):
+        ShardedOracle(untouchable, _Y, loss=loss)
+    # the error routes the user to the methods that DO support the loss
+    with pytest.raises(ValueError, match="method='tree'"):
+        validate_sharded_loss(loss)
+
+
+def test_sharded_accepts_its_supported_losses():
+    for loss in SHARDED_LOSSES:
+        validate_sharded_loss(loss)   # must not raise
+
+
+# ------------------------------------------------- refit / ledger guards
+
+def test_poshinge_refit_ledger_mode_raises():
+    svm = RankSVM(lam=0.1, eps=1e-3, loss='poshinge')
+    svm.fit(_X, _Y)
+    assert svm.incremental_.ledger is None
+    with pytest.raises(ValueError, match="mode='ledger' is unavailable"):
+        svm.refit(_X, _Y, mode='ledger')
+    # auto resolves to the warm w-only path instead of raising
+    rep = svm.refit(_X, _Y)
+    assert rep.mode == 'w-only'
+
+
+def test_ledger_losses_keep_the_ledger():
+    for loss in LEDGER_LOSSES:
+        svm = RankSVM(lam=0.1, eps=1e-3, loss=loss)
+        svm.fit(_X, _Y)
+        assert svm.incremental_.ledger is not None, loss
+        assert svm.refit(_X, _Y, mode='ledger').mode == 'ledger'
+
+
+# ------------------------------------------- checkpoint loss round-trip
+
+def test_checkpoint_loss_meta_round_trip(tmp_path):
+    root = str(tmp_path / 'ckpt')
+    svm = RankSVM(lam=0.1, eps=1e-3, loss='toppush')
+    svm.fit(_X, _Y)
+    ckpt.save(root, 0, {'w': svm.w_}, meta_extra={'loss': svm.loss,
+                                                  'lam': svm.lam})
+    leaves, meta = ckpt.restore(root)
+    assert meta['loss'] == 'toppush' and meta['lam'] == 0.1
+    np.testing.assert_array_equal(leaves['w'], svm.w_)
+    # the restored loss name is valid dispatch input again
+    resumed = RankSVM(lam=meta['lam'], loss=meta['loss'])
+    assert resumed.loss == 'toppush'
+
+
+def test_checkpoint_meta_extra_reserved_keys_rejected(tmp_path):
+    with pytest.raises(ValueError, match='reserved'):
+        ckpt.save(str(tmp_path / 'c'), 0, {'w': np.zeros(2)},
+                  meta_extra={'loss': 'hinge', 'step': 99})
+
+
+# ------------------------------------- reference-module framework guard
+
+def test_oracle_ref_never_imports_jax():
+    """oracle_ref is the trusted side of the differential tests: it must
+    stay plain numpy so it cannot inherit a bug from the stack under
+    test. Import it in a fresh interpreter and assert jax never loads."""
+    code = ("import sys, oracle_ref; "
+            "assert 'jax' not in sys.modules, 'oracle_ref pulled in jax'; "
+            "assert 'repro' not in sys.modules, "
+            "'oracle_ref pulled in the package under test'")
+    subprocess.run([sys.executable, '-c', code], check=True,
+                   cwd=os.path.dirname(os.path.abspath(__file__)))

@@ -172,6 +172,74 @@ def test_ranking_error_matches_bruteforce(py):
     assert float(err) == pytest.approx(_brute_rank_error(p, y), abs=1e-5)
 
 
+# ---------------------------------------------------------------- loss axis
+
+
+from oracle_ref import LOSS_REFS  # noqa: E402
+from repro.core import oracle as O  # noqa: E402
+
+_LOSSES = tuple(LOSS_REFS)
+
+
+def _fused_at(loss, p, y, g):
+    """(R_emp, normalized subgrad wrt scores) via the fused counting core
+    every oracle reduces to (`oracle._loss_and_coeffs`)."""
+    norm, v = O._loss_norm_weights(y, g, loss)
+    inv_n = np.float32(0.0 if norm == 0 else 1.0 / norm)
+    vv = None if v is None else jnp.asarray(v, jnp.float32)
+    gi = None if g is None else jnp.asarray(g, jnp.int32)
+    val, cd = O._loss_and_coeffs(jnp.asarray(p), jnp.asarray(y), gi,
+                                 inv_n, vv, loss=loss)
+    return float(val), np.asarray(cd, np.float64) * float(inv_n)
+
+
+@st.composite
+def _loss_case(draw):
+    """Tie-heavy quantized (p, q, y, g): scores on the 0.5 grid are exact
+    in f32, so f32-vs-f64 tie-breaks are deterministic (the property the
+    differential suite's fit cases rely on, stressed here with far more
+    adversarial draws). q is a second score vector for tangent checks."""
+    m = draw(st.sampled_from(_SIZES))
+    ints = st.lists(st.integers(-2, 2), min_size=m, max_size=m)
+    p = np.asarray(draw(ints), np.float32) * 0.5
+    q = np.asarray(draw(ints), np.float32) * 0.5
+    y = np.asarray(draw(st.lists(st.integers(0, 2), min_size=m,
+                                 max_size=m)), np.float32)
+    g = np.sort(np.asarray(draw(st.lists(st.integers(0, 2), min_size=m,
+                                         max_size=m)), np.int32))
+    return p, q, y, g
+
+
+@pytest.mark.parametrize('loss', ('toppush', 'poshinge'))
+@hypothesis.given(_loss_case(), st.booleans())
+@hypothesis.settings(max_examples=30, deadline=None)
+def test_new_loss_fused_matches_ref(loss, case, grouped):
+    """Fused core vs the plain-numpy brute force (`oracle_ref`) — loss
+    AND the exact subgradient element, tie-break included."""
+    p, _, y, g = case
+    g = g if grouped else None
+    got_l, got_sub = _fused_at(loss, p, y, g)
+    ref_l, ref_sub = LOSS_REFS[loss](p, y, g)
+    tol = 1e-5 if loss == 'toppush' else 5e-5
+    assert got_l == pytest.approx(ref_l, rel=tol, abs=tol)
+    np.testing.assert_allclose(got_sub, ref_sub, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize('loss', _LOSSES)
+@hypothesis.given(_loss_case())
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_loss_plane_is_lower_tangent(loss, case):
+    """BMRM's correctness hinges on every cutting plane under-estimating
+    the risk: for convex R and subgradient s at p, the tangent
+    R(p) + s·(q - p) must lower-bound R(q) at ANY q."""
+    p, q, y, g = case
+    r_p, sub = _fused_at(loss, p, y, g)
+    r_q, _ = _fused_at(loss, q, y, g)
+    plane = r_p + sub @ (np.asarray(q, np.float64)
+                         - np.asarray(p, np.float64))
+    assert plane <= r_q + 1e-5
+
+
 # ------------------------------------------------------------------ simplex
 
 
